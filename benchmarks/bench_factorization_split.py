@@ -1,0 +1,95 @@
+"""Table 3 — partially-joint vs completely-split factorization of the GRU
+weights (Appendix B.2). Partially joint truncates each concatenated
+(in, 3H) matrix as one SVD; completely split truncates the three gate
+blocks independently. Same variance threshold => joint needs fewer total
+parameters at matched CER."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.speech_runner import (DATA_CFG, LR, MODEL_CFG, PLAN,
+                                      _cached, eval_cer, train_stage1)
+from repro.core.factored import FactoredLinear, count_params, \
+    map_factored_leaves
+from repro.core.svd import TruncationSpec, balanced_split, \
+    explained_variance_rank
+from repro.data.speech import batch_at
+from repro.training import TrainConfig, Trainer
+
+
+def _truncate_split(leaf: FactoredLinear, threshold: float,
+                    round_to: int = 8) -> FactoredLinear:
+  """Completely-split truncation: SVD each of the 3 gate blocks of the
+  concatenated (in, 3H) matrix separately, then re-concatenate as a
+  block-diagonal-rank factorization."""
+  w = np.asarray(leaf.product(), np.float32)
+  m, n3 = w.shape
+  h = n3 // 3
+  us, vs = [], []
+  for g in range(3):
+    blk = w[:, g * h:(g + 1) * h]
+    s = np.linalg.svd(blk, compute_uv=False)
+    r = explained_variance_rank(s, threshold)
+    r = max(round_to, int(np.ceil(r / round_to)) * round_to)
+    u, v = balanced_split(jnp.asarray(blk), min(r, min(blk.shape)))
+    us.append(np.asarray(u))
+    vs.append(np.asarray(v))
+  rtot = sum(u.shape[1] for u in us)
+  u_cat = np.concatenate(us, axis=1)                     # (m, rtot)
+  v_cat = np.zeros((rtot, n3), np.float32)               # block diagonal
+  off = 0
+  for g, v in enumerate(vs):
+    v_cat[off:off + v.shape[0], g * h:(g + 1) * h] = v
+    off += v.shape[0]
+  return FactoredLinear(w=None, u=jnp.asarray(u_cat),
+                        v=jnp.asarray(v_cat), name=leaf.name,
+                        group=leaf.group)
+
+
+def _finetune(params, tag: str, steps: int = 60) -> dict:
+  spec = dict(what="table3", tag=tag, steps=steps, v=3)
+  def run():
+    trainer = Trainer(MODEL_CFG, TrainConfig(lr=LR))
+    trainer.params = params
+    trainer.opt_state = trainer._opt_init(params)
+    for i in range(steps):
+      trainer.train_step(batch_at(DATA_CFG, 300 + i))
+    return {"cer": eval_cer(trainer.params),
+            "n_params": int(count_params(trainer.params))}
+  return _cached(spec, run)
+
+
+def run() -> list[dict]:
+  s1 = train_stage1("trace", 3e-5, 3e-5)
+  rows = []
+  for thr in (0.7, 0.9):
+    # partially joint (the framework default)
+    from repro.core.compress import to_stage2
+    joint = to_stage2(s1["params"], PLAN,
+                      TruncationSpec(variance_threshold=thr, round_to=8))
+    rj = _finetune(joint, f"joint{thr}")
+    # completely split on the GRU weights only
+    def split_leaf(leaf):
+      if "gru" in leaf.name and min(leaf.in_dim, leaf.out_dim) >= 48:
+        return _truncate_split(leaf, thr)
+      if min(leaf.in_dim, leaf.out_dim) >= 48:
+        from repro.core.svd import truncate_leaf
+        return truncate_leaf(leaf, TruncationSpec(variance_threshold=thr,
+                                                  round_to=8))
+      return leaf
+    split = map_factored_leaves(split_leaf, s1["params"])
+    rs = _finetune(split, f"split{thr}")
+    rows.append({"bench": "table3_split", "threshold": thr,
+                 "scheme": "partially_joint", "n_params": rj["n_params"],
+                 "cer": rj["cer"]})
+    rows.append({"bench": "table3_split", "threshold": thr,
+                 "scheme": "completely_split", "n_params": rs["n_params"],
+                 "cer": rs["cer"]})
+  return rows
+
+
+if __name__ == "__main__":
+  for r in run():
+    print(r)

@@ -1,0 +1,63 @@
+"""Appendix B.1 — growing recurrent layer sizes: "the sizes of the
+recurrent layers closer to the input could be shrunk without affecting
+accuracy much". Compares the paper's affine-growing GRU dims against a
+uniform stack and a reversed (shrinking) stack at comparable parameter
+counts on the synthetic speech task."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.speech_runner import DATA_CFG, LR, MODEL_CFG, _cached, \
+    eval_cer
+from repro.core.factored import count_params
+from repro.data.speech import batch_at
+from repro.training import TrainConfig, Trainer
+
+VARIANTS = {
+    "growing (paper B.1)": (64, 80, 96),
+    "uniform": (82, 82, 82),
+    "shrinking": (96, 80, 64),
+}
+STEPS = 160
+
+
+def _run(name: str, dims: tuple) -> dict:
+  spec = dict(what="b1_growing", dims=list(dims), steps=STEPS, v=1)
+  def run():
+    cfg = MODEL_CFG.with_(gru_dims=dims, d_model=dims[-1])
+    trainer = Trainer(cfg, TrainConfig(lr=LR), rng=jax.random.PRNGKey(0))
+    for i in range(STEPS):
+      m = trainer.train_step(batch_at(DATA_CFG, i))
+    # evaluate with the variant's own config
+    from benchmarks import speech_runner
+    import numpy as np
+    import jax.numpy as jnp
+    from repro.data.speech import cer
+    from repro.models import deepspeech
+    from repro.models.ctc import ctc_greedy_decode
+    scores = []
+    for j in range(3):
+      b = batch_at(DATA_CFG, 900 + j)
+      lp = deepspeech.forward(trainer.params, jnp.asarray(b["feats"]), cfg)
+      ol = deepspeech.output_lengths(jnp.asarray(b["feat_lengths"]), cfg)
+      scores.append(cer(np.asarray(ctc_greedy_decode(lp, ol)),
+                        b["labels"], b["label_lengths"]))
+    return {"cer": float(np.mean(scores)),
+            "n_params": int(count_params(trainer.params)),
+            "loss": m["loss"]}
+  return _cached(spec, run)
+
+
+def run() -> list[dict]:
+  rows = []
+  for name, dims in VARIANTS.items():
+    out = _run(name, dims)
+    rows.append({"bench": "appB1_growing_gru", "variant": name,
+                 "gru_dims": list(dims), "n_params": out["n_params"],
+                 "cer": out["cer"]})
+  return rows
+
+
+if __name__ == "__main__":
+  for r in run():
+    print(r)

@@ -1,0 +1,30 @@
+"""Fig. 3 — truncated-SVD rank needed to explain 90% of the variance
+versus CER, by regularization type during stage-1 training."""
+from __future__ import annotations
+
+from benchmarks.speech_runner import gemm_diagnostics, train_stage1
+
+SWEEP = [("trace", 0.0), ("trace", 3e-5), ("trace", 3e-4), ("trace", 1e-3),
+         ("trace", 3e-3), ("trace", 1e-2),
+         ("l2", 0.0), ("l2", 3e-5), ("l2", 3e-4), ("l2", 1e-3),
+         ("l2", 3e-3), ("l2", 1e-2), ("none", 0.0)]
+
+
+def run() -> list[dict]:
+  rows = []
+  for kind, lam in SWEEP:
+    out = train_stage1(kind, lam, lam)
+    diag = gemm_diagnostics(out["params"])
+    for name in ("gru2/nonrec", "gru2/rec"):
+      if name in diag:
+        rows.append({
+            "bench": "fig3_rank90_vs_cer", "kind": kind, "lambda": lam,
+            "gemm": name, "rank90": diag[name]["rank90"],
+            "max_rank": min(diag[name]["shape"]), "cer": out["cer"],
+        })
+  return rows
+
+
+if __name__ == "__main__":
+  for r in run():
+    print(r)

@@ -1,0 +1,37 @@
+"""Roofline table — reads the dry-run artifacts (experiments/dryrun/*.json)
+and emits the three-term roofline per (arch x shape x mesh) with the
+dominant bottleneck and useful-FLOP fraction (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run() -> list[dict]:
+  rows = []
+  for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+    with open(path) as f:
+      d = json.load(f)
+    rows.append({
+        "bench": "roofline", "arch": d["arch"], "shape": d["shape"],
+        "mesh": d["mesh"],
+        "compute_s": round(d["compute_s"], 5),
+        "memory_s": round(d["memory_s"], 5),
+        "collective_s": round(d["collective_s"], 5),
+        "dominant": d["dominant"],
+        "useful_flops": round(d.get("useful_flop_fraction", 0.0), 3),
+        "roofline_fraction": round(d.get("roofline_fraction", 0.0), 4),
+    })
+  if not rows:
+    rows.append({"bench": "roofline",
+                 "note": "run `python -m repro.launch.dryrun --all` first"})
+  return rows
+
+
+if __name__ == "__main__":
+  for r in run():
+    print(r)

@@ -1,0 +1,28 @@
+"""Fig. 1 — CER dependence on lambda_rec / lambda_nonrec for trace-norm
+vs l2 regularization (stage-1 models on the synthetic speech task)."""
+from __future__ import annotations
+
+from benchmarks.speech_runner import train_stage1
+
+LAMBDAS = [0.0, 3e-5, 3e-4]
+
+
+def run() -> list[dict]:
+  rows = []
+  for kind in ("trace", "l2"):
+    for lam_nr in LAMBDAS:
+      for lam_r in (0.0, lam_nr):
+        if lam_nr == 0.0 and lam_r != 0.0:
+          continue
+        out = train_stage1(kind, lam_r, lam_nr)
+        rows.append({
+            "bench": "fig1_stage1_reg", "kind": kind,
+            "lambda_rec": lam_r, "lambda_nonrec": lam_nr,
+            "cer": out["cer"], "step_time_s": out["step_time_s"],
+        })
+  return rows
+
+
+if __name__ == "__main__":
+  for r in run():
+    print(r)

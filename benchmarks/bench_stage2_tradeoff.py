@@ -1,0 +1,30 @@
+"""Fig. 4 — parameters vs CER of stage-2 models, by the stage-1
+regularization type (trace / l2 / unregularized). Varying the explained-
+variance threshold traces each curve."""
+from __future__ import annotations
+
+from benchmarks.speech_runner import finetune_stage2, train_stage1
+
+THRESHOLDS = [0.7, 0.9, 0.98]
+SOURCES = [("trace", 3e-5), ("trace", 3e-3), ("l2", 3e-5), ("none", 0.0)]
+
+
+def run() -> list[dict]:
+  rows = []
+  for kind, lam in SOURCES:
+    s1 = train_stage1(kind, lam, lam)
+    for thr in THRESHOLDS:
+      s2 = finetune_stage2(s1["params"], thr,
+                           spec_extra=dict(src=kind, lam=lam))
+      rows.append({
+          "bench": "fig4_stage2_tradeoff", "stage1_kind": kind,
+          "lambda": lam, "threshold": thr,
+          "n_params": s2["n_params"], "cer": s2["cer"],
+          "stage1_cer": s1["cer"],
+      })
+  return rows
+
+
+if __name__ == "__main__":
+  for r in run():
+    print(r)

@@ -1,0 +1,56 @@
+"""Tables 1 & 2 — compression tiers: baseline vs three shrunken acoustic
+models, with parameters, task-CER, relative accuracy change, and the
+roofline-model speedup of the factored+int8 inference path on the TPU
+target (the Table-2 'speedup' axis; wall-clock ARM numbers don't exist on
+this container, so the bandwidth model supplies the derived speedup —
+weights streamed per decode step dominate the low-batch regime)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.speech_runner import (count_params, finetune_stage2,
+                                      train_stage1)
+from repro.core.factored import iter_factored_leaves
+
+HBM_BW = 819e9          # bytes/s, v5e
+
+
+def _decode_weight_bytes(params, bytes_per_el: float) -> float:
+  """Weight traffic of one streaming decode step (all GEMMs read once)."""
+  total = 0.0
+  for leaf in iter_factored_leaves(params):
+    total += leaf.num_params * bytes_per_el
+  return total
+
+
+def run() -> list[dict]:
+  s1 = train_stage1("trace", 3e-5, 3e-5)
+  base_params = s1["params"]
+  base_bytes = _decode_weight_bytes(base_params, 2.0)       # bf16 dense
+  base_cer = s1["cer"]
+
+  rows = [{
+      "bench": "table12_tiers", "tier": "baseline",
+      "n_params": int(count_params(base_params)), "cer": base_cer,
+      "rel_cer_pct": 0.0, "weight_mb": base_bytes / 1e6,
+      "roofline_speedup": 1.0,
+  }]
+  tiers = [("tier-1", 0.98, 2.0), ("tier-2", 0.9, 2.0),
+           ("tier-3", 0.9, 1.0)]      # tier-3: int8 (1 byte/el) + same rank
+  for name, thr, bpe in tiers:
+    s2 = finetune_stage2(base_params, thr,
+                         spec_extra=dict(src="trace", lam=3e-5))
+    wbytes = _decode_weight_bytes(s2["params"], bpe)
+    rows.append({
+        "bench": "table12_tiers", "tier": name,
+        "n_params": s2["n_params"], "cer": s2["cer"],
+        "rel_cer_pct": 100.0 * (base_cer - s2["cer"]) / max(base_cer, 1e-9),
+        "weight_mb": wbytes / 1e6,
+        "roofline_speedup": base_bytes / wbytes,
+    })
+  return rows
+
+
+if __name__ == "__main__":
+  for r in run():
+    print(r)

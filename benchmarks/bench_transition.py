@@ -1,0 +1,61 @@
+"""Fig. 5 — CER versus stage-1 -> stage-2 transition step at a fixed
+total training budget (the paper's training-time reduction result: early
+transitions don't hurt the final CER, and the LR schedule continues
+across the transition)."""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import pickle
+
+import jax
+
+from benchmarks.speech_runner import (CACHE, DATA_CFG, LR, MODEL_CFG, PLAN,
+                                      eval_cer, _cached)
+from repro.core.schedule import TwoStageSchedule
+from repro.core.svd import TruncationSpec
+from repro.core.tracenorm import RegularizerConfig
+from repro.data.speech import batch_at
+from repro.training import TrainConfig, Trainer
+
+TOTAL = 200
+TRANSITIONS = [40, 100, 160]
+
+
+def _run_one(kind: str, transition: int) -> dict:
+  spec = dict(what="fig5", kind=kind, transition=transition, total=TOTAL,
+              v=3)
+  def run():
+    sched = TwoStageSchedule(
+        total_steps=TOTAL, transition_step=transition,
+        regularizer=RegularizerConfig(kind=kind, lambda_rec=3e-5,
+                                      lambda_nonrec=3e-5),
+        truncation=TruncationSpec(variance_threshold=0.9, round_to=8),
+        lr_policy="continue")
+    trainer = Trainer(MODEL_CFG, TrainConfig(lr=LR), schedule=sched,
+                      plan=PLAN)
+    curve = []
+    for i in range(TOTAL):
+      m = trainer.train_step(batch_at(DATA_CFG, i))
+      if i % 20 == 19:
+        curve.append((i, m["loss"]))
+    return {"cer": eval_cer(trainer.params), "curve": curve}
+  return _cached(spec, run)
+
+
+def run() -> list[dict]:
+  rows = []
+  for kind in ("trace", "l2"):
+    for tr in TRANSITIONS:
+      out = _run_one(kind, tr)
+      rows.append({
+          "bench": "fig5_transition", "kind": kind,
+          "transition_step": tr, "total_steps": TOTAL, "cer": out["cer"],
+      })
+  return rows
+
+
+if __name__ == "__main__":
+  for r in run():
+    print(r)

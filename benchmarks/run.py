@@ -1,0 +1,116 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints `name,us_per_call,derived` CSV rows: us_per_call is the unit wall
+time of the bench's measured operation (training step or kernel call) and
+derived is the bench's headline metric. Full row dumps land in
+experiments/bench/<bench>.json.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--only fig2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+BENCH_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench")
+
+
+def _derived(bench: str, rows: list[dict]) -> str:
+  try:
+    if bench == "bench_stage1_reg":
+      best = min(r["cer"] for r in rows)
+      return f"best_cer={best:.3f}"
+    if bench == "bench_tracenorm_nu":
+      tr = [r for r in rows if r["kind"] == "trace" and r["gemm"] == "<mean>"]
+      l2 = [r for r in rows if r["kind"] == "l2" and r["gemm"] == "<mean>"]
+      return (f"nu_trace={min(r['nu'] for r in tr):.3f}"
+              f"|nu_l2={min(r['nu'] for r in l2):.3f}")
+    if bench == "bench_rank_variance":
+      tr = min(r["rank90"] for r in rows if r["kind"] == "trace"
+               and r["lambda"] > 0)
+      un = min(r["rank90"] for r in rows if r["kind"] == "none")
+      return f"rank90_trace={tr}|rank90_unreg={un}"
+    if bench == "bench_stage2_tradeoff":
+      tr = min(r["cer"] for r in rows if r["stage1_kind"] == "trace")
+      nn = min(r["cer"] for r in rows if r["stage1_kind"] == "none")
+      return f"cer_trace={tr:.3f}|cer_unreg={nn:.3f}"
+    if bench == "bench_transition":
+      return "|".join(f"t{r['transition_step']}={r['cer']:.3f}"
+                      for r in rows if r["kind"] == "trace")
+    if bench == "bench_tiers":
+      t3 = [r for r in rows if r["tier"] == "tier-3"][0]
+      return (f"tier3_params={t3['n_params']}"
+              f"|speedup={t3['roofline_speedup']:.1f}x")
+    if bench == "bench_lowbatch_gemm":
+      b1 = {r["format"]: r["roofline_gops"] for r in rows
+            if r["batch"] == 1}
+      return (f"b1_int8={b1['int8']}GOPs"
+              f"|b1_lowrank={b1['lowrank64_bf16']}GOPs")
+    if bench == "bench_factorization_split":
+      j = [r for r in rows if r["scheme"] == "partially_joint"]
+      s = [r for r in rows if r["scheme"] == "completely_split"]
+      return (f"joint_params={min(r['n_params'] for r in j)}"
+              f"|split_params={min(r['n_params'] for r in s)}")
+    if bench == "bench_quantization":
+      r = rows[0]
+      return (f"rel_cer_increase={r['rel_cer_increase_pct']:.1f}pct"
+              f"|fp={r['cer_fp']:.3f}|int8={r['cer_int8']:.3f}")
+    if bench == "bench_growing_gru":
+      return "|".join(f"{r['variant'].split()[0]}={r['cer']:.3f}"
+                      for r in rows)
+    if bench == "bench_roofline":
+      doms = [r.get("dominant") for r in rows if "dominant" in r]
+      if not doms:
+        return "no_dryrun_artifacts"
+      from collections import Counter
+      c = Counter(doms)
+      return "|".join(f"{k}={v}" for k, v in sorted(c.items()))
+  except Exception as e:            # keep the driver robust
+    return f"derived_error={type(e).__name__}"
+  return f"rows={len(rows)}"
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--only", default=None)
+  args = ap.parse_args()
+
+  from benchmarks import (bench_factorization_split, bench_growing_gru,
+                          bench_lowbatch_gemm, bench_quantization,
+                          bench_rank_variance, bench_roofline,
+                          bench_stage1_reg, bench_stage2_tradeoff,
+                          bench_tiers, bench_tracenorm_nu,
+                          bench_transition)
+  benches = {
+      "bench_stage1_reg": bench_stage1_reg.run,          # Fig 1
+      "bench_tracenorm_nu": bench_tracenorm_nu.run,      # Fig 2
+      "bench_rank_variance": bench_rank_variance.run,    # Fig 3
+      "bench_stage2_tradeoff": bench_stage2_tradeoff.run,  # Fig 4
+      "bench_transition": bench_transition.run,          # Fig 5
+      "bench_tiers": bench_tiers.run,                    # Tables 1-2
+      "bench_lowbatch_gemm": bench_lowbatch_gemm.run,    # Fig 6
+      "bench_factorization_split": bench_factorization_split.run,  # Table 3
+      "bench_quantization": bench_quantization.run,      # §4 int8 claim
+      "bench_growing_gru": bench_growing_gru.run,        # Appendix B.1
+      "bench_roofline": bench_roofline.run,              # brief §Roofline
+  }
+  os.makedirs(BENCH_DIR, exist_ok=True)
+  print("name,us_per_call,derived")
+  for name, fn in benches.items():
+    if args.only and args.only not in name:
+      continue
+    t0 = time.perf_counter()
+    rows = fn()
+    wall = time.perf_counter() - t0
+    # us_per_call: per measured unit (training step / kernel call / cell)
+    us = 1e6 * wall / max(len(rows), 1)
+    with open(os.path.join(BENCH_DIR, f"{name}.json"), "w") as f:
+      json.dump(rows, f, indent=1)
+    print(f"{name},{us:.0f},{_derived(name, rows)}")
+
+
+if __name__ == "__main__":
+  main()

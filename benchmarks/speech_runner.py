@@ -1,0 +1,140 @@
+"""Shared runner for the paper-reproduction benchmarks.
+
+Trains the reduced DS2 model on the synthetic speech task under a given
+regularization config and caches (params, metrics) on disk keyed by the
+run spec — Figures 1-5 share stage-1 trainings instead of repeating them.
+
+Scale note (EXPERIMENTS.md): WSJ is not available offline; these runs
+validate the paper's *qualitative* claims on the synthetic task at CPU
+scale. "CER" is task-CER on held-out synthetic batches.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+import time
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.compress import FactorizationPlan, to_stage2
+from repro.core.schedule import TwoStageSchedule
+from repro.core.svd import TruncationSpec
+from repro.core.tracenorm import (RegularizerConfig, nu_from_sigma,
+                                  rank_for_variance, singular_values)
+from repro.core.factored import count_params, iter_factored_leaves
+from repro.data.speech import SpeechDataConfig, batch_at, cer
+from repro.models import deepspeech
+from repro.models.ctc import ctc_greedy_decode
+from repro.training import TrainConfig, Trainer
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "cache")
+
+MODEL_CFG = configs.get_smoke("deepspeech2-wsj").with_(dtype=jnp.float32)
+DATA_CFG = SpeechDataConfig(vocab_size=MODEL_CFG.vocab_size,
+                            feat_dim=MODEL_CFG.feat_dim, global_batch=8,
+                            max_label_len=12, noise=0.2)
+PLAN = FactorizationPlan(min_dim=48)
+STAGE1_STEPS = 160
+LR = 1e-3
+
+
+def eval_cer(params, n_batches: int = 3, start: int = 900) -> float:
+  total = []
+  for j in range(n_batches):
+    b = batch_at(DATA_CFG, start + j)
+    lp = deepspeech.forward(params, jnp.asarray(b["feats"]), MODEL_CFG)
+    ol = deepspeech.output_lengths(jnp.asarray(b["feat_lengths"]),
+                                   MODEL_CFG)
+    total.append(cer(np.asarray(ctc_greedy_decode(lp, ol)), b["labels"],
+                     b["label_lengths"]))
+  return float(np.mean(total))
+
+
+def _key(spec: dict) -> str:
+  return hashlib.md5(json.dumps(spec, sort_keys=True).encode()).hexdigest()
+
+
+def _cached(spec: dict, fn):
+  os.makedirs(CACHE, exist_ok=True)
+  path = os.path.join(CACHE, _key(spec) + ".pkl")
+  if os.path.exists(path):
+    with open(path, "rb") as f:
+      return pickle.load(f)
+  out = fn()
+  with open(path, "wb") as f:
+    pickle.dump(out, f)
+  return out
+
+
+def train_stage1(kind: str, lam_rec: float, lam_nonrec: float,
+                 steps: int = STAGE1_STEPS, seed: int = 0):
+  """Stage-1 training (factored+trace, factored+<none>, or unfactored l2).
+
+  Returns {params, cer, step_time_s}. Cached on disk.
+  """
+  spec = dict(what="stage1", kind=kind, lr=lam_rec, lnr=lam_nonrec,
+              steps=steps, seed=seed, v=3)
+  def run():
+    reg = RegularizerConfig(kind=kind, lambda_rec=lam_rec,
+                            lambda_nonrec=lam_nonrec)
+    # trace-norm runs train the factored form; l2/none train unfactored
+    sched = TwoStageSchedule(
+        total_steps=steps * 2, transition_step=steps * 2 + 1,   # never
+        regularizer=reg,
+        truncation=TruncationSpec()) if kind == "trace" else None
+    tcfg = TrainConfig(lr=LR, regularizer=reg if sched is None else
+                       RegularizerConfig())
+    trainer = Trainer(MODEL_CFG, tcfg, schedule=sched, plan=PLAN,
+                      rng=jax.random.PRNGKey(seed))
+    t0 = time.perf_counter()
+    for i in range(steps):
+      m = trainer.train_step(batch_at(DATA_CFG, i))
+    dt = (time.perf_counter() - t0) / steps
+    return {"params": jax.device_get(trainer.params),
+            "cer": eval_cer(trainer.params), "loss": m["loss"],
+            "step_time_s": dt}
+  return _cached(spec, run)
+
+
+def finetune_stage2(stage1_params, threshold: float, steps: int = 60,
+                    spec_extra: Optional[dict] = None, round_to: int = 8):
+  """Warmstart from truncated SVD and fine-tune without regularization."""
+  spec = dict(what="stage2", thr=threshold, steps=steps, round_to=round_to,
+              v=3, **(spec_extra or {}))
+  def run():
+    tspec = TruncationSpec(variance_threshold=threshold, round_to=round_to)
+    params = to_stage2(stage1_params, PLAN, tspec)
+    trainer = Trainer(MODEL_CFG, TrainConfig(lr=LR))
+    trainer.params = params
+    trainer.opt_state = trainer._opt_init(params)
+    for i in range(steps):
+      m = trainer.train_step(batch_at(DATA_CFG, 200 + i))
+    return {"params": jax.device_get(trainer.params),
+            "cer": eval_cer(trainer.params),
+            "n_params": int(count_params(trainer.params))}
+  return _cached(spec, run)
+
+
+def gemm_diagnostics(params) -> dict:
+  """Per-GEMM {nu, rank90, shape} for Figures 2-3."""
+  out = {}
+  for leaf in iter_factored_leaves(params):
+    w = leaf.product()
+    if w.ndim != 2:
+      continue
+    s = singular_values(w)
+    out[leaf.name] = {
+        "nu": float(nu_from_sigma(s)),
+        "rank90": int(rank_for_variance(s, 0.90)),
+        "shape": [int(leaf.in_dim), int(leaf.out_dim)],
+        "group": leaf.group,
+    }
+  return out

@@ -1,0 +1,52 @@
+"""Serve a small LM with batched requests through the decode engine —
+including the paper's compressed-inference path: the same model served
+(a) dense and (b) stage-2 factored, comparing weight bytes per decode
+step (the quantity the farm kernels stream).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core.compress import FactorizationPlan, to_stage1, to_stage2
+from repro.core.factored import count_params
+from repro.core.svd import TruncationSpec
+from repro.models.api import get_model
+from repro.serving import LMEngine
+
+
+def main():
+  cfg = configs.get_smoke("qwen3-4b").with_(vocab_size=512,
+                                            dtype=jnp.float32)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  prompts = np.random.RandomState(0).randint(1, 512, size=(4, 8))
+
+  print("== dense serving ==")
+  eng = LMEngine(cfg, params, batch_size=4, max_len=64)
+  t0 = time.perf_counter()
+  out = eng.generate(prompts, steps=12, temperature=0.7)
+  dt = time.perf_counter() - t0
+  print(f"  params {count_params(params):,}; "
+        f"{12 * 4 / dt:.1f} tok/s (CPU); sample {out.tokens[0][:6]}")
+
+  print("== stage-2 factored serving (paper's compressed path) ==")
+  plan = FactorizationPlan(min_dim=64)
+  factored = to_stage2(to_stage1(params, plan), plan,
+                       TruncationSpec(variance_threshold=0.8, round_to=8))
+  eng2 = LMEngine(cfg, factored, batch_size=4, max_len=64)
+  t0 = time.perf_counter()
+  out2 = eng2.generate(prompts, steps=12, temperature=0.7)
+  dt2 = time.perf_counter() - t0
+  p0, p1 = count_params(params), count_params(factored)
+  print(f"  params {p1:,} ({100 * (1 - p1 / p0):.0f}% fewer weight bytes "
+        f"to stream per decode step); {12 * 4 / dt2:.1f} tok/s (CPU); "
+        f"sample {out2.tokens[0][:6]}")
+
+
+if __name__ == "__main__":
+  main()

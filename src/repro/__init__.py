@@ -1,0 +1,4 @@
+"""repro — trace-norm regularized low-rank training & low-batch inference
+(Kliegl et al. 2017) as a multi-pod JAX framework. See README.md."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+"""Checkpoint save/restore with elastic resharding."""
+from repro.checkpoint.manager import CheckpointManager

@@ -1,0 +1,175 @@
+"""Checkpointing: host-gathered numpy shards per pytree leaf + JSON
+manifest; restore reshards onto any mesh (elastic: save on N devices,
+load on M). Async saves run on a background thread so the step loop never
+blocks on disk.
+
+Layout:
+  <dir>/step_000042.tmp/...   (written first)
+  <dir>/step_000042/          (atomic rename on completion)
+      manifest.json           {leaf path -> file, dtype, shape, meta}
+      <leaf>.npy              one file per pytree leaf
+
+Keyed by pytree *path*, so restore only needs a structure template (from
+jax.eval_shape over the model init) — static FactoredLinear metadata never
+touches disk and can evolve without invalidating checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# numpy round-trips ml_dtypes (bfloat16, float8) as raw void ("V2") — store
+# them as unsigned views and restore through the manifest's dtype string
+_EXOTIC_VIEW = {2: np.uint16, 1: np.uint8}
+
+
+def _to_native(arr: np.ndarray) -> tuple[np.ndarray, str]:
+  dt = str(arr.dtype)
+  if arr.dtype.kind not in "biufc":       # ml_dtypes etc.
+    return arr.view(_EXOTIC_VIEW[arr.dtype.itemsize]), dt
+  return arr, dt
+
+
+def _from_native(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+  if arr.dtype.kind not in "biufc" or str(arr.dtype) != dtype_str:
+    try:
+      return arr.view(jnp.dtype(dtype_str))
+    except TypeError:
+      return arr
+  return arr
+
+
+def _path_str(path) -> str:
+  toks = []
+  for k in path:
+    if hasattr(k, "key"):
+      toks.append(str(k.key))
+    elif hasattr(k, "name"):
+      toks.append(str(k.name))
+    elif hasattr(k, "idx"):
+      toks.append(str(k.idx))
+    else:
+      toks.append(str(k))
+  return "/".join(toks)
+
+
+def _fname(path_str: str) -> str:
+  return re.sub(r"[^A-Za-z0-9_.-]", "_", path_str) + ".npy"
+
+
+class CheckpointManager:
+
+  def __init__(self, directory: str, *, keep: int = 3):
+    self.directory = directory
+    self.keep = keep
+    os.makedirs(directory, exist_ok=True)
+    self._thread: Optional[threading.Thread] = None
+
+  # -- save -----------------------------------------------------------------
+
+  def save(self, step: int, tree: Any, *, extra: Optional[dict] = None,
+           blocking: bool = True) -> None:
+    """Gather every leaf to host and persist. blocking=False runs the disk
+    write on a background thread (the gather happens inline — cheap next to
+    a training step — so the live tree can keep mutating)."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    host = [(_path_str(p), np.asarray(jax.device_get(x))) for p, x in flat]
+    if blocking:
+      self._write(step, host, extra)
+    else:
+      self.wait()
+      self._thread = threading.Thread(
+          target=self._write, args=(step, host, extra), daemon=True)
+      self._thread.start()
+
+  def wait(self) -> None:
+    if self._thread is not None:
+      self._thread.join()
+      self._thread = None
+
+  def _write(self, step: int, host: list, extra: Optional[dict]) -> None:
+    final = os.path.join(self.directory, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+      shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "extra": extra or {}, "leaves": {}}
+    for pstr, arr in host:
+      fn = _fname(pstr)
+      native, dtype_str = _to_native(arr)
+      np.save(os.path.join(tmp, fn), native)
+      manifest["leaves"][pstr] = {
+          "file": fn, "dtype": dtype_str, "shape": list(arr.shape)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+      json.dump(manifest, f)
+    if os.path.exists(final):
+      shutil.rmtree(final)
+    os.rename(tmp, final)
+    self._gc()
+
+  def _gc(self) -> None:
+    steps = self.all_steps()
+    for s in steps[:-self.keep] if self.keep else []:
+      shutil.rmtree(os.path.join(self.directory, f"step_{s:09d}"),
+                    ignore_errors=True)
+
+  # -- restore ----------------------------------------------------------------
+
+  def all_steps(self) -> list[int]:
+    out = []
+    for d in os.listdir(self.directory):
+      m = re.fullmatch(r"step_(\d+)", d)
+      if m:
+        out.append(int(m.group(1)))
+    return sorted(out)
+
+  def latest_step(self) -> Optional[int]:
+    steps = self.all_steps()
+    return steps[-1] if steps else None
+
+  def restore(self, template: Any, *, step: Optional[int] = None,
+              shardings: Any = None) -> tuple[Any, dict]:
+    """Rebuild `template`'s structure with stored leaves.
+
+    template: pytree of arrays or ShapeDtypeStructs (e.g. from eval_shape).
+    shardings: optional matching tree of NamedSharding — the elastic
+    reshard path (checkpoint saved on any topology lands on this one).
+    Returns (tree, manifest_extra).
+    """
+    if step is None:
+      step = self.latest_step()
+      if step is None:
+        raise FileNotFoundError(f"no checkpoints in {self.directory}")
+    d = os.path.join(self.directory, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+      manifest = json.load(f)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    shard_flat = None
+    if shardings is not None:
+      shard_flat = jax.tree.flatten(
+          shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding)
+      )[0]
+    leaves = []
+    for i, (p, t) in enumerate(flat):
+      pstr = _path_str(p)
+      ent = manifest["leaves"].get(pstr)
+      if ent is None:
+        raise KeyError(f"checkpoint {d} missing leaf {pstr}")
+      arr = np.load(os.path.join(d, ent["file"]))
+      arr = _from_native(arr, ent["dtype"])
+      if tuple(arr.shape) != tuple(t.shape):
+        raise ValueError(
+            f"shape mismatch for {pstr}: ckpt {arr.shape} vs {t.shape}")
+      if shard_flat is not None:
+        leaves.append(jax.device_put(arr, shard_flat[i]))
+      else:
+        leaves.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(leaves), manifest.get("extra", {})

@@ -1,0 +1,27 @@
+"""deepspeech2_wsj — the PAPER's own architecture (11th config).
+
+Forward-only GRU Deep Speech 2 (Amodei et al. 2016) with the paper's
+Appendix-B choices: mel-80 features (B.3), growing GRU sizes 768/1024/1280
+(B.1), FC 1536, CTC over a character vocabulary, partially-joint GRU
+factorization (B.2). ~29.8M params when stage-1 factored, matching the
+paper's §3.2.3 scale.
+"""
+from repro.layers.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepspeech2-wsj", family="deepspeech",
+    num_layers=3, d_model=1280, num_heads=1, num_kv_heads=1,
+    d_ff=1536, vocab_size=32,               # blank + 26 chars + punct
+    feat_dim=80, gru_dims=(768, 1024, 1280), fc_dim=1536,
+    conv_channels=32, time_stride=2,
+)
+
+SMOKE = ModelConfig(
+    name="deepspeech2-wsj-smoke", family="deepspeech",
+    num_layers=3, d_model=96, num_heads=1, num_kv_heads=1,
+    d_ff=128, vocab_size=32,
+    feat_dim=80, gru_dims=(64, 80, 96), fc_dim=128,
+    conv_channels=8, time_stride=2, remat="none",
+)
+
+SKIP_SHAPES = ("long_500k",)

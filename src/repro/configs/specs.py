@@ -1,0 +1,100 @@
+"""Input ShapeDtypeStruct builders per (arch family x shape kind).
+
+`input_specs(cfg, shape)` returns the exact kwargs the train/serve step is
+lowered with — weak-type-correct, shardable, zero device allocation. The
+modality frontends of [audio]/[vlm] archs are stubs per the brief: whisper
+receives precomputed frame embeddings (b, t, d_model); chameleon's VQ image
+tokens are ordinary ids inside its unified 65536 vocab, so its stub *is*
+the token stream.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ModelConfig, ShapeConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _lm_train(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+  b, s = shape.global_batch, shape.seq_len
+  return {
+      "tokens": SDS((b, s), jnp.int32),
+      "targets": SDS((b, s), jnp.int32),
+  }
+
+
+def _lm_decode(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+  b = shape.global_batch
+  return {
+      "token": SDS((b, 1), jnp.int32),
+      "positions": SDS((b,), jnp.int32),
+  }
+
+
+def _whisper_train(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+  b, s = shape.global_batch, shape.seq_len
+  dec = max(s // 4, 64)     # text tokens per audio window
+  return {
+      "frames": SDS((b, s, cfg.d_model), cfg.dtype),
+      "tokens": SDS((b, dec), jnp.int32),
+      "targets": SDS((b, dec), jnp.int32),
+  }
+
+
+def _speech_train(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+  b, t = shape.global_batch, shape.seq_len
+  lab = max(t // 16, 8)
+  return {
+      "feats": SDS((b, t, cfg.feat_dim), cfg.dtype),
+      "feat_lengths": SDS((b,), jnp.int32),
+      "labels": SDS((b, lab), jnp.int32),
+      "label_lengths": SDS((b,), jnp.int32),
+  }
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+  """Step inputs (excluding params / decode state) as ShapeDtypeStructs."""
+  fam = cfg.family
+  if shape.kind == "train":
+    if fam == "whisper":
+      return _whisper_train(cfg, shape)
+    if fam == "deepspeech":
+      return _speech_train(cfg, shape)
+    return _lm_train(cfg, shape)
+  if shape.kind == "prefill":
+    if fam == "whisper":
+      b, s = shape.global_batch, shape.seq_len
+      return {"frames": SDS((b, s, cfg.d_model), cfg.dtype)}
+    if fam == "deepspeech":
+      b, t = shape.global_batch, shape.seq_len
+      return {"feats": SDS((b, t, cfg.feat_dim), cfg.dtype)}
+    return {"tokens": SDS((shape.global_batch, shape.seq_len), jnp.int32)}
+  if shape.kind == "decode":
+    if fam == "deepspeech":
+      # streaming frame step: one post-frontend feature frame
+      b = shape.global_batch
+      freq_after = ((cfg.feat_dim + 1) // 2 + 1) // 2
+      return {"x_t": SDS((b, freq_after * cfg.conv_channels), cfg.dtype)}
+    return _lm_decode(cfg, shape)
+  raise ValueError(f"unknown shape kind: {shape.kind}")
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+  """Decode-state pytree as ShapeDtypeStructs (eval_shape over the init)."""
+  from repro.models.api import get_model
+  api = get_model(cfg)
+  if api.init_decode_state is None:
+    raise ValueError(f"{cfg.name} has no decode state")
+  return jax.eval_shape(
+      lambda: api.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+
+def param_specs(cfg: ModelConfig) -> Any:
+  """Model params as ShapeDtypeStructs (eval_shape, no allocation)."""
+  from repro.models.api import get_model
+  api = get_model(cfg)
+  return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), cfg))

@@ -1,0 +1,22 @@
+"""xlstm-350m [ssm] — 24L (12 mLSTM/sLSTM pairs) d_model=1024 4H
+vocab=50304 [arXiv:2405.04517]. d_ff=0: blocks carry their own
+projections. O(1) decode state -> RUNS long_500k.
+
+The sLSTM recurrent kernel maps directly onto the paper's `rec` group
+(lambda_rec); mLSTM q/k/v projections are `nonrec` (DESIGN.md §4).
+"""
+from repro.layers.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m", family="xlstm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+)
+
+SMOKE = ModelConfig(
+    name="xlstm-350m-smoke", family="xlstm",
+    num_layers=4, d_model=128, num_heads=2, num_kv_heads=2,
+    d_ff=0, vocab_size=512, remat="none",
+)
+
+SKIP_SHAPES = ()

@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+  factored   — FactoredLinear pytree node (W = UV), constructors, traversal
+  tracenorm  — variational trace-norm penalty, nu(W), singular-value metrics
+  svd        — balanced SVD splits, explained-variance truncation, warmstart
+  compress   — FactorizationPlan + stage-1/stage-2 tree drivers
+  schedule   — two-stage training schedule + LR schedules
+"""
+from repro.core.factored import (FactoredLinear, count_params, dense,
+                                 factored, iter_factored_leaves,
+                                 map_factored_leaves)
+from repro.core.tracenorm import (RegularizerConfig, nu_coefficient,
+                                  rank_for_variance, regularization_loss,
+                                  singular_values, trace_norm_metrics,
+                                  variational_trace_norm_penalty)
+from repro.core.svd import (TruncationSpec, balanced_split,
+                            explained_variance_rank, factorize_tree,
+                            collapse_tree, warmstart_tree)
+from repro.core.compress import (FactorizationPlan, compression_report,
+                                 to_stage1, to_stage2)
+from repro.core.schedule import (TwoStageSchedule, cosine_schedule,
+                                 linear_warmup_exp_decay)

@@ -1,0 +1,92 @@
+"""Model-level compression driver — the paper's technique as a framework
+feature.
+
+A `FactorizationPlan` declares, by logical GEMM name pattern, which weights
+of a model are factored and how their stage-2 rank is chosen. This mirrors
+the paper's scope ("each large GEMM in the model") and Appendix B.2's
+*partially joint* grouping: models expose their GRU recurrent weights as one
+concatenated GEMM named `*/rec` and the non-recurrent ones as `*/nonrec`, so
+the plan (and the regularizer's lambda_rec/lambda_nonrec split) operates at
+exactly the granularity the paper chose.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import re
+from typing import Any, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import svd
+from repro.core.factored import (FactoredLinear, count_params,
+                                 iter_factored_leaves, map_factored_leaves)
+from repro.core.svd import TruncationSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizationPlan:
+  """Which GEMMs to factor, matched on FactoredLinear.name glob patterns."""
+  include: Sequence[str] = ("*",)       # glob patterns of GEMM names
+  exclude: Sequence[str] = ()           # exceptions (e.g. "*embed*")
+  min_dim: int = 128                    # don't factor tiny GEMMs
+  truncation: TruncationSpec = TruncationSpec()
+
+  def matches(self, leaf: FactoredLinear) -> bool:
+    name = leaf.name
+    if any(fnmatch.fnmatch(name, p) for p in self.exclude):
+      return False
+    if not any(fnmatch.fnmatch(name, p) for p in self.include):
+      return False
+    shape = leaf.u.shape[:-1] + (leaf.v.shape[-1],) if leaf.is_factored \
+        else leaf.w.shape
+    return min(shape[-2], shape[-1]) >= self.min_dim
+
+
+def to_stage1(params: Any, plan: FactorizationPlan) -> Any:
+  """Factor every matching GEMM at full rank (balanced SVD split).
+
+  Stage-1 models are then trained with `RegularizerConfig(kind="trace")`.
+  """
+  def f(leaf: FactoredLinear) -> FactoredLinear:
+    if not plan.matches(leaf) or leaf.is_factored:
+      return leaf
+    return svd.factorize_leaf(leaf)
+  return map_factored_leaves(f, params)
+
+
+def to_stage2(params: Any, plan: FactorizationPlan,
+              truncation: Optional[TruncationSpec] = None) -> Any:
+  """Warmstart a stage-2 model: truncated SVD of every matching GEMM."""
+  spec = truncation or plan.truncation
+  def f(leaf: FactoredLinear) -> FactoredLinear:
+    if not plan.matches(leaf):
+      return leaf
+    return svd.truncate_leaf(leaf, spec)
+  return map_factored_leaves(f, params)
+
+
+def compression_report(before: Any, after: Any) -> dict:
+  """Params/rank table for EXPERIMENTS.md and the tier benchmarks."""
+  rows = []
+  b = {l.name: l for l in iter_factored_leaves(before)}
+  for leaf in iter_factored_leaves(after):
+    orig = b.get(leaf.name)
+    rows.append({
+        "name": leaf.name,
+        "group": leaf.group,
+        "shape": (leaf.in_dim, leaf.out_dim),
+        "rank": leaf.rank if leaf.is_factored else None,
+        "params": leaf.num_params,
+        "params_before": orig.num_params if orig is not None else None,
+    })
+  return {
+      "gemms": rows,
+      "total_params_before": count_params(before),
+      "total_params_after": count_params(after),
+  }
+
+
+def leaf_names(params: Any) -> list[str]:
+  return [l.name for l in iter_factored_leaves(params)]

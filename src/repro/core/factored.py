@@ -1,0 +1,172 @@
+"""Factored GEMM parameterization — the paper's W = UV building block.
+
+Every "large GEMM" weight in this framework is held in a `FactoredLinear`
+pytree node. The node is either *unfactored* (`w` set) or *factored*
+(`u`, `v` set, `w` None). Stage-1 training (paper §3.1) uses full-rank
+factored nodes (r = min(m, n)) with the variational trace-norm penalty;
+stage-2 uses truncated nodes (r chosen by explained variance); inference
+consumes factored nodes through the fused low-rank Pallas kernels.
+
+Metadata (static, not traced):
+  name  — logical GEMM name ("gru0/rec", "attn/qkv", ...), used by
+          factorization plans and sharding rules.
+  group — "rec" | "nonrec": the paper's regularization split (§3.2.1,
+          Appendix B.2). Recurrent weights get lambda_rec, everything
+          else lambda_nonrec.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class FactoredLinear:
+  """A GEMM weight, unfactored (w) or factored (u @ v).
+
+  Shapes: w: (..., m, n); u: (..., m, r); v: (..., r, n). Leading
+  dimensions (e.g. a stacked layer axis under jax.lax.scan) are allowed and
+  batch through product()/apply().
+  """
+  w: Optional[jax.Array]
+  u: Optional[jax.Array]
+  v: Optional[jax.Array]
+  name: str = dataclasses.field(metadata=dict(static=True), default="gemm")
+  group: str = dataclasses.field(metadata=dict(static=True), default="nonrec")
+
+  # -- structure ------------------------------------------------------------
+  @property
+  def is_factored(self) -> bool:
+    return self.u is not None
+
+  @property
+  def in_dim(self) -> int:
+    return self.u.shape[-2] if self.is_factored else self.w.shape[-2]
+
+  @property
+  def out_dim(self) -> int:
+    return self.v.shape[-1] if self.is_factored else self.w.shape[-1]
+
+  @property
+  def rank(self) -> int:
+    """Factorization rank (min(m, n) if unfactored)."""
+    if self.is_factored:
+      return self.u.shape[-1]
+    return min(self.w.shape[-2], self.w.shape[-1])
+
+  @property
+  def num_params(self) -> int:
+    if self.is_factored:
+      return self.u.size + self.v.size
+    return self.w.size
+
+  @property
+  def dtype(self):
+    return self.u.dtype if self.is_factored else self.w.dtype
+
+  # -- math -----------------------------------------------------------------
+  def product(self) -> jax.Array:
+    """Materialize W = UV (or return w). Batches over leading dims."""
+    if self.is_factored:
+      return jnp.matmul(
+          self.u, self.v, preferred_element_type=jnp.float32
+      ).astype(self.u.dtype)
+    return self.w
+
+  def apply(self, x: jax.Array) -> jax.Array:
+    """y = x @ W, computed as (x @ U) @ V when factored.
+
+    The factored path is the paper's inference form: two skinny GEMMs of
+    r(m + n) total weight bytes instead of one mn GEMM — bandwidth-bound
+    decode reads r(m+n)/mn of the unfactored traffic.
+    """
+    if self.is_factored:
+      if self.u.ndim != 2:
+        raise ValueError("apply() expects 2D factors; slice stacked dims first")
+      t = jnp.matmul(x, self.u, preferred_element_type=jnp.float32)
+      t = t.astype(x.dtype)
+      return jnp.matmul(t, self.v, preferred_element_type=jnp.float32).astype(
+          x.dtype)
+    if self.w.ndim != 2:
+      raise ValueError("apply() expects a 2D weight; slice stacked dims first")
+    return jnp.matmul(x, self.w, preferred_element_type=jnp.float32).astype(
+        x.dtype)
+
+  def __call__(self, x: jax.Array) -> jax.Array:
+    return self.apply(x)
+
+
+# ----------------------------------------------------------------------------
+# Constructors.
+# ----------------------------------------------------------------------------
+
+def dense(key: jax.Array, m: int, n: int, *, name: str, group: str = "nonrec",
+          dtype=jnp.float32, scale: Optional[float] = None,
+          stack: tuple[int, ...] = ()) -> FactoredLinear:
+  """Unfactored GEMM with LeCun-normal init (stddev 1/sqrt(m))."""
+  scale = (1.0 / m) ** 0.5 if scale is None else scale
+  w = jax.random.normal(key, stack + (m, n), jnp.float32) * scale
+  return FactoredLinear(w=w.astype(dtype), u=None, v=None, name=name,
+                        group=group)
+
+
+def factored(key: jax.Array, m: int, n: int, r: Optional[int] = None, *,
+             name: str, group: str = "nonrec", dtype=jnp.float32,
+             scale: Optional[float] = None,
+             stack: tuple[int, ...] = ()) -> FactoredLinear:
+  """Factored GEMM with r = min(m, n) by default (stage-1 full-rank form).
+
+  Init: U, V each get stddev (scale / r)^(1/2) * (1/m)^(1/4)-style balanced
+  init so that W = UV has the same variance as the dense init above and
+  ||U||_F^2 == ||V||_F^2 at init (the penalty's minimizer is balanced).
+  """
+  r = min(m, n) if r is None else r
+  ku, kv = jax.random.split(key)
+  scale = (1.0 / m) ** 0.5 if scale is None else scale
+  # var(W_ij) = r * var(U) * var(V); balance var(U)*m == var(V)*... we simply
+  # take su = sv = sqrt(scale / sqrt(r)) giving var(W) = scale^2.
+  s = (scale / (r ** 0.5)) ** 0.5
+  u = jax.random.normal(ku, stack + (m, r), jnp.float32) * s
+  v = jax.random.normal(kv, stack + (r, n), jnp.float32) * s
+  return FactoredLinear(w=None, u=u.astype(dtype), v=v.astype(dtype),
+                        name=name, group=group)
+
+
+# ----------------------------------------------------------------------------
+# Tree traversal.
+# ----------------------------------------------------------------------------
+
+def iter_factored_leaves(tree: Any) -> Iterator[FactoredLinear]:
+  """Yield every FactoredLinear node in a pytree (depth-first).
+
+  FactoredLinear registers as a pytree *node*, so plain tree_flatten would
+  descend into it; we traverse with `is_leaf` to stop at the node level.
+  """
+  leaves = jax.tree.leaves(
+      tree, is_leaf=lambda x: isinstance(x, FactoredLinear))
+  for leaf in leaves:
+    if isinstance(leaf, FactoredLinear):
+      yield leaf
+
+
+def map_factored_leaves(fn, tree: Any) -> Any:
+  """tree_map over FactoredLinear nodes only (other leaves untouched)."""
+  return jax.tree.map(
+      lambda x: fn(x) if isinstance(x, FactoredLinear) else x,
+      tree, is_leaf=lambda x: isinstance(x, FactoredLinear))
+
+
+def count_params(tree: Any) -> int:
+  """Total parameter count, counting factored nodes at their factored size."""
+  total = 0
+  for leaf in jax.tree.leaves(tree,
+                              is_leaf=lambda x: isinstance(x, FactoredLinear)):
+    if isinstance(leaf, FactoredLinear):
+      total += leaf.num_params
+    else:
+      total += leaf.size
+  return total

@@ -1,0 +1,67 @@
+"""Two-stage training schedule (paper §3.2.2–3.2.3).
+
+Stage 1: full-rank factored model + trace-norm (or l2) regularization.
+Stage 2: truncated-SVD warmstart, regularization off.
+
+§3.2.3's finding: the transition can happen well before stage-1 convergence
+(epoch 15 of 80 in the paper) with no CER loss, and the learning-rate
+schedule should *continue across the transition* as if a single model were
+being trained — stage 2 inherits the stage-1 LR at the transition step.
+(§3.2.2's alternative, used when stage 1 ran to convergence: restart stage-2
+LR at 3x the final stage-1 LR.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.svd import TruncationSpec
+from repro.core.tracenorm import RegularizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TwoStageSchedule:
+  total_steps: int
+  transition_step: int                  # stage-1 -> stage-2 switch
+  regularizer: RegularizerConfig        # applied during stage 1 only
+  truncation: TruncationSpec            # rank rule at the transition
+  # LR policy: "continue" (paper §3.2.3) or "restart_3x" (paper §3.2.2).
+  lr_policy: str = "continue"
+
+  def stage(self, step: int) -> int:
+    return 1 if step < self.transition_step else 2
+
+  def regularizer_at(self, step: int) -> RegularizerConfig:
+    if self.stage(step) == 1:
+      return self.regularizer
+    return RegularizerConfig(kind="none")
+
+  def stage2_lr_scale(self) -> float:
+    return 1.0 if self.lr_policy == "continue" else 3.0
+
+
+def linear_warmup_exp_decay(base_lr: float, warmup: int, decay: float,
+                            decay_every: int):
+  """The DS2-style LR schedule used by the speech reproduction: linear
+  warmup then stepwise exponential decay ("anneal by a constant factor each
+  epoch", Amodei et al. 2016)."""
+  def lr(step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    n_decays = jnp.floor(jnp.maximum(step - warmup, 0.0) / decay_every)
+    return base_lr * warm * (decay ** n_decays)
+  return lr
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+  """Cosine decay with warmup — used by the LM training examples."""
+  def lr(step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * cos
+  return lr

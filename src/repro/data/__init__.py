@@ -1,0 +1,9 @@
+"""Data pipelines: synthetic LM stream + synthetic speech (CTC) task.
+
+Both are stateless in (seed, step) — any batch can be regenerated on any
+host, which makes checkpoint/restart and elastic rescaling trivial at the
+data layer.
+"""
+from repro.data import lm, speech
+from repro.data.lm import LMDataConfig
+from repro.data.speech import SpeechDataConfig, cer, edit_distance

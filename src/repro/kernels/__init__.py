@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  lowrank_gemm    — fused (x @ U) @ V, rank intermediate in VMEM (paper §3)
+  int8_gemm       — w8a8 + fused per-channel dequant (paper §4, gemmlowp)
+  decode_matvec   — low-batch weight-streaming GEMM (paper §4, farm)
+  gru_cell        — recurrent GEMM + gate fusion (paper eq. 10)
+  flash_attention — blockwise online softmax (assigned archs' 32k shapes)
+
+Validated in interpret=True mode against kernels/ref.py oracles.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (decode_matvec, flash_attention, gru_cell,
+                               int8_gemm, lowrank_gemm, quantized_matmul)

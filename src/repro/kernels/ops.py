@@ -1,0 +1,151 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Responsibilities: (8, 128)-align every matmul dim (pad + slice), pick
+block shapes that fit VMEM, fall back to the jnp reference when a shape is
+degenerate (dims < MXU tile), and expose an `interpret` flag so the CPU
+container runs the kernel bodies in Python (the tests' default).
+
+On this container interpret=True is forced automatically (no TPU), which
+is also how the per-kernel allclose sweeps in tests/test_kernels.py run.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.decode_matvec import decode_matvec as _decode_matvec
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.gru_cell import gru_cell as _gru_cell
+from repro.kernels.int8_gemm import int8_gemm as _int8_gemm
+from repro.kernels.lowrank_gemm import lowrank_gemm as _lowrank_gemm
+
+LANE = 128
+SUBLANE = 8
+
+
+def _on_tpu() -> bool:
+  return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+  size = x.shape[axis]
+  pad = (-size) % mult
+  if pad == 0:
+    return x
+  widths = [(0, 0)] * x.ndim
+  widths[axis] = (0, pad)
+  return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def lowrank_gemm(x, u, v, *, block_m: int = 512, block_n: int = 512,
+                 interpret: bool | None = None):
+  """y = (x @ U) @ V fused; x: (b, m), u: (m, r), v: (r, n)."""
+  interpret = (not _on_tpu()) if interpret is None else interpret
+  b, m = x.shape
+  r, n = v.shape
+  if min(m, n, r) < LANE:
+    return ref.lowrank_gemm(x, u, v)
+  xp = _pad_to(_pad_to(x, 0, SUBLANE), 1, LANE)
+  up = _pad_to(_pad_to(u, 0, LANE), 1, LANE)
+  vp = _pad_to(_pad_to(v, 0, LANE), 1, LANE)
+  bm = min(block_m, xp.shape[1])
+  bn = min(block_n, vp.shape[1])
+  while xp.shape[1] % bm:
+    bm //= 2
+  while vp.shape[1] % bn:
+    bn //= 2
+  y = _lowrank_gemm(xp, up, vp, block_m=bm, block_n=bn, interpret=interpret)
+  return y[:b, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def int8_gemm(x_q, w_q, x_scale, w_scale, *, block_m: int = 512,
+              block_n: int = 512, interpret: bool | None = None):
+  """w8a8 GEMM with fused dequant; returns f32 (b, n)."""
+  interpret = (not _on_tpu()) if interpret is None else interpret
+  b, m = x_q.shape
+  n = w_q.shape[1]
+  if min(m, n) < LANE:
+    return ref.int8_gemm(x_q, w_q, x_scale, w_scale)
+  xp = _pad_to(_pad_to(x_q, 0, SUBLANE), 1, LANE)
+  wp = _pad_to(_pad_to(w_q, 0, LANE), 1, LANE)
+  xsp = _pad_to(x_scale, 0, SUBLANE)
+  wsp = _pad_to(w_scale, 0, LANE)
+  bm = min(block_m, xp.shape[1])
+  bn = min(block_n, wp.shape[1])
+  while xp.shape[1] % bm:
+    bm //= 2
+  while wp.shape[1] % bn:
+    bn //= 2
+  y = _int8_gemm(xp, wp, xsp, wsp, block_m=bm, block_n=bn,
+                 interpret=interpret)
+  return y[:b, :n]
+
+
+def quantized_matmul(x: jax.Array, w: jax.Array,
+                     interpret: bool | None = None) -> jax.Array:
+  """Convenience: quantize both operands then int8_gemm (bench path)."""
+  x_q, x_s = ref.quantize_rowwise(x)
+  w_q, w_s = ref.quantize_colwise(w)
+  return int8_gemm(x_q, w_q, x_s, w_s, interpret=interpret).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n",
+                                             "interpret"))
+def decode_matvec(x, w, *, block_m: int = 1024, block_n: int = 256,
+                  interpret: bool | None = None):
+  """Low-batch y = x @ w; x: (b<=16, m), w: (m, n)."""
+  interpret = (not _on_tpu()) if interpret is None else interpret
+  b, m = x.shape
+  n = w.shape[1]
+  if min(m, n) < LANE:
+    return ref.decode_matvec(x, w)
+  xp = _pad_to(_pad_to(x, 0, SUBLANE), 1, LANE)
+  wp = _pad_to(_pad_to(w, 0, LANE), 1, LANE)
+  bm = min(block_m, xp.shape[1])
+  bn = min(block_n, wp.shape[1])
+  while xp.shape[1] % bm:
+    bm //= 2
+  while wp.shape[1] % bn:
+    bn //= 2
+  y = _decode_matvec(xp, wp, block_m=bm, block_n=bn, interpret=interpret)
+  return y[:b, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("block_h", "interpret"))
+def gru_cell(xw, h, u, bias, *, block_h: int = 256,
+             interpret: bool | None = None):
+  """Fused GRU step; xw: (b, 3H), h: (b, H), u: (H, 3H), bias: (3H,)."""
+  interpret = (not _on_tpu()) if interpret is None else interpret
+  b, hidden = h.shape
+  if hidden < LANE:
+    return ref.gru_cell(xw, h, u, bias)
+  bh = min(block_h, hidden)
+  while hidden % bh:
+    bh //= 2
+  return _gru_cell(xw, h, u, bias, block_h=bh, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512, interpret: bool | None = None):
+  """q, k, v: (b, s, h, d); GQA callers repeat kv heads first."""
+  interpret = (not _on_tpu()) if interpret is None else interpret
+  b, s, h, d = q.shape
+  if s < SUBLANE or d < LANE:
+    return ref.flash_attention(q, k, v, causal=causal)
+  bq = min(block_q, s)
+  bk = min(block_k, s)
+  while s % bq:
+    bq //= 2
+  while s % bk:
+    bk //= 2
+  return _flash(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                interpret=interpret)

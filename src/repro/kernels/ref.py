@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the mathematical definition with no tiling — tests sweep
+shapes/dtypes and assert the kernels match these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lowrank_gemm(x: jax.Array, u: jax.Array, v: jax.Array) -> jax.Array:
+  """y = (x @ u) @ v, f32 accumulate, output in x.dtype."""
+  t = jnp.matmul(x.astype(jnp.float32), u.astype(jnp.float32))
+  return jnp.matmul(t, v.astype(jnp.float32)).astype(x.dtype)
+
+
+def int8_gemm(x_q: jax.Array, w_q: jax.Array, x_scale: jax.Array,
+              w_scale: jax.Array) -> jax.Array:
+  """y = (x_q @ w_q) * x_scale[:, None] * w_scale[None, :], f32 output.
+
+  x_q: (b, m) int8, row-quantized with x_scale (b,);
+  w_q: (m, n) int8, column-quantized with w_scale (n,).
+  """
+  acc = jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+  return acc.astype(jnp.float32) * x_scale[:, None] * w_scale[None, :]
+
+
+def decode_matvec(x: jax.Array, w: jax.Array) -> jax.Array:
+  """y = x @ w — the paper's low-batch GEMM (b in 1..16)."""
+  return jnp.matmul(x.astype(jnp.float32),
+                    w.astype(jnp.float32)).astype(x.dtype)
+
+
+def gru_cell(xw: jax.Array, h: jax.Array, u: jax.Array,
+             bias: jax.Array) -> jax.Array:
+  """Fused GRU step (paper eq. 10), given precomputed xw = x @ W_nonrec.
+
+  xw: (b, 3H); h: (b, H); u: (H, 3H) recurrent weight; bias: (3H,).
+  Gate order along the 3H axis: [z, r, hcand].
+  """
+  hidden = h.shape[-1]
+  hu = jnp.matmul(h.astype(jnp.float32), u.astype(jnp.float32))
+  g = xw.astype(jnp.float32) + hu + bias.astype(jnp.float32)
+  gz, gr, gh = (g[:, :hidden], g[:, hidden:2 * hidden], g[:, 2 * hidden:])
+  hu_h = hu[:, 2 * hidden:]
+  z = jax.nn.sigmoid(gz)
+  r = jax.nn.sigmoid(gr)
+  hcand = jnp.tanh(gh - hu_h + r * hu_h)
+  h1 = (1.0 - z) * h.astype(jnp.float32) + z * hcand
+  return h1.astype(h.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool = True) -> jax.Array:
+  """Reference attention. q,k,v: (b, s, h, d) -> (b, s, h, d)."""
+  b, s, h, d = q.shape
+  sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                  k.astype(jnp.float32)) / (d ** 0.5)
+  if causal:
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None], sc, -jnp.inf)
+  p = jax.nn.softmax(sc, axis=-1)
+  o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+  return o.astype(q.dtype)
+
+
+def quantize_rowwise(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+  """Symmetric per-row int8 quantization: returns (q, scale)."""
+  amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+  scale = jnp.maximum(amax, 1e-8) / 127.0
+  q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+               -127, 127).astype(jnp.int8)
+  return q, scale
+
+
+def quantize_colwise(w: jax.Array) -> tuple[jax.Array, jax.Array]:
+  """Symmetric per-column int8 quantization: returns (q, scale)."""
+  amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+  scale = jnp.maximum(amax, 1e-8) / 127.0
+  q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
+               -127, 127).astype(jnp.int8)
+  return q, scale

@@ -1,0 +1,2 @@
+"""Launchers: production mesh, multi-pod dry-run, train/serve drivers."""
+from repro.launch.mesh import make_production_mesh

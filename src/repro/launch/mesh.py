@@ -1,0 +1,10 @@
+"""Production mesh entry point (a FUNCTION — importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before first init)."""
+from __future__ import annotations
+
+from repro.dist.mesh import (dp_axes, dp_size, make_host_mesh, make_mesh,
+                             model_size)
+from repro.dist.mesh import make_production_mesh  # re-export
+
+__all__ = ["make_production_mesh", "make_mesh", "make_host_mesh",
+           "dp_axes", "dp_size", "model_size"]

@@ -1,0 +1,205 @@
+"""GQA attention: flash-style blockwise training/prefill + cached decode.
+
+Training/prefill uses an online-softmax blockwise implementation (scan over
+query blocks, inner scan over KV blocks) so 32k-sequence prefill never
+materializes an S x S score matrix. This is also the exact blocking scheme
+of kernels/flash_attention.py — the jnp version here is its oracle and the
+form the dry-run lowers.
+
+`causal_wedge=True` switches the outer loop to a statically unrolled wedge
+(query block i only visits KV blocks 0..i), halving attention FLOPs for
+long prefill at the cost of a larger HLO — a §Perf hillclimb lever.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import FactoredLinear, dense
+from repro.layers.common import ModelConfig, gemm
+from repro.layers.norms import rms_norm
+from repro.layers.rope import apply_rope
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, name: x
+
+NEG_INF = -2.0 ** 30  # large-negative in fp32, safe under bf16 rounding
+
+
+def init_attention(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
+                   stack: tuple[int, ...] = ()) -> dict:
+  d, h, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+  hd = cfg.resolved_head_dim
+  ks = jax.random.split(key, 4)
+  p = {
+      "wq": dense(ks[0], d, h * hd, name=f"{layer_prefix}/attn_q",
+                  dtype=cfg.dtype, stack=stack),
+      "wk": dense(ks[1], d, kv * hd, name=f"{layer_prefix}/attn_k",
+                  dtype=cfg.dtype, stack=stack),
+      "wv": dense(ks[2], d, kv * hd, name=f"{layer_prefix}/attn_v",
+                  dtype=cfg.dtype, stack=stack),
+      "wo": dense(ks[3], h * hd, d, name=f"{layer_prefix}/attn_o",
+                  dtype=cfg.dtype, stack=stack),
+  }
+  if cfg.qk_norm:  # qwen3-style per-head RMSNorm on q and k
+    p["q_norm"] = jnp.ones(stack + (hd,), jnp.float32)
+    p["k_norm"] = jnp.ones(stack + (hd,), jnp.float32)
+  return p
+
+
+def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig,
+                 positions: jax.Array, cs: Constraint):
+  b, s, _ = x.shape
+  h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+  q = gemm(p["wq"], x).reshape(b, s, h, hd)
+  k = gemm(p["wk"], x).reshape(b, s, kv, hd)
+  v = gemm(p["wv"], x).reshape(b, s, kv, hd)
+  if cfg.qk_norm:
+    q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+  q = apply_rope(q, positions, cfg.rope_theta)
+  k = apply_rope(k, positions, cfg.rope_theta)
+  q = cs(q, "bshd_q")
+  k = cs(k, "bshd_kv")
+  v = cs(v, "bshd_kv")
+  return q, k, v
+
+
+def _block_attend(q_blk, k, v, q_start, kv_start, kv_len, scale):
+  """One (q-block x kv-block) online-softmax tile.
+
+  q_blk: (b, bq, h, hd); k/v: (b, bkv, h, hd) [already GQA-repeated].
+  Returns unnormalized (o, m, l) updates for the running softmax.
+  """
+  s = jnp.einsum("bqhd,bkhd->bhqk", q_blk.astype(jnp.float32),
+                 k.astype(jnp.float32)) * scale
+  qpos = q_start + jnp.arange(q_blk.shape[1])[:, None]
+  kpos = kv_start + jnp.arange(k.shape[1])[None, :]
+  mask = (kpos <= qpos) & (kpos < kv_len)
+  return jnp.where(mask[None, None], s, NEG_INF)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig,
+                    cs: Constraint = _id_cs) -> jax.Array:
+  """Causal blockwise attention. q: (b, s, h, hd); k, v: (b, s, kv, hd)."""
+  b, s, h, hd = q.shape
+  kvh = k.shape[2]
+  if h != kvh:  # GQA: repeat kv heads (replicated kv + head-sharded q is fine)
+    rep = h // kvh
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+  bq = min(cfg.attn_block_q, s)
+  bkv = min(cfg.attn_block_kv, s)
+  nq, nk = s // bq, s // bkv
+  scale = 1.0 / (hd ** 0.5)
+
+  kb = k.reshape(b, nk, bkv, h, hd)
+  vb = v.reshape(b, nk, bkv, h, hd)
+
+  def q_block_body(i, q_blk, n_kv_blocks):
+    """Online softmax over kv blocks 0..n_kv_blocks-1 for query block i."""
+    m0 = jnp.full((b, h, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, bq), jnp.float32)
+    o0 = jnp.zeros((b, bq, h, hd), jnp.float32)
+
+    def kv_step(carry, j):
+      m, l, o = carry
+      kj = jax.lax.dynamic_index_in_dim(kb, j, 1, keepdims=False)
+      vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+      sc = _block_attend(q_blk, kj, vj, i * bq, j * bkv, s, scale)
+      m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+      p = jnp.exp(sc - m_new[..., None])
+      alpha = jnp.exp(m - m_new)
+      l = l * alpha + jnp.sum(p, axis=-1)
+      o = o * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+          "bhqk,bkhd->bqhd", p, vj.astype(jnp.float32))
+      return (m_new, l, o), None
+
+    (m, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0),
+                                jnp.arange(n_kv_blocks))
+    o = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return o.astype(q.dtype)
+
+  qb = q.reshape(b, nq, bq, h, hd)
+  if cfg.causal_wedge:
+    # Statically unrolled wedge: query block i visits kv blocks 0..i only.
+    # Halves prefill attention FLOPs (sum_{i<nq} (i+1) vs nq*nk tiles).
+    outs = [q_block_body(i, qb[:, i],
+                         min(((i + 1) * bq + bkv - 1) // bkv, nk))
+            for i in range(nq)]
+    out = jnp.stack(outs, axis=1)
+  else:
+    def outer(_, xs):
+      i, q_blk = xs
+      return None, q_block_body(i, q_blk, nk)
+    _, out = jax.lax.scan(outer, None,
+                          (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4)))
+    out = out.transpose(1, 0, 2, 3, 4)
+  return out.reshape(b, s, h, hd)
+
+
+def attention_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                      cs: Constraint = _id_cs) -> jax.Array:
+  """Full-sequence causal self-attention (train / prefill)."""
+  b, s, _ = x.shape
+  positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+  q, k, v = _project_qkv(p, x, cfg, positions, cs)
+  out = flash_attention(q, k, v, cfg, cs)
+  h, hd = cfg.num_heads, cfg.resolved_head_dim
+  return gemm(p["wo"], out.reshape(b, s, h * hd))
+
+
+# ----------------------------------------------------------------------------
+# Decode path (single new token against a KV cache).
+# ----------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  stack: tuple[int, ...] = (), dtype=None) -> dict:
+  kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+  dtype = dtype or cfg.dtype
+  return {
+      "k": jnp.zeros(stack + (batch, max_len, kv, hd), dtype),
+      "v": jnp.zeros(stack + (batch, max_len, kv, hd), dtype),
+  }
+
+
+def attention_decode(p: dict, x: jax.Array, cache: dict,
+                     positions: jax.Array, cfg: ModelConfig,
+                     cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+  """One decode step. x: (b, 1, d); positions: (b,) write offsets."""
+  b = x.shape[0]
+  h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+  q, k_new, v_new = _project_qkv(p, x, cfg, positions[:, None], cs)
+  # scatter the new kv at per-sequence positions
+  bidx = jnp.arange(b)
+  k_cache = cache["k"].at[bidx, positions].set(
+      k_new[:, 0].astype(cache["k"].dtype))
+  v_cache = cache["v"].at[bidx, positions].set(
+      v_new[:, 0].astype(cache["v"].dtype))
+  k = k_cache
+  v = v_cache
+  if h != kvh:
+    # repeat via reshape-free einsum grouping: fold group dim into score calc
+    group = h // kvh
+    qg = q[:, 0].reshape(b, kvh, group, hd)              # (b, kv, g, hd)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                    k.astype(jnp.float32)) / (hd ** 0.5)
+    mask = jnp.arange(k.shape[1])[None, None, None, :] <= \
+        positions[:, None, None, None]
+    sc = jnp.where(mask, sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", pr, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+  else:
+    sc = jnp.einsum("bhd,bshd->bhs", q[:, 0].astype(jnp.float32),
+                    k.astype(jnp.float32)) / (hd ** 0.5)
+    mask = jnp.arange(k.shape[1])[None, None, :] <= positions[:, None, None]
+    sc = jnp.where(mask, sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", pr, v.astype(jnp.float32))
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+  y = gemm(p["wo"], out)
+  return y, {"k": k_cache, "v": v_cache}

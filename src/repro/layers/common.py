@@ -1,0 +1,125 @@
+"""Shared config dataclasses and the GEMM application helper.
+
+All model weights that are "large GEMMs" in the paper's sense are
+FactoredLinear nodes; `gemm()` applies them uniformly whether factored or
+not, so the whole model zoo is compressible by core.compress plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import FactoredLinear
+
+
+def _acc_dtype(x: jax.Array):
+  """Dot output dtype: bf16 inputs emit bf16 directly — the MXU still
+  accumulates f32 internally, and emitting bf16 halves the GEMM output
+  HBM traffic and makes the TP all-reduces bf16 instead of f32
+  (EXPERIMENTS.md §Perf iteration A1). f32 inputs keep f32 (CPU tests)."""
+  return x.dtype if x.dtype == jnp.bfloat16 else jnp.float32
+
+
+def gemm(leaf: FactoredLinear | jax.Array, x: jax.Array) -> jax.Array:
+  """y[..., n] = x[..., m] @ W(m, n); factored path = (x @ U) @ V."""
+  acc = _acc_dtype(x)
+  if isinstance(leaf, FactoredLinear):
+    if leaf.is_factored:
+      t = jnp.matmul(x, leaf.u, preferred_element_type=acc)
+      t = t.astype(x.dtype)
+      return jnp.matmul(t, leaf.v,
+                        preferred_element_type=acc).astype(x.dtype)
+    return jnp.matmul(x, leaf.w,
+                      preferred_element_type=acc).astype(x.dtype)
+  return jnp.matmul(x, leaf, preferred_element_type=acc).astype(x.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+  num_experts: int = 0          # routed experts
+  num_shared: int = 0           # always-on shared experts
+  top_k: int = 2
+  d_expert: int = 0             # per-expert FFN hidden dim
+  capacity_factor: float = 1.25
+  router_aux_weight: float = 1e-3   # load-balance auxiliary loss
+  first_dense_layers: int = 0   # leading layers use dense FFN (deepseek)
+  dispatch_groups: int = 1      # token groups aligned with the dp sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+  kv_lora_rank: int = 512
+  q_lora_rank: int = 0          # 0 => dense q projection
+  qk_nope_dim: int = 128
+  qk_rope_dim: int = 64
+  v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+  """One config object covers the whole assigned-arch zoo; family selects
+  the model implementation, optional sub-configs select layer variants."""
+  name: str
+  family: str                   # transformer|zamba|xlstm|whisper|deepspeech
+  num_layers: int
+  d_model: int
+  num_heads: int
+  num_kv_heads: int
+  d_ff: int
+  vocab_size: int
+  head_dim: Optional[int] = None          # default d_model // num_heads
+  qk_norm: bool = False                   # qwen3
+  rope_theta: float = 10000.0
+  tie_embeddings: bool = False
+  norm_eps: float = 1e-5
+  dtype: Any = jnp.bfloat16
+  # -- MoE / MLA (deepseek) --
+  moe: Optional[MoEConfig] = None
+  mla: Optional[MLAConfig] = None
+  mtp: bool = False                       # multi-token prediction head (dsv3)
+  # -- hybrid / ssm --
+  ssm_state: int = 0                      # mamba2 state dim (zamba2)
+  attn_every: int = 0                     # zamba: shared attn block period
+  # -- enc-dec (whisper) --
+  encoder_layers: int = 0
+  max_source_positions: int = 1500
+  # -- speech (deepspeech2) --
+  feat_dim: int = 80                      # mel bins (paper B.3)
+  gru_dims: tuple = ()                    # growing sizes (paper B.1)
+  fc_dim: int = 0
+  conv_channels: int = 32
+  time_stride: int = 2
+  # -- attention implementation knobs (perf) --
+  attn_block_q: int = 512
+  attn_block_kv: int = 512
+  # wedge scheduling halves prefill attention FLOPs (see EXPERIMENTS §Perf)
+  causal_wedge: bool = False
+  # remat policy for the layer scan: "full" | "dots" | "none"
+  remat: str = "full"
+
+  @property
+  def resolved_head_dim(self) -> int:
+    return self.head_dim if self.head_dim else self.d_model // self.num_heads
+
+  def with_(self, **kw) -> "ModelConfig":
+    return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+  """One assigned input-shape cell."""
+  name: str                     # train_4k | prefill_32k | decode_32k | long_500k
+  kind: str                     # "train" | "prefill" | "decode"
+  seq_len: int
+  global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}

@@ -1,0 +1,37 @@
+"""Token embedding + output head (optionally tied, optionally factored).
+
+The output projection of the DS2 model and the LM heads are "large GEMMs"
+in the paper's sense; the embedding table itself can be factored too (a
+vocab x rank times rank x d_model product) — useful for the 128k-152k
+vocab archs, exposed via FactorizationPlan include=["*embed*"].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import FactoredLinear, dense
+from repro.layers.common import gemm
+
+
+def init_embedding(key: jax.Array, vocab: int, d: int, *, dtype,
+                   tie: bool, prefix: str = "") -> dict:
+  ks = jax.random.split(key, 2)
+  p = {"table": jax.random.normal(ks[0], (vocab, d), jnp.float32).astype(
+      dtype) * 0.02}
+  if not tie:
+    p["head"] = dense(ks[1], d, vocab, name=f"{prefix}lm_head",
+                      dtype=dtype)
+  return p
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+  return p["table"][tokens]
+
+
+def logits(p: dict, x: jax.Array) -> jax.Array:
+  if "head" in p:
+    return gemm(p["head"], x)
+  from repro.layers.common import _acc_dtype
+  return jnp.matmul(x, p["table"].T,
+                    preferred_element_type=_acc_dtype(x)).astype(x.dtype)

@@ -1,0 +1,47 @@
+"""Gated FFN (SwiGLU) and plain GELU FFN blocks."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import dense
+from repro.layers.common import ModelConfig, gemm
+
+
+def init_swiglu(key: jax.Array, d: int, f: int, *, layer_prefix: str,
+                dtype, stack: tuple[int, ...] = ()) -> dict:
+  ks = jax.random.split(key, 3)
+  return {
+      "w_gate": dense(ks[0], d, f, name=f"{layer_prefix}/ffn_gate",
+                      dtype=dtype, stack=stack),
+      "w_up": dense(ks[1], d, f, name=f"{layer_prefix}/ffn_up",
+                    dtype=dtype, stack=stack),
+      "w_down": dense(ks[2], f, d, name=f"{layer_prefix}/ffn_down",
+                      dtype=dtype, stack=stack),
+  }
+
+
+def swiglu_forward(p: dict, x: jax.Array, cs=lambda a, n: a) -> jax.Array:
+  g = cs(gemm(p["w_gate"], x), "bsf")
+  u = cs(gemm(p["w_up"], x), "bsf")
+  h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+  return gemm(p["w_down"], h)
+
+
+def init_gelu_ffn(key: jax.Array, d: int, f: int, *, layer_prefix: str,
+                  dtype, stack: tuple[int, ...] = ()) -> dict:
+  ks = jax.random.split(key, 2)
+  return {
+      "w_in": dense(ks[0], d, f, name=f"{layer_prefix}/ffn_in",
+                    dtype=dtype, stack=stack),
+      "w_out": dense(ks[1], f, d, name=f"{layer_prefix}/ffn_out",
+                     dtype=dtype, stack=stack),
+      "b_in": jnp.zeros(stack + (f,), jnp.float32),
+      "b_out": jnp.zeros(stack + (d,), jnp.float32),
+  }
+
+
+def gelu_ffn_forward(p: dict, x: jax.Array, cs=lambda a, n: a) -> jax.Array:
+  h = gemm(p["w_in"], x) + p["b_in"].astype(x.dtype)
+  h = cs(jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype), "bsf")
+  return gemm(p["w_out"], h) + p["b_out"].astype(x.dtype)

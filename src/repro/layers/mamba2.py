@@ -1,0 +1,192 @@
+"""Mamba2 (SSD) block — chunked state-space scan, O(S) in sequence length.
+
+Training/prefill uses the chunkwise SSD algorithm (Dao & Gu 2024): quadratic
+attention-like computation within chunks, linear state recurrence across
+chunks. Decode carries a constant-size state (heads, head_dim, d_state) —
+this is why zamba2/xlstm are the archs that run the long_500k shape.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import dense
+from repro.layers.common import ModelConfig, gemm
+from repro.layers.norms import rms_norm
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+
+HEAD_DIM = 64        # mamba2 default P
+CONV_WIDTH = 4
+CHUNK = 256
+
+
+def init_mamba2(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
+                stack: tuple[int, ...] = (), expand: int = 2) -> dict:
+  d = cfg.d_model
+  d_inner = expand * d
+  nheads = d_inner // HEAD_DIM
+  n = cfg.ssm_state
+  ks = jax.random.split(key, 5)
+  # The projection is split in two GEMMs: the big z/x one (TP-shardable on
+  # its output dim) and the small B/C/dt one (replicated) — same math as a
+  # single concatenated in_proj but with clean shard boundaries.
+  return {
+      "in_zx": dense(ks[0], d, 2 * d_inner, name=f"{layer_prefix}/ssm_in_zx",
+                     dtype=cfg.dtype, stack=stack),
+      "in_bcdt": dense(ks[4], d, 2 * n + nheads,
+                       name=f"{layer_prefix}/ssm_in_bcdt",
+                       dtype=cfg.dtype, stack=stack),
+      "out_proj": dense(ks[1], d_inner, d, name=f"{layer_prefix}/ssm_out",
+                        dtype=cfg.dtype, stack=stack),
+      "conv_w": jax.random.normal(ks[2], stack + (CONV_WIDTH, d_inner),
+                                  jnp.float32) * 0.1,
+      "A_log": jnp.zeros(stack + (nheads,), jnp.float32),   # A = -exp(A_log)
+      "D": jnp.ones(stack + (nheads,), jnp.float32),
+      "dt_bias": jnp.zeros(stack + (nheads,), jnp.float32),
+      "norm": jnp.ones(stack + (d_inner,), jnp.float32),
+      "norm_in": jnp.ones(stack + (d,), jnp.float32),   # pre-norm (residual)
+  }
+
+
+def _split_proj(p, xin, cfg, expand=2):
+  d_inner = expand * cfg.d_model
+  nheads = d_inner // HEAD_DIM
+  n = cfg.ssm_state
+  zx = gemm(p["in_zx"], xin)
+  bcdt = gemm(p["in_bcdt"], xin)
+  z = zx[..., :d_inner]
+  x = zx[..., d_inner:]
+  B = bcdt[..., :n]
+  C = bcdt[..., n:2 * n]
+  dt = bcdt[..., 2 * n:]
+  return z, x, B, C, dt, d_inner, nheads
+
+
+def _causal_conv(x, w, state=None):
+  """Depthwise causal conv, width CONV_WIDTH. x: (b, s, c), w: (k, c).
+
+  With `state` (b, k-1, c) performs the streaming update (decode)."""
+  b, s, c = x.shape
+  k = w.shape[0]
+  if state is None:
+    pad = jnp.zeros((b, k - 1, c), x.dtype)
+  else:
+    pad = state.astype(x.dtype)
+  xp = jnp.concatenate([pad, x], axis=1)
+  out = sum(xp[:, i:i + s, :] * w[i].astype(x.dtype) for i in range(k))
+  new_state = xp[:, -(k - 1):, :]
+  return jax.nn.silu(out.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def _segsum(log_a):
+  """segsum(x)[..., i, j] = sum_{j < k <= i} x_k (lower-triangular)."""
+  T = log_a.shape[-1]
+  cs = jnp.cumsum(log_a, axis=-1)
+  diff = cs[..., :, None] - cs[..., None, :]
+  mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+  return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk=CHUNK):
+  """Chunked SSD. x: (b,s,h,p); dt: (b,s,h); A: (h,); B,C: (b,s,n).
+
+  Returns y: (b,s,h,p) and final state (b,h,p,n).
+  """
+  b, s, h, p = x.shape
+  n = B.shape[-1]
+  nc = s // chunk
+  f32 = jnp.float32
+  xc = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(b, nc, chunk, h, p)
+  da = (dt.astype(f32) * A.astype(f32)).reshape(b, nc, chunk, h)  # log decay
+  Bc = B.astype(f32).reshape(b, nc, chunk, n)
+  Cc = C.astype(f32).reshape(b, nc, chunk, n)
+
+  da_cs = jnp.cumsum(da, axis=2)                    # (b,nc,Q,h)
+  da_total = da_cs[:, :, -1]                        # (b,nc,h)
+
+  # intra-chunk: quadratic with decay kernel L = exp(segsum(da))
+  L = jnp.exp(_segsum(da.transpose(0, 1, 3, 2)))    # (b,nc,h,Q,Q)
+  scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)    # (b,nc,Q,Q)
+  y_intra = jnp.einsum("bchij,bcij,bcjhp->bcihp",
+                       L, scores, xc)
+
+  # per-chunk state contribution: S_c = sum_j exp(da_total - da_cs_j) B_j x_j
+  decay_tail = jnp.exp(da_total[:, :, None] - da_cs)          # (b,nc,Q,h)
+  S = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_tail, Bc, xc)
+
+  # inter-chunk recurrence over the chunk axis
+  def step(Hc, inp):
+    Sc, dtot = inp
+    Hn = Hc * jnp.exp(dtot)[..., None, None] + Sc
+    return Hn, Hc                                   # emit state *entering* c
+  H0 = jnp.zeros((b, h, n, p), f32)
+  Hlast, Hin = jax.lax.scan(step, H0,
+                            (S.transpose(1, 0, 2, 3, 4),
+                             da_total.transpose(1, 0, 2)))
+  Hin = Hin.transpose(1, 0, 2, 3, 4)                # (b,nc,h,n,p)
+
+  decay_head = jnp.exp(da_cs)                       # decay from chunk start
+  y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp", Cc, decay_head, Hin)
+  y = (y_intra + y_inter).reshape(b, s, h, p)
+  return y, Hlast
+
+
+def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                   cs: Constraint = _id_cs, expand: int = 2) -> jax.Array:
+  b, s, d = x.shape
+  z, xi, B, C, dt, d_inner, nheads = _split_proj(p, x, cfg, expand)
+  xi, _ = _causal_conv(xi, p["conv_w"])
+  xi = cs(xi, "bsi")
+  dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                       p["dt_bias"].astype(jnp.float32))
+  A = -jnp.exp(p["A_log"].astype(jnp.float32))
+  xh = xi.reshape(b, s, nheads, HEAD_DIM)
+  y, _ = ssd_chunked(xh, dt, A, B, C, chunk=min(CHUNK, s))
+  y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :,
+                                                              None]
+  y = y.reshape(b, s, d_inner).astype(x.dtype)
+  y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["out_proj"], y)
+
+
+# -- decode ------------------------------------------------------------------
+
+def init_mamba2_state(cfg: ModelConfig, batch: int,
+                      stack: tuple[int, ...] = (), expand: int = 2) -> dict:
+  d_inner = expand * cfg.d_model
+  nheads = d_inner // HEAD_DIM
+  return {
+      "ssm": jnp.zeros(stack + (batch, nheads, cfg.ssm_state, HEAD_DIM),
+                       jnp.float32),
+      "conv": jnp.zeros(stack + (batch, CONV_WIDTH - 1, d_inner), cfg.dtype),
+  }
+
+
+def mamba2_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
+                  cs: Constraint = _id_cs, expand: int = 2
+                  ) -> tuple[jax.Array, dict]:
+  """One decode step. x: (b, 1, d). State is O(1) in context length."""
+  b = x.shape[0]
+  z, xi, B, C, dt, d_inner, nheads = _split_proj(p, x, cfg, expand)
+  xi, conv_state = _causal_conv(xi, p["conv_w"], state["conv"])
+  dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                       p["dt_bias"].astype(jnp.float32))[:, 0]   # (b,h)
+  A = -jnp.exp(p["A_log"].astype(jnp.float32))
+  xh = xi[:, 0].reshape(b, nheads, HEAD_DIM).astype(jnp.float32)
+  Bf = B[:, 0].astype(jnp.float32)                               # (b,n)
+  Cf = C[:, 0].astype(jnp.float32)
+  da = jnp.exp(dt * A)                                           # (b,h)
+  # h' = exp(dt A) h + dt B (x)    (state (b,h,n,p))
+  upd = jnp.einsum("bn,bhp->bhnp", Bf, xh * dt[..., None])
+  ssm = state["ssm"] * da[..., None, None] + upd
+  y = jnp.einsum("bn,bhnp->bhp", Cf, ssm)
+  y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+  y = y.reshape(b, 1, d_inner).astype(x.dtype)
+  y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["out_proj"], y), {"ssm": ssm, "conv": conv_state}

@@ -1,0 +1,201 @@
+"""Multi-head Latent Attention (DeepSeek V2/V3).
+
+MLA is itself a low-rank factorization of the KV projection — the modern
+incarnation of the paper's W = UV idea: the KV path is W_uk @ (W_dkv x)
+with inner rank kv_lora_rank, and the *compressed* latent c_kv is what gets
+cached. The decode path uses the absorbed form (query projected into latent
+space), so per-token cache traffic is rank-sized — exactly the paper's
+bandwidth argument for factored inference.
+
+Cache layout: c_kv (b, s, kv_lora_rank) + k_rope (b, s, qk_rope_dim).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import dense
+from repro.layers.common import MLAConfig, ModelConfig, gemm
+from repro.layers.norms import rms_norm
+from repro.layers.rope import apply_rope
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+NEG_INF = -2.0 ** 30
+
+
+def init_mla(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
+             stack: tuple[int, ...] = ()) -> dict:
+  m, d, h = cfg.mla, cfg.d_model, cfg.num_heads
+  qk = m.qk_nope_dim + m.qk_rope_dim
+  ks = jax.random.split(key, 8)
+  p = {}
+  if m.q_lora_rank:
+    p["wq_a"] = dense(ks[0], d, m.q_lora_rank,
+                      name=f"{layer_prefix}/mla_q_a", dtype=cfg.dtype,
+                      stack=stack)
+    p["q_a_norm"] = jnp.ones(stack + (m.q_lora_rank,), jnp.float32)
+    p["wq_b"] = dense(ks[1], m.q_lora_rank, h * qk,
+                      name=f"{layer_prefix}/mla_q_b", dtype=cfg.dtype,
+                      stack=stack)
+  else:
+    p["wq"] = dense(ks[0], d, h * qk, name=f"{layer_prefix}/mla_q",
+                    dtype=cfg.dtype, stack=stack)
+  p["w_dkv"] = dense(ks[2], d, m.kv_lora_rank + m.qk_rope_dim,
+                     name=f"{layer_prefix}/mla_dkv", dtype=cfg.dtype,
+                     stack=stack)
+  p["kv_a_norm"] = jnp.ones(stack + (m.kv_lora_rank,), jnp.float32)
+  p["w_uk"] = dense(ks[3], m.kv_lora_rank, h * m.qk_nope_dim,
+                    name=f"{layer_prefix}/mla_uk", dtype=cfg.dtype,
+                    stack=stack)
+  p["w_uv"] = dense(ks[4], m.kv_lora_rank, h * m.v_head_dim,
+                    name=f"{layer_prefix}/mla_uv", dtype=cfg.dtype,
+                    stack=stack)
+  p["wo"] = dense(ks[5], h * m.v_head_dim, d, name=f"{layer_prefix}/mla_o",
+                  dtype=cfg.dtype, stack=stack)
+  return p
+
+
+def _queries(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+  m, h = cfg.mla, cfg.num_heads
+  b, s, _ = x.shape
+  qk = m.qk_nope_dim + m.qk_rope_dim
+  if cfg.mla.q_lora_rank:
+    qa = rms_norm(gemm(p["wq_a"], x), p["q_a_norm"], cfg.norm_eps)
+    q = gemm(p["wq_b"], qa)
+  else:
+    q = gemm(p["wq"], x)
+  q = q.reshape(b, s, h, qk)
+  q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
+  q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+  return q_nope, q_rope
+
+
+def _latents(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+  m = cfg.mla
+  ckv = gemm(p["w_dkv"], x)
+  c, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
+  c = rms_norm(c, p["kv_a_norm"], cfg.norm_eps)
+  # rope part is shared across heads: (b, s, 1, rope_dim)
+  k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[
+      :, :, 0, :]
+  return c, k_rope
+
+
+def mla_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                cs: Constraint = _id_cs) -> jax.Array:
+  """Full-sequence causal MLA (train / prefill). Blockwise over queries."""
+  m, h = cfg.mla, cfg.num_heads
+  b, s, _ = x.shape
+  positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+  q_nope, q_rope = _queries(p, x, cfg, positions)
+  c, k_rope = _latents(p, x, cfg, positions)
+  # up-project k/v from the latent for train/prefill (the non-absorbed form)
+  k_nope = gemm(p["w_uk"], c).reshape(b, s, h, m.qk_nope_dim)
+  v = gemm(p["w_uv"], c).reshape(b, s, h, m.v_head_dim)
+  q_nope = cs(q_nope, "bshd_q")
+  k_nope = cs(k_nope, "bshd_q")
+  v = cs(v, "bshd_q")
+
+  scale = 1.0 / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5)
+  bq = min(cfg.attn_block_q, s)
+  bkv = min(cfg.attn_block_kv, s)
+  nq, nk = s // bq, s // bkv
+
+  knb = k_nope.reshape(b, nk, bkv, h, m.qk_nope_dim)
+  krb = k_rope.reshape(b, nk, bkv, m.qk_rope_dim)
+  vb = v.reshape(b, nk, bkv, h, m.v_head_dim)
+
+  def q_block(i, qn_blk, qr_blk):
+    """Online-softmax over kv blocks — the (bq, s) score row never exists."""
+    m0 = jnp.full((b, h, bq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, bq), jnp.float32)
+    o0 = jnp.zeros((b, bq, h, m.v_head_dim), jnp.float32)
+
+    def kv_step(carry, j):
+      mx, l, o = carry
+      kn = jax.lax.dynamic_index_in_dim(knb, j, 1, keepdims=False)
+      kr = jax.lax.dynamic_index_in_dim(krb, j, 1, keepdims=False)
+      vj = jax.lax.dynamic_index_in_dim(vb, j, 1, keepdims=False)
+      sc = jnp.einsum("bqhd,bkhd->bhqk", qn_blk.astype(jnp.float32),
+                      kn.astype(jnp.float32))
+      sc += jnp.einsum("bqhr,bkr->bhqk", qr_blk.astype(jnp.float32),
+                       kr.astype(jnp.float32))
+      sc *= scale
+      qpos = i * bq + jnp.arange(bq)[:, None]
+      kpos = j * bkv + jnp.arange(bkv)[None, :]
+      sc = jnp.where((kpos <= qpos)[None, None], sc, NEG_INF)
+      m_new = jnp.maximum(mx, jnp.max(sc, axis=-1))
+      pexp = jnp.exp(sc - m_new[..., None])
+      alpha = jnp.exp(mx - m_new)
+      l = l * alpha + jnp.sum(pexp, axis=-1)
+      o = o * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+          "bhqk,bkhd->bqhd", pexp, vj.astype(jnp.float32))
+      return (m_new, l, o), None
+
+    (mx, l, o), _ = jax.lax.scan(kv_step, (m0, l0, o0), jnp.arange(nk))
+    o = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return o.astype(x.dtype)
+
+  qn = q_nope.reshape(b, nq, bq, h, m.qk_nope_dim).transpose(1, 0, 2, 3, 4)
+  qr = q_rope.reshape(b, nq, bq, h, m.qk_rope_dim).transpose(1, 0, 2, 3, 4)
+  def outer(_, xs):
+    i, a, r = xs
+    return None, q_block(i, a, r)
+  _, out = jax.lax.scan(outer, None, (jnp.arange(nq), qn, qr))
+  out = out.transpose(1, 0, 2, 3, 4).reshape(b, s, h * m.v_head_dim)
+  return gemm(p["wo"], out)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   stack: tuple[int, ...] = (), dtype=None) -> dict:
+  m = cfg.mla
+  dtype = dtype or cfg.dtype
+  return {
+      "c_kv": jnp.zeros(stack + (batch, max_len, m.kv_lora_rank), dtype),
+      "k_rope": jnp.zeros(stack + (batch, max_len, m.qk_rope_dim), dtype),
+  }
+
+
+def mla_decode(p: dict, x: jax.Array, cache: dict, positions: jax.Array,
+               cfg: ModelConfig, cs: Constraint = _id_cs
+               ) -> tuple[jax.Array, dict]:
+  """Absorbed-form decode: score via the latent cache, rank-sized traffic.
+
+  scores = (q_nope^T W_uk) c + q_rope^T k_rope;  out = W_uv^T (sum p c).
+  """
+  m, h = cfg.mla, cfg.num_heads
+  b = x.shape[0]
+  q_nope, q_rope = _queries(p, x, cfg, positions[:, None])
+  c_new, kr_new = _latents(p, x, cfg, positions[:, None])
+  bidx = jnp.arange(b)
+  c_cache = cache["c_kv"].at[bidx, positions].set(
+      c_new[:, 0].astype(cache["c_kv"].dtype))
+  kr_cache = cache["k_rope"].at[bidx, positions].set(
+      kr_new[:, 0].astype(cache["k_rope"].dtype))
+
+  # absorb W_uk into the query: q_lat (b, h, r_kv)
+  w_uk = _as_w(p["w_uk"]).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+  q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+  sc = jnp.einsum("bhr,bsr->bhs", q_lat, c_cache.astype(jnp.float32))
+  sc += jnp.einsum("bhr,bsr->bhs", q_rope[:, 0].astype(jnp.float32),
+                   kr_cache.astype(jnp.float32))
+  sc *= 1.0 / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5)
+  mask = jnp.arange(c_cache.shape[1])[None, None, :] <= \
+      positions[:, None, None]
+  sc = jnp.where(mask, sc, NEG_INF)
+  pr = jax.nn.softmax(sc, axis=-1)
+  ctx = jnp.einsum("bhs,bsr->bhr", pr, c_cache.astype(jnp.float32))
+  # un-absorb into v-space: out_h = W_uv[:, h] ctx_h
+  w_uv = _as_w(p["w_uv"]).reshape(m.kv_lora_rank, h, m.v_head_dim)
+  out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
+  out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
+  y = gemm(p["wo"], out)
+  return y, {"c_kv": c_cache, "k_rope": kr_cache}
+
+
+def _as_w(leaf):
+  return leaf.product() if hasattr(leaf, "product") else leaf

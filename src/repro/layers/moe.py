@@ -1,0 +1,146 @@
+"""Mixture-of-Experts FFN with grouped capacity dispatch and EP sharding.
+
+Dispatch is *grouped* (MaxText-style): tokens are split into G groups
+aligned with the data-parallel sharding; each group routes and scatters
+into its own (E, C_local, D) buffer slice via a per-group cumsum. The
+buffer is laid out (G, E, C, D) and annotated P(data, model, None, None):
+the group dim stays data-local (no cross-shard scatter traffic) and the
+expert dim is expert-parallel over the model axis — XLA inserts the
+dispatch/return all-to-alls exactly at the data<->expert boundary.
+
+With G = 1 this degrades to plain global capacity dispatch (the CPU test
+path). Tokens past capacity are dropped (standard capacity-factor
+semantics). Shared experts (deepseek-style) are ordinary TP-sharded
+SwiGLU blocks.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import dense
+from repro.layers.common import MoEConfig, ModelConfig, gemm
+from repro.layers.ffn import init_swiglu, swiglu_forward
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+
+
+def init_moe(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
+             stack: tuple[int, ...] = ()) -> dict:
+  m = cfg.moe
+  d, fe = cfg.d_model, m.d_expert
+  ks = jax.random.split(key, 5)
+  p = {
+      # router is small and stays in fp32 (standard practice for stability)
+      "router": jax.random.normal(ks[0], stack + (d, m.num_experts),
+                                  jnp.float32) * (1.0 / d) ** 0.5,
+      "w_gate": dense(ks[1], d, fe, name=f"{layer_prefix}/expert_gate",
+                      dtype=cfg.dtype, stack=stack + (m.num_experts,)),
+      "w_up": dense(ks[2], d, fe, name=f"{layer_prefix}/expert_up",
+                    dtype=cfg.dtype, stack=stack + (m.num_experts,)),
+      "w_down": dense(ks[3], fe, d, name=f"{layer_prefix}/expert_down",
+                      dtype=cfg.dtype, stack=stack + (m.num_experts,)),
+  }
+  if m.num_shared:
+    p["shared"] = init_swiglu(ks[4], d, fe * m.num_shared,
+                              layer_prefix=f"{layer_prefix}/shared",
+                              dtype=cfg.dtype, stack=stack)
+  return p
+
+
+def _route(router_w: jax.Array, x: jax.Array, m: MoEConfig):
+  """Top-k routing. x: (T, D) -> weights (T, k), experts (T, k), aux."""
+  logits = jnp.einsum("td,de->te", x.astype(jnp.float32), router_w)
+  probs = jax.nn.softmax(logits, axis=-1)
+  topw, tope = jax.lax.top_k(probs, m.top_k)                # (T, k)
+  topw = topw / jnp.maximum(jnp.sum(topw, -1, keepdims=True), 1e-9)
+  # Switch-style load-balance loss: E * sum_e f_e * p_e
+  onehot = jax.nn.one_hot(tope[:, 0], m.num_experts)        # primary choice
+  f = jnp.mean(onehot, axis=0)
+  pbar = jnp.mean(probs, axis=0)
+  aux = m.num_experts * jnp.sum(f * pbar)
+  return topw, tope, aux
+
+
+def _dispatch_one_group(xt, topw, tope, m: MoEConfig, cap: int, dtype):
+  """Group-local scatter. xt: (T, D) -> buf (E, C, D), bookkeeping."""
+  t, d = xt.shape
+  flat_e = tope.reshape(-1)                                  # (T*k,)
+  onehot = jax.nn.one_hot(flat_e, m.num_experts, dtype=jnp.int32)
+  pos = jnp.cumsum(onehot, axis=0) * onehot                  # 1-based
+  pos_in_e = jnp.sum(pos, axis=-1) - 1                       # (T*k,)
+  keep = pos_in_e < cap
+  tok_idx = jnp.repeat(jnp.arange(t), m.top_k)
+  safe_pos = jnp.where(keep, pos_in_e, cap - 1)
+  buf = jnp.zeros((m.num_experts, cap, d), dtype)
+  buf = buf.at[flat_e, safe_pos].add(
+      jnp.where(keep[:, None], xt[tok_idx], 0).astype(dtype))
+  return buf, (flat_e, safe_pos, keep)
+
+
+def _combine_one_group(out_buf, bookkeeping, topw, t: int, d: int, dtype):
+  flat_e, safe_pos, keep = bookkeeping
+  k = topw.shape[-1]
+  gathered = out_buf[flat_e, safe_pos]                       # (T*k, D)
+  gathered = jnp.where(keep[:, None], gathered, 0)
+  combined = gathered * topw.reshape(-1)[:, None].astype(dtype)
+  return jnp.sum(combined.reshape(t, k, d), axis=1)
+
+
+def moe_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                cs: Constraint = _id_cs) -> tuple[jax.Array, jax.Array]:
+  """x: (b, s, d) -> (y, aux_loss)."""
+  m = cfg.moe
+  b, s, d = x.shape
+  t = b * s
+  g = max(1, m.dispatch_groups)
+  if t % g:
+    g = 1
+  tg = t // g
+  xg = x.reshape(g, tg, d)
+
+  topw, tope, aux = jax.vmap(
+      lambda xt: _route(p["router"], xt, m))(xg)
+  aux = jnp.mean(aux)
+
+  cap = int(m.capacity_factor * tg * m.top_k / m.num_experts)
+  cap = max(8, (cap + 7) // 8 * 8)
+
+  buf, bookkeeping = jax.vmap(
+      lambda xt, w, e: _dispatch_one_group(xt, w, e, m, cap, x.dtype)
+  )(xg, topw, tope)
+  buf = cs(buf, "gecd")                       # (G, E, C, D) -> dp x EP
+
+  # expert FFN, batched over (group, expert) dims; weights stacked (E, d, f)
+  from repro.layers.common import _acc_dtype
+  acc = _acc_dtype(x)
+  def expert_ffn(wg, wu, wd, xe):
+    gate = jnp.einsum("gecd,edf->gecf", xe, wg,
+                      preferred_element_type=acc).astype(x.dtype)
+    up = jnp.einsum("gecd,edf->gecf", xe, wu,
+                    preferred_element_type=acc).astype(x.dtype)
+    h = jax.nn.silu(gate.astype(jnp.float32)).astype(x.dtype) * up
+    h = cs(h, "gecf")
+    return jnp.einsum("gecf,efd->gecd", h, wd,
+                      preferred_element_type=acc).astype(x.dtype)
+
+  out_buf = expert_ffn(_w(p["w_gate"]), _w(p["w_up"]), _w(p["w_down"]), buf)
+  out_buf = cs(out_buf, "gecd")
+
+  y = jax.vmap(
+      lambda ob, bk, w: _combine_one_group(ob, bk, w, tg, d, x.dtype)
+  )(out_buf, bookkeeping, topw)
+  y = y.reshape(t, d)
+
+  if m.num_shared:
+    y = y + swiglu_forward(p["shared"], x.reshape(t, d), cs).reshape(t, d)
+  return y.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+def _w(leaf):
+  """Expert weights participate as stacked arrays; factored experts multiply
+  out per use (rank small so the matmul is cheap relative to dispatch)."""
+  return leaf.product() if hasattr(leaf, "product") else leaf

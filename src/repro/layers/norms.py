@@ -1,0 +1,31 @@
+"""Normalization layers (fp32 statistics, param-dtype output)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+  xf = x.astype(jnp.float32)
+  var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+  y = xf * jax.lax.rsqrt(var + eps)
+  return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+  xf = x.astype(jnp.float32)
+  mean = jnp.mean(xf, axis=-1, keepdims=True)
+  var = jnp.mean(jnp.square(xf - mean), axis=-1, keepdims=True)
+  y = (xf - mean) * jax.lax.rsqrt(var + eps)
+  return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(
+      x.dtype)
+
+
+def init_rms(d: int) -> jax.Array:
+  return jnp.ones((d,), jnp.float32)
+
+
+def init_ln(d: int) -> dict:
+  return {"scale": jnp.ones((d,), jnp.float32),
+          "bias": jnp.zeros((d,), jnp.float32)}

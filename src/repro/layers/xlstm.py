@@ -1,0 +1,263 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallelizable) and sLSTM (scalar
+memory, sequential recurrence) — Beck et al. 2024, arXiv:2405.04517.
+
+Mapping to the paper's recurrent/non-recurrent split (Appendix B.2):
+  * mLSTM q/k/v/gate projections are *non-recurrent* GEMMs (batchable
+    across time) -> group "nonrec";
+  * sLSTM recurrent kernels R_{z,i,f,o} are *recurrent* GEMMs -> group
+    "rec", regularized with lambda_rec exactly like the GRU's U matrices.
+
+mLSTM uses a chunkwise form (quadratic intra-chunk with stabilized
+exponential gating, recurrent matrix-memory state across chunks); sLSTM is
+a time scan. Decode for both carries O(1)-size state — hence xlstm-350m is
+a long_500k arch.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import dense
+from repro.layers.common import ModelConfig, gemm
+from repro.layers.norms import rms_norm
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+CHUNK = 256
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
+               stack: tuple[int, ...] = (), pf: float = 2.0) -> dict:
+  d = cfg.d_model
+  di = int(pf * d)
+  h = cfg.num_heads
+  ks = jax.random.split(key, 6)
+  return {
+      "up": dense(ks[0], d, 2 * di, name=f"{layer_prefix}/mlstm_up",
+                  dtype=cfg.dtype, stack=stack),
+      "qkv": dense(ks[1], di, 3 * di, name=f"{layer_prefix}/mlstm_qkv",
+                   dtype=cfg.dtype, stack=stack),
+      "ifg": dense(ks[2], di, 2 * h, name=f"{layer_prefix}/mlstm_ifg",
+                   dtype=cfg.dtype, stack=stack),   # input & forget gates
+      "down": dense(ks[3], di, d, name=f"{layer_prefix}/mlstm_down",
+                    dtype=cfg.dtype, stack=stack),
+      "norm": jnp.ones(stack + (di,), jnp.float32),
+  }
+
+
+def _mlstm_chunk(q, k, v, logf, logi, C0, n0, m0):
+  """One chunk of the stabilized chunkwise mLSTM.
+
+  q,k,v: (b,Q,h,p) f32; logf,logi: (b,Q,h); state C0 (b,h,p,p), n0 (b,h,p),
+  m0 (b,h). Returns y (b,Q,h,p) and new state.
+  """
+  b, Q, h, p = q.shape
+  F = jnp.cumsum(logf, axis=1)                      # (b,Q,h) within-chunk
+  # intra-chunk decay: D[i,j] = exp(F_i - F_j + logi_j), j <= i
+  dmat = F[:, :, None, :] - F[:, None, :, :] + logi[:, None, :, :]
+  tri = jnp.tril(jnp.ones((Q, Q), bool))
+  dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)   # (b,i,j,h)
+  # inter-chunk carry decay for position i: exp(F_i + m0)
+  carry_log = F + m0[:, None, :]                            # (b,Q,h)
+  m_new = jnp.maximum(jnp.max(dmat, axis=2), carry_log)     # (b,Q,h)
+  m_new = jnp.maximum(m_new, -1e30)
+
+  dexp = jnp.exp(dmat - m_new[:, :, None, :])               # (b,i,j,h)
+  s = jnp.einsum("bihp,bjhp->bijh", q, k) / (p ** 0.5)
+  w = s * dexp
+  y_intra = jnp.einsum("bijh,bjhp->bihp", w, v)
+  l_intra = jnp.einsum("bijh->bih", w)
+
+  cexp = jnp.exp(carry_log - m_new)                         # (b,Q,h)
+  y_inter = jnp.einsum("bihp,bhpt->biht", q, C0) / (p ** 0.5) * \
+      cexp[..., None]
+  l_inter = jnp.einsum("bihp,bhp->bih", q, n0) / (p ** 0.5) * cexp
+
+  norm = jnp.maximum(jnp.abs(l_intra + l_inter), jnp.exp(-m_new))
+  y = (y_intra + y_inter) / jnp.maximum(norm[..., None], 1e-30)
+
+  # state update to end of chunk
+  Ftot = F[:, -1]                                           # (b,h)
+  m_state = jnp.maximum(Ftot + m0, jnp.max(
+      Ftot[:, None] - F + logi, axis=1))
+  decay_tail = jnp.exp(Ftot[:, None] - F + logi - m_state[:, None])  # (b,Q,h)
+  kx = k * decay_tail[..., None]
+  C1 = C0 * jnp.exp(Ftot + m0 - m_state)[..., None, None] + \
+      jnp.einsum("bjhp,bjht->bhpt", kx, v)
+  n1 = n0 * jnp.exp(Ftot + m0 - m_state)[..., None] + \
+      jnp.einsum("bjhp->bhp", kx)
+  return y, C1, n1, m_state
+
+
+def mlstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                  cs: Constraint = _id_cs, pf: float = 2.0) -> jax.Array:
+  b, s, d = x.shape
+  di = int(pf * d)
+  h = cfg.num_heads
+  hd = di // h
+  up = gemm(p["up"], x)
+  xin, z = up[..., :di], up[..., di:]
+  qkv = gemm(p["qkv"], xin)
+  q, k, v = [t.reshape(b, s, h, hd).astype(jnp.float32)
+             for t in jnp.split(qkv, 3, axis=-1)]
+  gates = gemm(p["ifg"], xin).astype(jnp.float32).reshape(b, s, 2, h)
+  logi = gates[:, :, 0]
+  logf = jax.nn.log_sigmoid(gates[:, :, 1])
+
+  Q = min(CHUNK, s)
+  nc = s // Q
+  def chunk_step(carry, inp):
+    C0, n0, m0 = carry
+    qc, kc, vc, fc, ic = inp
+    y, C1, n1, m1 = _mlstm_chunk(qc, kc, vc, fc, ic, C0, n0, m0)
+    return (C1, n1, m1), y
+  resh = lambda t: t.reshape(b, nc, Q, *t.shape[2:]).transpose(
+      1, 0, *range(2, t.ndim + 1))
+  C0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+  n0 = jnp.zeros((b, h, hd), jnp.float32)
+  m0 = jnp.full((b, h), -1e30, jnp.float32)
+  _, ys = jax.lax.scan(chunk_step, (C0, n0, m0),
+                       (resh(q), resh(k), resh(v), resh(logf), resh(logi)))
+  y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, di)
+  y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["down"], y)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int,
+                     stack: tuple[int, ...] = (), pf: float = 2.0) -> dict:
+  di = int(pf * cfg.d_model)
+  h = cfg.num_heads
+  hd = di // h
+  return {
+      "C": jnp.zeros(stack + (batch, h, hd, hd), jnp.float32),
+      "n": jnp.zeros(stack + (batch, h, hd), jnp.float32),
+      "m": jnp.full(stack + (batch, h), -1e30, jnp.float32),
+  }
+
+
+def mlstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
+                 cs: Constraint = _id_cs, pf: float = 2.0
+                 ) -> tuple[jax.Array, dict]:
+  b = x.shape[0]
+  d = cfg.d_model
+  di = int(pf * d)
+  h = cfg.num_heads
+  hd = di // h
+  up = gemm(p["up"], x)
+  xin, z = up[..., :di], up[..., di:]
+  qkv = gemm(p["qkv"], xin)
+  q, k, v = [t.reshape(b, h, hd).astype(jnp.float32)
+             for t in jnp.split(qkv[:, 0], 3, axis=-1)]
+  gates = gemm(p["ifg"], xin).astype(jnp.float32).reshape(b, 2, h)
+  logi, logf = gates[:, 0], jax.nn.log_sigmoid(gates[:, 1])
+  m1 = jnp.maximum(logf + state["m"], logi)
+  fe = jnp.exp(logf + state["m"] - m1)
+  ie = jnp.exp(logi - m1)
+  C1 = state["C"] * fe[..., None, None] + \
+      ie[..., None, None] * jnp.einsum("bhp,bht->bhpt", k, v)
+  n1 = state["n"] * fe[..., None] + ie[..., None] * k
+  num = jnp.einsum("bhp,bhpt->bht", q, C1) / (hd ** 0.5)
+  den = jnp.abs(jnp.einsum("bhp,bhp->bh", q, n1)) / (hd ** 0.5)
+  y = num / jnp.maximum(den, jnp.exp(-m1))[..., None]
+  y = y.reshape(b, 1, di).astype(x.dtype) * \
+      jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["down"], y), {"C": C1, "n": n1, "m": m1}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
+               stack: tuple[int, ...] = ()) -> dict:
+  d = cfg.d_model
+  h = cfg.num_heads
+  hd = d // h
+  ks = jax.random.split(key, 3)
+  return {
+      # non-recurrent: one GEMM for all four gates (paper's W_cat)
+      "wx": dense(ks[0], d, 4 * d, name=f"{layer_prefix}/slstm_nonrec",
+                  group="nonrec", dtype=cfg.dtype, stack=stack),
+      # recurrent: block-diagonal per head, all four gates (paper's U_cat)
+      "rh": dense(ks[1], hd, 4 * hd, name=f"{layer_prefix}/slstm_rec",
+                  group="rec", dtype=cfg.dtype, stack=stack + (h,)),
+      "bias": jnp.zeros(stack + (4 * d,), jnp.float32),
+      "out": dense(ks[2], d, d, name=f"{layer_prefix}/slstm_out",
+                   dtype=cfg.dtype, stack=stack),
+      "norm": jnp.ones(stack + (d,), jnp.float32),
+  }
+
+
+def _slstm_cell(xg, hcnm, rh, h_, hd):
+  """One sLSTM time step. xg: (b, 4d) precomputed Wx; state tuple."""
+  hprev, c, n, m = hcnm
+  b = hprev.shape[0]
+  hh = hprev.reshape(b, h_, hd)
+  rg = jnp.einsum("bhp,hpq->bhq", hh.astype(jnp.float32),
+                  rh.astype(jnp.float32)).reshape(b, 4 * h_ * hd)
+  g = xg.astype(jnp.float32) + rg
+  gz, gi, gf, go = jnp.split(g.reshape(b, 4, h_ * hd), 4, axis=1)
+  gz, gi, gf, go = gz[:, 0], gi[:, 0], gf[:, 0], go[:, 0]
+  z = jnp.tanh(gz)
+  logi = gi
+  logf = jax.nn.log_sigmoid(gf)
+  o = jax.nn.sigmoid(go)
+  m1 = jnp.maximum(logf + m, logi)
+  ie = jnp.exp(logi - m1)
+  fe = jnp.exp(logf + m - m1)
+  c1 = fe * c + ie * z
+  n1 = fe * n + ie
+  h1 = o * c1 / jnp.maximum(n1, 1e-6)
+  return (h1, c1, n1, m1)
+
+
+def slstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
+                  cs: Constraint = _id_cs) -> jax.Array:
+  b, s, d = x.shape
+  h_ = cfg.num_heads
+  hd = d // h_
+  # non-recurrent GEMM batched across time (paper §4's Wx batching)
+  xg = gemm(p["wx"], x) + p["bias"].astype(x.dtype)
+  rh = p["rh"].product() if hasattr(p["rh"], "product") else p["rh"]
+  state = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
+           jnp.zeros((b, d), jnp.float32), jnp.full((b, d), -1e30,
+                                                    jnp.float32))
+  def step(carry, xt):
+    new = _slstm_cell(xt, carry, rh, h_, hd)
+    return new, new[0]
+  _, hs = jax.lax.scan(step, state, xg.transpose(1, 0, 2))
+  y = hs.transpose(1, 0, 2).astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["out"], y)
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int,
+                     stack: tuple[int, ...] = ()) -> dict:
+  d = cfg.d_model
+  z = lambda: jnp.zeros(stack + (batch, d), jnp.float32)
+  return {"h": z(), "c": z(), "n": z(),
+          "m": jnp.full(stack + (batch, d), -1e30, jnp.float32)}
+
+
+def slstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
+                 cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+  b = x.shape[0]
+  d = cfg.d_model
+  h_ = cfg.num_heads
+  hd = d // h_
+  xg = (gemm(p["wx"], x) + p["bias"].astype(x.dtype))[:, 0]
+  rh = p["rh"].product() if hasattr(p["rh"], "product") else p["rh"]
+  new = _slstm_cell(xg, (state["h"], state["c"], state["n"], state["m"]),
+                    rh, h_, hd)
+  y = new[0][:, None, :].astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["out"], y), {"h": new[0], "c": new[1], "n": new[2],
+                             "m": new[3]}

@@ -1,0 +1,76 @@
+"""Unified model API — one dispatch surface over the model zoo.
+
+Every family exposes:
+  init(key, cfg)                          -> params pytree
+  loss_fn(params, batch, cfg, cs)         -> (scalar loss, metrics dict)
+  init_decode_state(cfg, batch, max_len)  -> decode-state pytree (if decodable)
+  decode_step(params, state, token/feat, positions, cfg, cs)
+                                          -> (logits, new state)
+
+The training loop, serving engine, dry-run, and benchmarks all go through
+`get_model(cfg)` so an `--arch <id>` flag is the only thing that changes
+between runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import ModelConfig
+from repro.models import deepspeech, transformer, whisper, xlstm_model, zamba
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+  family: str
+  init: Callable
+  loss_fn: Callable
+  forward: Optional[Callable] = None
+  init_decode_state: Optional[Callable] = None
+  decode_step: Optional[Callable] = None
+  # encoder for enc-dec families (used by serving to fill the memory)
+  encode: Optional[Callable] = None
+
+  @property
+  def decodable(self) -> bool:
+    return self.decode_step is not None
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+  fam = cfg.family
+  if fam == "transformer":
+    return ModelApi(
+        family=fam, init=transformer.init_lm, loss_fn=transformer.loss_fn,
+        forward=transformer.forward,
+        init_decode_state=transformer.init_decode_state,
+        decode_step=transformer.decode_step)
+  if fam == "zamba":
+    return ModelApi(
+        family=fam, init=zamba.init_lm, loss_fn=zamba.loss_fn,
+        forward=zamba.forward, init_decode_state=zamba.init_decode_state,
+        decode_step=zamba.decode_step)
+  if fam == "xlstm":
+    return ModelApi(
+        family=fam, init=xlstm_model.init_lm, loss_fn=xlstm_model.loss_fn,
+        forward=xlstm_model.forward,
+        init_decode_state=xlstm_model.init_decode_state,
+        decode_step=xlstm_model.decode_step)
+  if fam == "whisper":
+    return ModelApi(
+        family=fam, init=whisper.init_model, loss_fn=whisper.loss_fn,
+        forward=None, init_decode_state=whisper.init_decode_state,
+        decode_step=whisper.decode_step, encode=whisper.encode)
+  if fam == "deepspeech":
+    return ModelApi(
+        family=fam, init=deepspeech.init_model, loss_fn=deepspeech.loss_fn,
+        forward=deepspeech.forward,
+        init_decode_state=lambda cfg, batch, max_len=None:
+            deepspeech.init_decode_state(cfg, batch),
+        decode_step=deepspeech.decode_step)
+  raise ValueError(f"unknown model family: {fam}")

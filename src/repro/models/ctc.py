@@ -1,0 +1,83 @@
+"""CTC loss in pure JAX (log-space forward algorithm via lax.scan).
+
+The DS2 reproduction's loss. Blank id = 0. Handles padded logit frames and
+padded label sequences via lengths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def ctc_loss(log_probs: jax.Array, logit_lengths: jax.Array,
+             labels: jax.Array, label_lengths: jax.Array,
+             blank: int = 0) -> jax.Array:
+  """Mean negative log likelihood.
+
+  log_probs: (b, t, v) log-softmaxed; logit_lengths: (b,);
+  labels: (b, l) padded with anything; label_lengths: (b,).
+  """
+  b, t, v = log_probs.shape
+  l = labels.shape[1]
+  s = 2 * l + 1   # extended sequence: blank label blank label ... blank
+
+  # extended labels: ext[2i] = blank, ext[2i+1] = labels[i]
+  ext = jnp.full((b, s), blank, jnp.int32)
+  ext = ext.at[:, 1::2].set(labels.astype(jnp.int32))
+  ext_valid = jnp.arange(s)[None, :] < (2 * label_lengths[:, None] + 1)
+
+  # transitions: from j-1 always; from j-2 only if ext[j] != blank and
+  # ext[j] != ext[j-2]
+  ext_prev2 = jnp.concatenate([jnp.full((b, 2), -1, jnp.int32),
+                               ext[:, :-2]], axis=1)
+  allow_skip = (ext != blank) & (ext != ext_prev2)
+
+  alpha0 = jnp.full((b, s), NEG)
+  alpha0 = alpha0.at[:, 0].set(log_probs[:, 0, blank])
+  first_lab = jnp.take_along_axis(
+      log_probs[:, 0], ext[:, 1:2], axis=1)[:, 0]
+  alpha0 = alpha0.at[:, 1].set(jnp.where(label_lengths > 0, first_lab, NEG))
+
+  def step(alpha, inp):
+    lp_t, t_idx = inp                               # (b, v), scalar
+    stay = alpha
+    prev1 = jnp.concatenate([jnp.full((b, 1), NEG), alpha[:, :-1]], axis=1)
+    prev2 = jnp.concatenate([jnp.full((b, 2), NEG), alpha[:, :-2]], axis=1)
+    prev2 = jnp.where(allow_skip, prev2, NEG)
+    merged = jnp.logaddexp(jnp.logaddexp(stay, prev1), prev2)
+    emit = jnp.take_along_axis(lp_t, ext, axis=1)   # (b, s)
+    new = merged + emit
+    new = jnp.where(ext_valid, new, NEG)
+    # frames beyond logit_lengths: freeze alpha
+    active = (t_idx < logit_lengths)[:, None]
+    new = jnp.where(active, new, alpha)
+    return new, None
+
+  alpha, _ = jax.lax.scan(
+      step, alpha0, (log_probs.transpose(1, 0, 2)[1:], jnp.arange(1, t)))
+
+  # final: alpha at last two valid extended positions
+  last = 2 * label_lengths                          # blank after last label
+  a_last = jnp.take_along_axis(alpha, last[:, None], axis=1)[:, 0]
+  a_prev = jnp.take_along_axis(
+      alpha, jnp.maximum(last - 1, 0)[:, None], axis=1)[:, 0]
+  a_prev = jnp.where(label_lengths > 0, a_prev, NEG)
+  ll = jnp.logaddexp(a_last, a_prev)
+  return -jnp.mean(ll)
+
+
+def ctc_greedy_decode(log_probs: jax.Array, logit_lengths: jax.Array,
+                      blank: int = 0) -> jax.Array:
+  """Best-path decode: argmax per frame, collapse repeats, drop blanks.
+  Returns (b, t) sequences padded with -1."""
+  b, t, _ = log_probs.shape
+  path = jnp.argmax(log_probs, axis=-1)             # (b, t)
+  prev = jnp.concatenate([jnp.full((b, 1), -1), path[:, :-1]], axis=1)
+  frame_idx = jnp.arange(t)[None, :]
+  keep = (path != blank) & (path != prev) & (frame_idx < logit_lengths[:, None])
+  # stable compaction: sort by (not keep, frame index)
+  order = jnp.argsort(jnp.where(keep, frame_idx, t + frame_idx), axis=1)
+  vals = jnp.take_along_axis(jnp.where(keep, path, -1), order, axis=1)
+  return vals

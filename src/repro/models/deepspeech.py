@@ -1,0 +1,129 @@
+"""Deep Speech 2 acoustic model — the paper's baseline architecture.
+
+Forward-only GRU DS2 (Amodei et al. 2016) with the paper's Appendix-B
+modifications: mel-80 features (B.3), two 2D convolutions, *growing* GRU
+sizes 768/1024/1280 (B.1), fully connected 1536, CTC output. All GRU
+weights use the partially-joint factorization (B.2) so the trace-norm
+recipe applies at the paper's granularity; the FC and output GEMMs are
+factored as `nonrec`.
+
+The reduced configs used for CPU training in the reproduction keep the
+same growing-size structure at smaller dims.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import dense
+from repro.layers.common import ModelConfig, gemm
+from repro.layers.gru import gru_forward, init_gru
+from repro.models.ctc import ctc_loss
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+
+
+def conv_out_len(t: int, k: int, stride: int) -> int:
+  return (t + stride - 1) // stride  # SAME padding
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
+  ks = jax.random.split(key, 8)
+  ch = cfg.conv_channels
+  # conv1: (time 11 x freq 41), stride (2, 2); conv2: (11 x 21), stride (t, 2)
+  conv1 = jax.random.normal(ks[0], (11, 41, 1, ch), jnp.float32) * 0.05
+  conv2 = jax.random.normal(ks[1], (11, 21, ch, ch), jnp.float32) * 0.05
+  freq_after = ((cfg.feat_dim + 1) // 2 + 1) // 2
+  gru_in = freq_after * ch
+  grus = {}
+  prev = gru_in
+  for i, h in enumerate(cfg.gru_dims):
+    grus[f"gru{i}"] = init_gru(ks[2 + i], prev, h, layer_prefix=f"gru{i}",
+                               dtype=cfg.dtype)
+    prev = h
+  return {
+      "conv1": conv1.astype(cfg.dtype),
+      "conv2": conv2.astype(cfg.dtype),
+      "grus": grus,
+      "fc": dense(ks[6], prev, cfg.fc_dim, name="fc", group="nonrec",
+                  dtype=cfg.dtype),
+      "out": dense(ks[7], cfg.fc_dim, cfg.vocab_size, name="out",
+                   group="nonrec", dtype=cfg.dtype),
+  }
+
+
+def _frontend(params: dict, feats: jax.Array, cfg: ModelConfig
+              ) -> jax.Array:
+  """feats (b, t, f) -> (b, t', gru_in). Two strided 2D convs + ReLU."""
+  x = feats[..., None]                                   # (b, t, f, 1)
+  x = jax.lax.conv_general_dilated(
+      x.astype(cfg.dtype), params["conv1"],
+      window_strides=(2, 2), padding="SAME",
+      dimension_numbers=("NHWC", "HWIO", "NHWC"))
+  x = jax.nn.relu(x.astype(jnp.float32)).astype(cfg.dtype)
+  x = jax.lax.conv_general_dilated(
+      x, params["conv2"], window_strides=(cfg.time_stride, 2),
+      padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+  x = jax.nn.relu(x.astype(jnp.float32)).astype(cfg.dtype)
+  b, t, f, c = x.shape
+  return x.reshape(b, t, f * c)
+
+
+def forward(params: dict, feats: jax.Array, cfg: ModelConfig,
+            cs: Constraint = _id_cs) -> jax.Array:
+  """feats (b, t, feat_dim) -> log_probs (b, t', vocab)."""
+  x = _frontend(params, feats, cfg)
+  for i in range(len(cfg.gru_dims)):
+    x = gru_forward(params["grus"][f"gru{i}"], x, cs)
+  x = jax.nn.relu(gemm(params["fc"], x).astype(jnp.float32)).astype(x.dtype)
+  logits = gemm(params["out"], x)
+  return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+
+
+def output_lengths(input_lengths: jax.Array, cfg: ModelConfig) -> jax.Array:
+  t1 = (input_lengths + 1) // 2
+  return (t1 + cfg.time_stride - 1) // cfg.time_stride
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            cs: Constraint = _id_cs):
+  """batch: feats (b,t,f), feat_lengths (b,), labels (b,l),
+  label_lengths (b,)."""
+  log_probs = forward(params, batch["feats"], cfg, cs)
+  out_lens = output_lengths(batch["feat_lengths"], cfg)
+  loss = ctc_loss(log_probs, out_lens, batch["labels"],
+                  batch["label_lengths"])
+  return loss, {"ctc": loss}
+
+
+# -- streaming inference (the paper's embedded deployment mode) --------------
+
+def init_decode_state(cfg: ModelConfig, batch: int) -> dict:
+  """Streaming GRU hidden states (the conv frontend is applied on small
+  feature chunks by the serving loop)."""
+  return {f"gru{i}": jnp.zeros((batch, h), cfg.dtype)
+          for i, h in enumerate(cfg.gru_dims)}
+
+
+def decode_step(params: dict, state: dict, x_t: jax.Array,
+                cfg: ModelConfig, cs: Constraint = _id_cs
+                ) -> tuple[jax.Array, dict]:
+  """One post-frontend frame x_t (b, gru_in) -> (log_probs (b, v), state).
+
+  This is the paper's low-batch regime: each GRU step is a skinny GEMM
+  against the recurrent matrix — the workload kernels/decode_matvec and
+  kernels/gru_cell target.
+  """
+  from repro.layers.gru import gru_decode
+  new_state = {}
+  h = x_t
+  for i in range(len(cfg.gru_dims)):
+    hi = gru_decode(params["grus"][f"gru{i}"], h, state[f"gru{i}"], cs)
+    new_state[f"gru{i}"] = hi
+    h = hi
+  h = jax.nn.relu(gemm(params["fc"], h).astype(jnp.float32)).astype(h.dtype)
+  logits = gemm(params["out"], h)
+  return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1), new_state

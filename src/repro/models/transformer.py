@@ -1,0 +1,217 @@
+"""Decoder-only transformer LM, scan-over-layers, covering the dense GQA
+archs (chameleon/llama3/glm4/stablelm/qwen3) and the DeepSeek family
+(MLA attention + shared/routed MoE + optional MTP head).
+
+Layer stacks are homogeneous scans over stacked params (MaxText-style):
+deepseek configs get two stacks (leading dense-FFN layers, then MoE
+layers). Remat policy wraps the scanned body.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_lib
+from repro.layers import mla as mla_lib
+from repro.layers import moe as moe_lib
+from repro.layers.common import ModelConfig, gemm
+from repro.layers.embedding import embed, init_embedding, logits as lm_logits
+from repro.layers.ffn import init_swiglu, swiglu_forward
+from repro.layers.norms import init_rms, rms_norm
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+
+
+def _init_layer(key, cfg: ModelConfig, *, use_moe: bool):
+  ks = jax.random.split(key, 2)
+  p = {"ln1": init_rms(cfg.d_model), "ln2": init_rms(cfg.d_model)}
+  if cfg.mla is not None:
+    p["attn"] = mla_lib.init_mla(ks[0], cfg, layer_prefix="layers")
+  else:
+    p["attn"] = attn_lib.init_attention(ks[0], cfg, layer_prefix="layers")
+  if use_moe:
+    p["moe"] = moe_lib.init_moe(ks[1], cfg, layer_prefix="layers")
+  else:
+    p["ffn"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff,
+                           layer_prefix="layers", dtype=cfg.dtype)
+  return p
+
+
+def _stack_init(key, cfg: ModelConfig, n: int, *, use_moe: bool):
+  keys = jax.random.split(key, n)
+  return jax.vmap(functools.partial(_init_layer, cfg=cfg, use_moe=use_moe)
+                  )(keys)
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
+  ks = jax.random.split(key, 4)
+  n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.num_layers
+  n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+  p = {
+      "embedding": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                  dtype=cfg.dtype, tie=cfg.tie_embeddings),
+      "final_norm": init_rms(cfg.d_model),
+  }
+  if n_dense:
+    p["dense_layers"] = _stack_init(ks[1], cfg, n_dense, use_moe=False)
+  if n_moe:
+    p["moe_layers"] = _stack_init(ks[2], cfg, n_moe, use_moe=True)
+  if cfg.mtp:
+    kp, kl = jax.random.split(ks[3])
+    from repro.core.factored import dense as dense_init
+    p["mtp"] = {
+        "proj": dense_init(kp, 2 * cfg.d_model, cfg.d_model,
+                           name="mtp/proj", dtype=cfg.dtype),
+        "layer": _init_layer(kl, cfg, use_moe=False),
+        "norm": init_rms(cfg.d_model),
+    }
+  return p
+
+
+def _layer_fwd(x, lp, cfg: ModelConfig, cs: Constraint, *, use_moe: bool):
+  # gather the FSDP-sharded layer slice INSIDE the remat region, so the
+  # backward pass re-gathers instead of keeping every layer live
+  lp = cs(lp, "layer_params")
+  h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+  if cfg.mla is not None:
+    h = mla_lib.mla_forward(lp["attn"], h, cfg, cs)
+  else:
+    h = attn_lib.attention_forward(lp["attn"], h, cfg, cs)
+  x = cs(x + h, "bsd")
+  h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+  if use_moe:
+    h, aux = moe_lib.moe_forward(lp["moe"], h, cfg, cs)
+  else:
+    h, aux = swiglu_forward(lp["ffn"], h, cs), jnp.zeros((), jnp.float32)
+  return cs(x + h, "bsd"), aux
+
+
+def _scan_stack(x, stack, cfg: ModelConfig, cs: Constraint, *,
+                use_moe: bool):
+  body = functools.partial(_layer_fwd, cfg=cfg, cs=cs, use_moe=use_moe)
+  if cfg.remat == "full":
+    body = jax.remat(body)
+  elif cfg.remat == "dots":
+    body = jax.remat(
+        body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+  def scan_body(h, lp):
+    h, aux = body(h, lp)
+    return h, aux
+  x, auxes = jax.lax.scan(scan_body, x, stack)
+  return x, jnp.sum(auxes)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            cs: Constraint = _id_cs, *, last_only: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+  """tokens (b, s) -> (logits (b, s, v), moe aux loss).
+
+  last_only=True (serving prefill) narrows to the final position before
+  the vocab projection, so the (b, s, v) logits tensor never exists."""
+  x = cs(embed(params["embedding"], tokens), "bsd")
+  aux = jnp.zeros((), jnp.float32)
+  if "dense_layers" in params:
+    x, a = _scan_stack(x, params["dense_layers"], cfg, cs, use_moe=False)
+    aux += a
+  if "moe_layers" in params:
+    x, a = _scan_stack(x, params["moe_layers"], cfg, cs, use_moe=True)
+    aux += a
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  if last_only:
+    x = x[:, -1:]
+  return cs(lm_logits(params["embedding"], x), "bsv"), aux
+
+
+def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
+  lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+  ll = jnp.take_along_axis(lp, targets[..., None].astype(jnp.int32),
+                           axis=-1)[..., 0]
+  return -jnp.mean(ll)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+  logits, aux = forward(params, batch["tokens"], cfg, cs)
+  loss = _xent(logits, batch["targets"])
+  metrics = {"xent": loss, "moe_aux": aux}
+  total = loss
+  if cfg.moe:
+    total = total + cfg.moe.router_aux_weight * aux
+  if cfg.mtp and "mtp" in params:
+    # Multi-token prediction (deepseek-v3): predict t+2 from [h_t; emb_{t+1}].
+    # Keep the full seq length (attention blocks need s % block == 0); the
+    # roll wraps the last position, which the target slice drops.
+    x = embed(params["embedding"], batch["tokens"])
+    h = jnp.concatenate([x, jnp.roll(x, -1, axis=1)], axis=-1)
+    h = gemm(params["mtp"]["proj"], h)
+    h, _ = _layer_fwd(h, params["mtp"]["layer"], cfg, cs, use_moe=False)
+    h = rms_norm(h, params["mtp"]["norm"], cfg.norm_eps)
+    mtp_logits = lm_logits(params["embedding"], h)
+    if batch["targets"].shape[1] > 2:
+      mtp_loss = _xent(mtp_logits[:, :-2], batch["targets"][:, 2:])
+    else:
+      mtp_loss = _xent(mtp_logits[:, -1:], batch["targets"][:, -1:])
+    metrics["mtp"] = mtp_loss
+    total = total + 0.3 * mtp_loss
+  return total, metrics
+
+
+# ----------------------------------------------------------------------------
+# Decode.
+# ----------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=None) -> dict:
+  n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.num_layers
+  n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+  mk = (mla_lib.init_mla_cache if cfg.mla is not None
+        else attn_lib.init_kv_cache)
+  state = {}
+  if n_dense:
+    state["dense"] = mk(cfg, batch, max_len, stack=(n_dense,),
+                        dtype=cache_dtype)
+  if n_moe:
+    state["moe"] = mk(cfg, batch, max_len, stack=(n_moe,), dtype=cache_dtype)
+  return state
+
+
+def _decode_stack(x, stack, cache, positions, cfg: ModelConfig,
+                  cs: Constraint, *, use_moe: bool):
+  dec = (mla_lib.mla_decode if cfg.mla is not None
+         else attn_lib.attention_decode)
+  def body(h, xs):
+    lp, lc = xs
+    lp = cs(lp, "layer_params")
+    a = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    a, new_c = dec(lp["attn"], a, lc, positions, cfg, cs)
+    h = h + a
+    f = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if use_moe:
+      f, _ = moe_lib.moe_forward(lp["moe"], f, cfg, cs)
+    else:
+      f = swiglu_forward(lp["ffn"], f, cs)
+    return h + f, new_c
+  x, new_cache = jax.lax.scan(body, x, (stack, cache))
+  return x, new_cache
+
+
+def decode_step(params: dict, state: dict, token: jax.Array,
+                positions: jax.Array, cfg: ModelConfig,
+                cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+  """token (b, 1), positions (b,) -> (logits (b, 1, v), new state)."""
+  x = cs(embed(params["embedding"], token), "bsd")
+  new_state = dict(state)
+  if "dense_layers" in params:
+    x, new_state["dense"] = _decode_stack(
+        x, params["dense_layers"], state["dense"], positions, cfg, cs,
+        use_moe=False)
+  if "moe_layers" in params:
+    x, new_state["moe"] = _decode_stack(
+        x, params["moe_layers"], state["moe"], positions, cfg, cs,
+        use_moe=True)
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  return lm_logits(params["embedding"], x), new_state

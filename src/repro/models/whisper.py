@@ -1,0 +1,236 @@
+"""Whisper-style encoder-decoder (audio backbone only; conv frontend is a
+stub per the brief — `input_specs()` feeds precomputed frame embeddings).
+
+Encoder: bidirectional self-attention + GELU FFN over (b, frames, d).
+Decoder: causal self-attention (KV cache on decode) + cross-attention to
+encoder output + GELU FFN. Sinusoidal positions on the encoder, learned on
+the decoder (matching Radford et al. 2022 structurally).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import dense
+from repro.layers import attention as attn_lib
+from repro.layers.common import ModelConfig, gemm
+from repro.layers.embedding import embed, init_embedding, logits as lm_logits
+from repro.layers.ffn import gelu_ffn_forward, init_gelu_ffn
+from repro.layers.norms import init_ln, layer_norm
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+NEG_INF = -2.0 ** 30
+
+
+def _sinusoid(length: int, d: int) -> jax.Array:
+  pos = jnp.arange(length)[:, None].astype(jnp.float32)
+  dim = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+  inv = jnp.exp(-jnp.log(10000.0) * dim / (d // 2))
+  ang = pos * inv
+  return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _init_xattn(key, cfg: ModelConfig, prefix: str):
+  d, h = cfg.d_model, cfg.num_heads
+  hd = cfg.resolved_head_dim
+  ks = jax.random.split(key, 4)
+  return {
+      "wq": dense(ks[0], d, h * hd, name=f"{prefix}/xattn_q",
+                  dtype=cfg.dtype),
+      "wk": dense(ks[1], d, h * hd, name=f"{prefix}/xattn_k",
+                  dtype=cfg.dtype),
+      "wv": dense(ks[2], d, h * hd, name=f"{prefix}/xattn_v",
+                  dtype=cfg.dtype),
+      "wo": dense(ks[3], h * hd, d, name=f"{prefix}/xattn_o",
+                  dtype=cfg.dtype),
+  }
+
+
+def _xattn(p, x, mem, cfg, cs):
+  """Cross attention: queries from x (b,s,d), keys/values from mem."""
+  b, s, _ = x.shape
+  h, hd = cfg.num_heads, cfg.resolved_head_dim
+  q = gemm(p["wq"], x).reshape(b, s, h, hd)
+  k = gemm(p["wk"], mem).reshape(b, mem.shape[1], h, hd)
+  v = gemm(p["wv"], mem).reshape(b, mem.shape[1], h, hd)
+  sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                  k.astype(jnp.float32)) / (hd ** 0.5)
+  pr = jax.nn.softmax(sc, axis=-1)
+  o = jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(jnp.float32))
+  return gemm(p["wo"], o.reshape(b, s, h * hd).astype(x.dtype))
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+  ks = jax.random.split(key, 2)
+  return {
+      "ln1": init_ln(cfg.d_model),
+      "attn": attn_lib.init_attention(ks[0], cfg, layer_prefix="enc"),
+      "ln2": init_ln(cfg.d_model),
+      "ffn": init_gelu_ffn(ks[1], cfg.d_model, cfg.d_ff, layer_prefix="enc",
+                           dtype=cfg.dtype),
+  }
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+  ks = jax.random.split(key, 3)
+  return {
+      "ln1": init_ln(cfg.d_model),
+      "attn": attn_lib.init_attention(ks[0], cfg, layer_prefix="dec"),
+      "ln2": init_ln(cfg.d_model),
+      "xattn": _init_xattn(ks[1], cfg, "dec"),
+      "ln3": init_ln(cfg.d_model),
+      "ffn": init_gelu_ffn(ks[2], cfg.d_model, cfg.d_ff, layer_prefix="dec",
+                           dtype=cfg.dtype),
+  }
+
+
+def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
+  ks = jax.random.split(key, 4)
+  enc_n = cfg.encoder_layers or cfg.num_layers
+  return {
+      "embedding": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                  dtype=cfg.dtype, tie=True),
+      "pos_dec": jax.random.normal(ks[3], (cfg.max_source_positions * 32,
+                                           cfg.d_model), jnp.float32).astype(
+          cfg.dtype) * 0.01,
+      "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+          jax.random.split(ks[1], enc_n)),
+      "enc_ln": init_ln(cfg.d_model),
+      "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+          jax.random.split(ks[2], cfg.num_layers)),
+      "dec_ln": init_ln(cfg.d_model),
+  }
+
+
+def _bidir_attention(p, x, cfg, cs):
+  """Non-causal full self-attention via the flash path with mask disabled:
+  encoder sequences can be long (prefill_32k), so reuse blockwise attention
+  with an all-visible mask by passing positions = max."""
+  b, s, _ = x.shape
+  h, hd = cfg.num_heads, cfg.resolved_head_dim
+  q = gemm(p["wq"], x).reshape(b, s, h, hd)
+  k = gemm(p["wk"], x).reshape(b, s, h, hd)
+  v = gemm(p["wv"], x).reshape(b, s, h, hd)
+  # blockwise non-causal: scan over kv blocks with online softmax
+  bkv = min(cfg.attn_block_kv, s)
+  nk = s // bkv
+  kb = k.reshape(b, nk, bkv, h, hd)
+  vb = v.reshape(b, nk, bkv, h, hd)
+  scale = 1.0 / (hd ** 0.5)
+  m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+  l0 = jnp.zeros((b, h, s), jnp.float32)
+  o0 = jnp.zeros((b, s, h, hd), jnp.float32)
+  def kv_step2(carry, xs):
+    m, l, o = carry
+    kj, vj = xs
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    kj.astype(jnp.float32)) * scale
+    m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+    pexp = jnp.exp(sc - m_new[..., None])
+    alpha = jnp.exp(m - m_new)
+    l = l * alpha + jnp.sum(pexp, axis=-1)
+    o = o * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+        "bhqk,bkhd->bqhd", pexp, vj.astype(jnp.float32))
+    return (m_new, l, o), None
+  (m, l, o), _ = jax.lax.scan(kv_step2, (m0, l0, o0),
+                              (kb.transpose(1, 0, 2, 3, 4),
+                               vb.transpose(1, 0, 2, 3, 4)))
+  o = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+  return gemm(p["wo"], o.reshape(b, s, h * hd).astype(x.dtype))
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig,
+           cs: Constraint = _id_cs) -> jax.Array:
+  b, t, d = frames.shape
+  x = frames.astype(cfg.dtype) + _sinusoid(t, d).astype(cfg.dtype)[None]
+  x = cs(x, "bsd")
+  def scan_body(h, lp):
+    g = functools.partial(_enc_block, cfg=cfg, cs=cs)
+    if cfg.remat == "full":
+      g = jax.remat(g)
+    return cs(g(h, lp), "bsd"), None
+  x, _ = jax.lax.scan(scan_body, x, params["enc_layers"])
+  return layer_norm(x, params["enc_ln"]["scale"], params["enc_ln"]["bias"],
+                    cfg.norm_eps)
+
+
+def _enc_block(h, lp, cfg, cs):
+  lp = cs(lp, "layer_params")       # gather inside the remat region
+  a = layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+  h = h + _bidir_attention(lp["attn"], a, cfg, cs)
+  f = layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+  return h + gelu_ffn_forward(lp["ffn"], f, cs)
+
+
+def _dec_block(h, lp, mem, cfg, cs):
+  lp = cs(lp, "layer_params")       # gather inside the remat region
+  a = layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+  h = h + attn_lib.attention_forward(lp["attn"], a, cfg, cs)
+  a = layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+  h = h + _xattn(lp["xattn"], a, mem, cfg, cs)
+  f = layer_norm(h, lp["ln3"]["scale"], lp["ln3"]["bias"], cfg.norm_eps)
+  return h + gelu_ffn_forward(lp["ffn"], f, cs)
+
+
+def decode_train(params: dict, tokens: jax.Array, mem: jax.Array,
+                 cfg: ModelConfig, cs: Constraint = _id_cs) -> jax.Array:
+  b, s = tokens.shape
+  x = embed(params["embedding"], tokens)
+  x = x + params["pos_dec"][:s][None].astype(x.dtype)
+  def scan_body(h, lp):
+    g = functools.partial(_dec_block, mem=mem, cfg=cfg, cs=cs)
+    if cfg.remat == "full":
+      g = jax.remat(g)
+    return cs(g(h, lp), "bsd"), None
+  x, _ = jax.lax.scan(scan_body, x, params["dec_layers"])
+  x = layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"],
+                 cfg.norm_eps)
+  return lm_logits(params["embedding"], x)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
+            cs: Constraint = _id_cs):
+  mem = encode(params, batch["frames"], cfg, cs)
+  logits = decode_train(params, batch["tokens"], mem, cfg, cs)
+  lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+  ll = jnp.take_along_axis(lp, batch["targets"][..., None].astype(jnp.int32),
+                           axis=-1)[..., 0]
+  loss = -jnp.mean(ll)
+  return loss, {"xent": loss}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int = 1500, cache_dtype=None) -> dict:
+  return {
+      "kv": attn_lib.init_kv_cache(cfg, batch, max_len,
+                                   stack=(cfg.num_layers,),
+                                   dtype=cache_dtype),
+      "mem": jnp.zeros((batch, enc_len, cfg.d_model), cfg.dtype),
+  }
+
+
+def decode_step(params: dict, state: dict, token: jax.Array,
+                positions: jax.Array, cfg: ModelConfig,
+                cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+  b = token.shape[0]
+  x = embed(params["embedding"], token)
+  x = x + params["pos_dec"][positions][:, None].astype(x.dtype)
+  mem = state["mem"]
+  def body(h, xs):
+    lp, lc = xs
+    lp = cs(lp, "layer_params")
+    a = layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+    a, c1 = attn_lib.attention_decode(lp["attn"], a, lc, positions, cfg, cs)
+    h = h + a
+    a = layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+    h = h + _xattn(lp["xattn"], a, mem, cfg, cs)
+    f = layer_norm(h, lp["ln3"]["scale"], lp["ln3"]["bias"], cfg.norm_eps)
+    return h + gelu_ffn_forward(lp["ffn"], f, cs), c1
+  x, kv = jax.lax.scan(body, x, (params["dec_layers"], state["kv"]))
+  x = layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"],
+                 cfg.norm_eps)
+  return lm_logits(params["embedding"], x), {"kv": kv, "mem": mem}

@@ -1,0 +1,104 @@
+"""xLSTM LM: alternating mLSTM / sLSTM block pairs (1:1), scan over pairs.
+
+xlstm-350m: 24 blocks = 12 (mLSTM, sLSTM) pairs, d_model 1024, 4 heads.
+d_ff = 0 per the assigned config — blocks carry their own projections.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import xlstm as xl
+from repro.layers.common import ModelConfig
+from repro.layers.embedding import embed, init_embedding, logits as lm_logits
+from repro.layers.norms import init_rms, rms_norm
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+
+
+def _npairs(cfg: ModelConfig) -> int:
+  return cfg.num_layers // 2
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
+  ks = jax.random.split(key, 3)
+  def init_pair(pkey):
+    k1, k2 = jax.random.split(pkey)
+    return {
+        "m_norm": init_rms(cfg.d_model),
+        "mlstm": xl.init_mlstm(k1, cfg, layer_prefix="pairs"),
+        "s_norm": init_rms(cfg.d_model),
+        "slstm": xl.init_slstm(k2, cfg, layer_prefix="pairs"),
+    }
+  return {
+      "embedding": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                  dtype=cfg.dtype, tie=cfg.tie_embeddings),
+      "final_norm": init_rms(cfg.d_model),
+      "pairs": jax.vmap(init_pair)(jax.random.split(ks[1], _npairs(cfg))),
+  }
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            cs: Constraint = _id_cs, *, last_only: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+  x = cs(embed(params["embedding"], tokens), "bsd")
+  def pair_block(h, lp):
+    lp = cs(lp, "layer_params")     # gather inside the remat region
+    h = h + xl.mlstm_forward(lp["mlstm"],
+                             rms_norm(h, lp["m_norm"], cfg.norm_eps), cfg, cs)
+    h = h + xl.slstm_forward(lp["slstm"],
+                             rms_norm(h, lp["s_norm"], cfg.norm_eps), cfg, cs)
+    return h
+  block = jax.remat(pair_block) if cfg.remat == "full" else pair_block
+  def body(h, lp):
+    return cs(block(h, lp), "bsd"), None
+  x, _ = jax.lax.scan(body, x, params["pairs"])
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  if last_only:
+    x = x[:, -1:]
+  return cs(lm_logits(params["embedding"], x), "bsv"), jnp.zeros(
+      (), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, cs=_id_cs):
+  logits, _ = forward(params, batch["tokens"], cfg, cs)
+  lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+  ll = jnp.take_along_axis(lp, batch["targets"][..., None].astype(jnp.int32),
+                           axis=-1)[..., 0]
+  loss = -jnp.mean(ll)
+  return loss, {"xent": loss}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=None) -> dict:
+  n = _npairs(cfg)
+  return {
+      "mlstm": xl.init_mlstm_state(cfg, batch, stack=(n,)),
+      "slstm": xl.init_slstm_state(cfg, batch, stack=(n,)),
+  }
+
+
+def decode_step(params: dict, state: dict, token: jax.Array,
+                positions: jax.Array, cfg: ModelConfig,
+                cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+  x = cs(embed(params["embedding"], token), "bsd")
+  def body(h, xs):
+    lp, ms, ss = xs
+    lp = cs(lp, "layer_params")
+    y, ms1 = xl.mlstm_decode(lp["mlstm"],
+                             rms_norm(h, lp["m_norm"], cfg.norm_eps), ms,
+                             cfg, cs)
+    h = h + y
+    y, ss1 = xl.slstm_decode(lp["slstm"],
+                             rms_norm(h, lp["s_norm"], cfg.norm_eps), ss,
+                             cfg, cs)
+    return h + y, (ms1, ss1)
+  x, (ms, ss) = jax.lax.scan(body, x,
+                             (params["pairs"], state["mlstm"],
+                              state["slstm"]))
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  return lm_logits(params["embedding"], x), {"mlstm": ms, "slstm": ss}

@@ -1,0 +1,168 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention+MLP block
+applied periodically (arXiv:2411.15242).
+
+Structure: num_layers Mamba2 blocks; every `attn_every` blocks, the shared
+transformer block (one set of weights, reused ~num_layers/attn_every times)
+runs on the concatenation-projected hidden state. The shared block is the
+extreme end of the paper's Appendix-B.2 weight-sharing spectrum, and its
+GEMMs are factored/regularized like any other.
+
+Scan layout: main stack reshaped (groups, attn_every, ...) and scanned with
+a nested scan; remainder layers get their own short scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import attention as attn_lib
+from repro.layers import mamba2 as m2
+from repro.layers.common import ModelConfig
+from repro.layers.embedding import embed, init_embedding, logits as lm_logits
+from repro.layers.ffn import init_swiglu, swiglu_forward
+from repro.layers.norms import init_rms, rms_norm
+
+Constraint = Callable[[jax.Array, str], jax.Array]
+_id_cs: Constraint = lambda x, n: x
+
+
+def _plan(cfg: ModelConfig) -> tuple[int, int, int]:
+  k = cfg.attn_every or 6
+  groups = cfg.num_layers // k
+  tail = cfg.num_layers - groups * k
+  return k, groups, tail
+
+
+def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
+  k, groups, tail = _plan(cfg)
+  ks = jax.random.split(key, 6)
+  mamba_init = functools.partial(m2.init_mamba2, cfg=cfg,
+                                 layer_prefix="mamba")
+  def init_group(gkey):
+    return jax.vmap(lambda kk: mamba_init(kk))(jax.random.split(gkey, k))
+  p = {
+      "embedding": init_embedding(ks[0], cfg.vocab_size, cfg.d_model,
+                                  dtype=cfg.dtype, tie=cfg.tie_embeddings),
+      "final_norm": init_rms(cfg.d_model),
+      "main": jax.vmap(init_group)(jax.random.split(ks[1], groups)),
+      "shared_attn": {
+          "ln1": init_rms(cfg.d_model),
+          "attn": attn_lib.init_attention(ks[2], cfg, layer_prefix="shared"),
+          "ln2": init_rms(cfg.d_model),
+          "ffn": init_swiglu(ks[3], cfg.d_model, cfg.d_ff,
+                             layer_prefix="shared", dtype=cfg.dtype),
+      },
+  }
+  if tail:
+    p["tail"] = jax.vmap(lambda kk: mamba_init(kk))(
+        jax.random.split(ks[4], tail))
+  return p
+
+
+def _shared_block(x, sp, cfg, cs, positions_mode):
+  h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+  h = attn_lib.attention_forward(sp["attn"], h, cfg, cs)
+  x = x + h
+  h = rms_norm(x, sp["ln2"], cfg.norm_eps)
+  return x + swiglu_forward(sp["ffn"], h, cs)
+
+
+def _mamba_scan(x, stack, cfg, cs, remat=True):
+  def block(h, lp):
+    lp = cs(lp, "layer_params")     # gather inside the remat region
+    return h + m2.mamba2_forward(
+        lp, rms_norm(h, lp["norm_in"], cfg.norm_eps), cfg, cs)
+  if remat:
+    block = jax.remat(block)
+  def body(h, lp):
+    return cs(block(h, lp), "bsd"), None
+  x, _ = jax.lax.scan(body, x, stack)
+  return x
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            cs: Constraint = _id_cs, *, last_only: bool = False
+            ) -> tuple[jax.Array, jax.Array]:
+  x = cs(embed(params["embedding"], tokens), "bsd")
+  def group_body(h, gstack):
+    h = _shared_block(h, params["shared_attn"], cfg, cs, None)
+    h = _mamba_scan(h, gstack, cfg, cs)
+    return h, None
+  x, _ = jax.lax.scan(group_body, x, params["main"])
+  if "tail" in params:
+    x = _mamba_scan(x, params["tail"], cfg, cs)
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  if last_only:
+    x = x[:, -1:]
+  return cs(lm_logits(params["embedding"], x), "bsv"), jnp.zeros(
+      (), jnp.float32)
+
+
+def loss_fn(params, batch, cfg, cs=_id_cs):
+  logits, _ = forward(params, batch["tokens"], cfg, cs)
+  lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+  ll = jnp.take_along_axis(lp, batch["targets"][..., None].astype(jnp.int32),
+                           axis=-1)[..., 0]
+  loss = -jnp.mean(ll)
+  return loss, {"xent": loss}
+
+
+# -- decode -------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=None) -> dict:
+  k, groups, tail = _plan(cfg)
+  st = {
+      "main_ssm": m2.init_mamba2_state(cfg, batch, stack=(groups, k)),
+      "shared_kv": attn_lib.init_kv_cache(cfg, batch, max_len,
+                                          stack=(groups,),
+                                          dtype=cache_dtype),
+  }
+  if tail:
+    st["tail_ssm"] = m2.init_mamba2_state(cfg, batch, stack=(tail,))
+  return st
+
+
+def decode_step(params: dict, state: dict, token: jax.Array,
+                positions: jax.Array, cfg: ModelConfig,
+                cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+  x = cs(embed(params["embedding"], token), "bsd")
+  new_state = dict(state)
+
+  def group_body(h, xs):
+    gstack, g_ssm, g_kv = xs
+    a = rms_norm(h, params["shared_attn"]["ln1"], cfg.norm_eps)
+    a, kv1 = attn_lib.attention_decode(params["shared_attn"]["attn"], a,
+                                       g_kv, positions, cfg, cs)
+    h = h + a
+    f = rms_norm(h, params["shared_attn"]["ln2"], cfg.norm_eps)
+    h = h + swiglu_forward(params["shared_attn"]["ffn"], f, cs)
+    def mamba_body(hh, ys):
+      lp, ls = ys
+      lp = cs(lp, "layer_params")
+      y, s1 = m2.mamba2_decode(
+          lp, rms_norm(hh, lp["norm_in"], cfg.norm_eps), ls, cfg, cs)
+      return hh + y, s1
+    h, ssm1 = jax.lax.scan(mamba_body, h, (gstack, g_ssm))
+    return h, (ssm1, kv1)
+
+  x, (main_ssm, shared_kv) = jax.lax.scan(
+      group_body, x, (params["main"], state["main_ssm"],
+                      state["shared_kv"]))
+  new_state["main_ssm"] = main_ssm
+  new_state["shared_kv"] = shared_kv
+  if "tail" in params:
+    def mamba_body(hh, ys):
+      lp, ls = ys
+      lp = cs(lp, "layer_params")
+      y, s1 = m2.mamba2_decode(
+          lp, rms_norm(hh, lp["norm_in"], cfg.norm_eps), ls, cfg, cs)
+      return hh + y, s1
+    x, tail_ssm = jax.lax.scan(mamba_body, x,
+                               (params["tail"], state["tail_ssm"]))
+    new_state["tail_ssm"] = tail_ssm
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  return lm_logits(params["embedding"], x), new_state

@@ -1,0 +1,19 @@
+"""Optimizers + distributed-optimization tricks.
+
+  adamw     — f32-moment AdamW, FactoredLinear-transparent
+  q_adam    — int8-moment Adam (fits deepseek-v3-671b optimizer state)
+  compress  — int8 error-feedback gradient compression (pod axis)
+"""
+from repro.optim import adamw, compress, q_adam
+from repro.optim.adamw import (AdamState, AdamWConfig, clip_by_global_norm,
+                               global_norm)
+from repro.optim.q_adam import QAdamState, QTensor
+
+
+def make_optimizer(kind: str):
+  """kind: 'adamw' | 'q_adam' -> (init, apply) pair."""
+  if kind == "adamw":
+    return adamw.init, adamw.apply
+  if kind == "q_adam":
+    return q_adam.init, q_adam.apply
+  raise ValueError(f"unknown optimizer {kind}")

@@ -1,0 +1,81 @@
+"""AdamW over arbitrary pytrees (FactoredLinear nodes are ordinary
+subtrees of arrays, so the paper's factored params need no special case).
+
+Moments are stored in f32 regardless of param dtype; the decoupled weight
+decay skips 1D params (norms, biases) following standard practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+  step: jax.Array
+  m: Any
+  v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+  b1: float = 0.9
+  b2: float = 0.999
+  eps: float = 1e-8
+  weight_decay: float = 0.0
+  max_grad_norm: float = 0.0        # 0 = no clipping
+
+
+def init(params: Any) -> AdamState:
+  zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+  return AdamState(step=jnp.zeros((), jnp.int32),
+                   m=jax.tree.map(zeros, params),
+                   v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: Any) -> jax.Array:
+  leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree.leaves(tree)]
+  return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> tuple[Any, jax.Array]:
+  norm = global_norm(grads)
+  scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+  return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                 ).astype(g.dtype), grads), norm
+
+
+def apply(params: Any, grads: Any, state: AdamState, lr: jax.Array,
+          cfg: AdamWConfig) -> tuple[Any, AdamState, dict]:
+  metrics = {}
+  if cfg.max_grad_norm > 0:
+    grads, gnorm = clip_by_global_norm(grads, cfg.max_grad_norm)
+    metrics["grad_norm"] = gnorm
+  step = state.step + 1
+  b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+  b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+  def upd(p, g, m, v):
+    g = g.astype(jnp.float32)
+    m1 = cfg.b1 * m + (1 - cfg.b1) * g
+    v1 = cfg.b2 * v + (1 - cfg.b2) * g * g
+    mhat = m1 / b1c
+    vhat = v1 / b2c
+    delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+    if cfg.weight_decay and p.ndim >= 2:
+      delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+    p1 = p.astype(jnp.float32) - lr * delta
+    return p1.astype(p.dtype), m1, v1
+
+  # three passes (XLA CSEs the shared subexpressions under jit)
+  new_p = jax.tree.map(lambda *a: upd(*a)[0], params, grads, state.m,
+                       state.v)
+  new_m = jax.tree.map(lambda *a: upd(*a)[1], params, grads, state.m,
+                       state.v)
+  new_v = jax.tree.map(lambda *a: upd(*a)[2], params, grads, state.m,
+                       state.v)
+  return new_p, AdamState(step=step, m=new_m, v=new_v), metrics

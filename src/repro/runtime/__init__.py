@@ -1,0 +1,3 @@
+"""Runtime: fault-tolerant step supervision."""
+from repro.runtime.supervisor import (FaultInjector, SimulatedDeviceFailure,
+                                      Supervisor, SupervisorEvents)

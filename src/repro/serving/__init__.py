@@ -1,0 +1,3 @@
+"""Serving engines: batched LM decode + streaming speech."""
+from repro.serving.engine import (GenerationResult, LMEngine,
+                                  StreamingSpeechServer)

@@ -1,0 +1,137 @@
+"""Serving: batched LM decode engine + the paper's streaming speech path.
+
+LMEngine — request-batched autoregressive decoding over a persistent KV /
+SSM state. `decode_step` is one jitted program (the exact program the
+decode_32k / long_500k dry-run cells lower). Prefill here replays the
+prompt through the decode step (sequential prefill): correct for every
+family incl. SSM hybrids, and fine at demo scale — production prefill is
+the separate `prefill_32k` lowering, which computes the full-sequence
+forward.
+
+StreamingSpeechServer — the paper's embedded deployment mode: frame-
+synchronous DS2 inference. The conv frontend runs on small feature chunks;
+each GRU step is the low-batch recurrent GEMM that kernels/decode_matvec
+and kernels/gru_cell target; CTC greedy labels stream out per frame.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import make_constraint
+from repro.layers.common import ModelConfig
+from repro.models import deepspeech
+from repro.models.api import get_model
+
+_id_cs = lambda x, n: x
+
+
+@dataclasses.dataclass
+class GenerationResult:
+  tokens: np.ndarray            # (b, steps)
+  steps: int
+
+
+class LMEngine:
+
+  def __init__(self, model_cfg: ModelConfig, params: Any, *,
+               batch_size: int, max_len: int, mesh=None,
+               cache_dtype=None, rng=None):
+    self.cfg = model_cfg
+    self.params = params
+    self.api = get_model(model_cfg)
+    if not self.api.decodable:
+      raise ValueError(f"{model_cfg.name} has no decode path")
+    self.batch = batch_size
+    self.max_len = max_len
+    cs = (make_constraint(mesh, model_cfg, batch_size, decode=True)
+          if mesh else _id_cs)
+    self.state = self.api.init_decode_state(model_cfg, batch_size, max_len)
+    if cache_dtype is not None:
+      self.state = jax.tree.map(
+          lambda x: x.astype(cache_dtype)
+          if x.dtype in (jnp.float32, jnp.bfloat16) else x, self.state)
+    self.positions = jnp.zeros((batch_size,), jnp.int32)
+    self.rng = jax.random.PRNGKey(0) if rng is None else rng
+
+    def step(params, state, token, positions):
+      return self.api.decode_step(params, state, token, positions,
+                                  model_cfg, cs)
+    self._step = jax.jit(step, donate_argnums=(1,))
+
+  def reset(self) -> None:
+    self.state = self.api.init_decode_state(self.cfg, self.batch,
+                                            self.max_len)
+    self.positions = jnp.zeros((self.batch,), jnp.int32)
+
+  def prefill(self, prompts: np.ndarray) -> jax.Array:
+    """Feed prompts (b, p) through the decode step; returns last logits."""
+    prompts = jnp.asarray(prompts, jnp.int32)
+    logits = None
+    for t in range(prompts.shape[1]):
+      logits, self.state = self._step(self.params, self.state,
+                                      prompts[:, t:t + 1], self.positions)
+      self.positions = self.positions + 1
+    return logits
+
+  def generate(self, prompts: np.ndarray, *, steps: int,
+               temperature: float = 0.0) -> GenerationResult:
+    logits = self.prefill(prompts)
+    out = []
+    for _ in range(steps):
+      tok = self._sample(logits, temperature)
+      out.append(np.asarray(tok))
+      logits, self.state = self._step(self.params, self.state, tok,
+                                      self.positions)
+      self.positions = self.positions + 1
+    return GenerationResult(tokens=np.concatenate(out, axis=1),
+                            steps=steps)
+
+  def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+    lg = logits[:, -1].astype(jnp.float32)
+    if temperature <= 0.0:
+      return jnp.argmax(lg, axis=-1)[:, None].astype(jnp.int32)
+    self.rng, k = jax.random.split(self.rng)
+    return jax.random.categorical(
+        k, lg / temperature, axis=-1)[:, None].astype(jnp.int32)
+
+
+class StreamingSpeechServer:
+  """Frame-synchronous DS2 serving (paper §4's embedded regime)."""
+
+  def __init__(self, model_cfg: ModelConfig, params: Any, *,
+               batch_size: int = 1):
+    self.cfg = model_cfg
+    self.params = params
+    self.batch = batch_size
+    self.state = deepspeech.init_decode_state(model_cfg, batch_size)
+    self._prev = np.full((batch_size,), -1, np.int64)
+
+    def frame_step(params, state, x_t):
+      return deepspeech.decode_step(params, state, x_t, model_cfg)
+    self._frame_step = jax.jit(frame_step, donate_argnums=(1,))
+    self._frontend = jax.jit(functools.partial(
+        deepspeech._frontend, cfg=model_cfg))
+
+  def reset(self) -> None:
+    self.state = deepspeech.init_decode_state(self.cfg, self.batch)
+    self._prev = np.full((self.batch,), -1, np.int64)
+
+  def process_chunk(self, feats: np.ndarray) -> list[list[int]]:
+    """feats (b, t, feat_dim) raw mel chunk -> newly emitted labels."""
+    x = self._frontend(self.params, jnp.asarray(feats))
+    emitted: list[list[int]] = [[] for _ in range(self.batch)]
+    for t in range(x.shape[1]):
+      log_probs, self.state = self._frame_step(self.params, self.state,
+                                               x[:, t])
+      best = np.asarray(jnp.argmax(log_probs, axis=-1))
+      for i in range(self.batch):
+        if best[i] != 0 and best[i] != self._prev[i]:
+          emitted[i].append(int(best[i]))
+        self._prev[i] = best[i]
+    return emitted

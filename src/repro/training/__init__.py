@@ -1,0 +1,2 @@
+"""Training: microbatched step builder + two-stage Trainer."""
+from repro.training.trainer import TrainConfig, Trainer, make_train_step

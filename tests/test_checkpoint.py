@@ -1,0 +1,66 @@
+"""Checkpoint save/restore: roundtrip, async, latest-step, GC."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.core.factored import dense, factored
+
+
+def make_tree(key):
+  k1, k2 = jax.random.split(key)
+  return {
+      "layer": {"w": dense(k1, 8, 8, name="w"),
+                "fac": factored(k2, 8, 8, 4, name="fac")},
+      "step_scale": jnp.float32(0.5),
+      "counts": jnp.arange(5),
+  }
+
+
+def _assert_tree_equal(a, b):
+  for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+    np.testing.assert_allclose(np.asarray(x), np.asarray(y))
+
+
+def test_roundtrip(tmp_path):
+  mgr = CheckpointManager(str(tmp_path))
+  tree = make_tree(jax.random.PRNGKey(0))
+  mgr.save(7, tree, extra={"stage": 2})
+  restored, extra = mgr.restore(jax.eval_shape(lambda: tree))
+  _assert_tree_equal(tree, restored)
+  assert extra["stage"] == 2
+  assert mgr.latest_step() == 7
+
+
+def test_async_save(tmp_path):
+  mgr = CheckpointManager(str(tmp_path))
+  tree = make_tree(jax.random.PRNGKey(1))
+  mgr.save(1, tree, blocking=False)
+  mgr.wait()
+  restored, _ = mgr.restore(tree)
+  _assert_tree_equal(tree, restored)
+
+
+def test_gc_keeps_latest(tmp_path):
+  mgr = CheckpointManager(str(tmp_path), keep=2)
+  tree = {"x": jnp.zeros((2,))}
+  for s in (1, 2, 3, 4):
+    mgr.save(s, tree)
+  assert mgr.all_steps() == [3, 4]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+  mgr = CheckpointManager(str(tmp_path))
+  mgr.save(0, {"x": jnp.zeros((4,))})
+  with pytest.raises(ValueError):
+    mgr.restore({"x": jnp.zeros((5,))})
+
+
+def test_missing_leaf_rejected(tmp_path):
+  mgr = CheckpointManager(str(tmp_path))
+  mgr.save(0, {"x": jnp.zeros((4,))})
+  with pytest.raises(KeyError):
+    mgr.restore({"x": jnp.zeros((4,)), "y": jnp.zeros((1,))})

@@ -1,0 +1,68 @@
+"""CTC loss against brute-force path enumeration."""
+import itertools
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ctc import ctc_greedy_decode, ctc_loss
+
+
+def brute_force_ctc(log_probs, labels, blank=0):
+  """-log sum over all alignments (exponential; tiny cases only)."""
+  t, v = log_probs.shape
+  target = list(labels)
+  total = -np.inf
+  for path in itertools.product(range(v), repeat=t):
+    # collapse repeats then remove blanks
+    collapsed = []
+    prev = None
+    for s in path:
+      if s != prev:
+        collapsed.append(s)
+      prev = s
+    decoded = [s for s in collapsed if s != blank]
+    if decoded == target:
+      lp = sum(log_probs[i, s] for i, s in enumerate(path))
+      total = np.logaddexp(total, lp)
+  return -total
+
+
+@pytest.mark.parametrize("labels", [[1], [1, 2], [1, 1], [2, 1, 2]])
+def test_ctc_matches_brute_force(labels):
+  rng = np.random.RandomState(len(labels))
+  t, v = 5, 4
+  logits = rng.randn(t, v)
+  log_probs = logits - np.log(np.sum(np.exp(logits), axis=-1,
+                                     keepdims=True))
+  want = brute_force_ctc(log_probs, labels)
+
+  lp = jnp.asarray(log_probs)[None]
+  got = float(ctc_loss(lp, jnp.array([t]),
+                       jnp.array([labels + [0] * (4 - len(labels))]),
+                       jnp.array([len(labels)])))
+  np.testing.assert_allclose(got, want, rtol=1e-4)
+
+
+def test_ctc_respects_lengths():
+  """Frames past logit_lengths must not affect the loss."""
+  rng = np.random.RandomState(0)
+  lp_short = rng.randn(1, 4, 5)
+  lp_short = lp_short - np.log(np.sum(np.exp(lp_short), -1, keepdims=True))
+  lp_long = np.concatenate([lp_short, rng.randn(1, 3, 5)], axis=1)
+  labels = jnp.array([[1, 2, 0]])
+  lens = jnp.array([2])
+  a = float(ctc_loss(jnp.asarray(lp_short), jnp.array([4]), labels, lens))
+  b = float(ctc_loss(jnp.asarray(lp_long), jnp.array([4]), labels, lens))
+  np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+def test_greedy_decode_collapses():
+  # path: blank a a blank b -> [a, b]
+  lp = np.full((1, 5, 3), -10.0)
+  path = [0, 1, 1, 0, 2]
+  for t, s in enumerate(path):
+    lp[0, t, s] = 0.0
+  out = np.asarray(ctc_greedy_decode(jnp.asarray(lp), jnp.array([5])))
+  decoded = out[0][out[0] >= 0].tolist()
+  assert decoded == [1, 2]

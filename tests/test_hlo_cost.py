@@ -1,0 +1,64 @@
+"""HLO cost parser: exact FLOPs through scan trip counts, collective
+accounting, roofline terms."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import hlo_cost
+
+
+def test_scan_flops_exact():
+  """5-iteration scan of one matmul: the parser multiplies through the
+  while trip count (XLA's own cost_analysis counts the body once)."""
+  def step(w, x):
+    def body(h, _):
+      return h @ w, None
+    h, _ = jax.lax.scan(body, x, None, length=5)
+    return jnp.sum(h)
+  compiled = jax.jit(step).lower(
+      jax.ShapeDtypeStruct((64, 64), jnp.float32),
+      jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile()
+  rep = hlo_cost.analyze_module(compiled.as_text(), 1)
+  expected = 5 * 2 * 8 * 64 * 64
+  assert abs(rep.flops - expected) / expected < 0.05, rep.flops
+
+
+def test_dot_flops_shapes():
+  def f(a, b):
+    return a @ b
+  compiled = jax.jit(f).lower(
+      jax.ShapeDtypeStruct((32, 128), jnp.float32),
+      jax.ShapeDtypeStruct((128, 16), jnp.float32)).compile()
+  rep = hlo_cost.analyze_module(compiled.as_text(), 1)
+  np.testing.assert_allclose(rep.flops, 2 * 32 * 128 * 16, rtol=0.01)
+
+
+def test_shape_bytes():
+  assert hlo_cost._shape_bytes("bf16[4,8]{1,0}") == 64
+  assert hlo_cost._shape_bytes("f32[]") == 4
+  assert hlo_cost._shape_bytes("(f32[2,2]{1,0}, s8[4]{0})") == 20
+  assert hlo_cost._shape_bytes("pred[16]") == 16
+
+
+def test_wire_factors():
+  assert hlo_cost._wire_factor("all-reduce", 4) == 1.5
+  assert hlo_cost._wire_factor("all-gather", 4) == 0.75
+  assert hlo_cost._wire_factor("collective-permute", 8) == 1.0
+  assert hlo_cost._wire_factor("all-reduce", 1) == 0.0
+
+
+def test_roofline_dominance():
+  rep = hlo_cost.CostReport(flops=197e12, hbm_bytes=819e9 * 2,
+                            collective_wire_bytes=0.0)
+  roof = hlo_cost.roofline_from_report(rep)
+  assert roof.dominant == "memory"
+  assert abs(roof.compute_s - 1.0) < 1e-6
+  assert abs(roof.memory_s - 2.0) < 1e-6
+
+
+def test_trip_count_regex_on_real_format():
+  line = ('  %while.7 = (s32[], f32[2]{0}) while(%t), condition=%c, '
+          'body=%b, backend_config={"known_trip_count":{"n":"12"},'
+          '"known_init_step":{"init":"0","step":"1"}}')
+  m = hlo_cost._TRIP_RE.search(line)
+  assert m and m.group(1) == "12"

@@ -1,0 +1,85 @@
+"""Decode-path consistency: step-by-step cached decoding must reproduce
+the full-sequence forward logits (catches every KV/SSM-cache bug class).
+Plus engine-level generation determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models.api import get_model
+from repro.serving import LMEngine
+
+DECODABLE = ["llama3-8b", "qwen3-4b", "glm4-9b", "stablelm-3b",
+             "chameleon-34b", "deepseek-v2-lite", "zamba2-7b", "xlstm-350m"]
+
+
+@pytest.mark.parametrize("arch", DECODABLE)
+def test_decode_matches_forward(arch):
+  import dataclasses
+  cfg = configs.get_smoke(arch).with_(dtype=jnp.float32)
+  if cfg.moe is not None:
+    # ample capacity: capacity-based MoE drops tokens at train-time batch
+    # statistics but never at decode batch=1 — a known train/serve
+    # asymmetry, excluded from this numerical-consistency check
+    cfg = cfg.with_(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  b, s = 2, 16
+  toks = np.random.RandomState(0).randint(1, cfg.vocab_size, size=(b, s))
+  toks = jnp.asarray(toks, jnp.int32)
+
+  full_logits, _ = api.forward(params, toks, cfg)
+
+  state = api.init_decode_state(cfg, b, s + 4)
+  step_logits = []
+  pos = jnp.zeros((b,), jnp.int32)
+  for t in range(s):
+    lg, state = api.decode_step(params, state, toks[:, t:t + 1], pos, cfg)
+    step_logits.append(lg[:, 0])
+    pos = pos + 1
+  got = jnp.stack(step_logits, axis=1)
+
+  lo = np.asarray(full_logits, np.float32)
+  hi = np.asarray(got, np.float32)
+  # compare softmax-normalized outputs (mlstm chunked vs stepwise and MLA
+  # absorbed vs unabsorbed paths differ only by fp reassociation)
+  pl = jax.nn.log_softmax(lo, -1)
+  ph = jax.nn.log_softmax(hi, -1)
+  np.testing.assert_allclose(ph, pl, atol=2e-2, rtol=2e-2)
+
+
+def test_engine_greedy_deterministic():
+  cfg = configs.get_smoke("qwen3-4b").with_(vocab_size=64)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  prompts = np.array([[1, 2, 3], [4, 5, 6]])
+  eng = LMEngine(cfg, params, batch_size=2, max_len=32)
+  a = eng.generate(prompts, steps=5).tokens
+  eng.reset()
+  b = eng.generate(prompts, steps=5).tokens
+  np.testing.assert_array_equal(a, b)
+
+
+def test_engine_int8_kv_cache_runs():
+  cfg = configs.get_smoke("llama3-8b").with_(vocab_size=64)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  eng = LMEngine(cfg, params, batch_size=2, max_len=32,
+                 cache_dtype=jnp.float16)
+  out = eng.generate(np.array([[1, 2], [3, 4]]), steps=3)
+  assert out.tokens.shape == (2, 3)
+
+
+def test_streaming_speech_server():
+  from repro.data.speech import SpeechDataConfig, batch_at
+  from repro.serving import StreamingSpeechServer
+  cfg = configs.get_smoke("deepspeech2-wsj")
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  server = StreamingSpeechServer(cfg, params, batch_size=2)
+  dc = SpeechDataConfig(vocab_size=cfg.vocab_size, feat_dim=cfg.feat_dim,
+                        global_batch=2)
+  chunk = batch_at(dc, 0)["feats"][:, :24]
+  out = server.process_chunk(chunk)
+  assert len(out) == 2           # per-stream emissions (may be empty)

@@ -1,0 +1,75 @@
+"""Truncated-SVD warmstart (stage 1 -> 2) correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import svd as svd_lib
+from repro.core.compress import (FactorizationPlan, compression_report,
+                                 to_stage1, to_stage2)
+from repro.core.factored import FactoredLinear, count_params, dense
+from repro.core.svd import TruncationSpec
+
+
+def test_balanced_split_reconstructs():
+  w = jax.random.normal(jax.random.PRNGKey(0), (24, 16))
+  u, v = svd_lib.balanced_split(w)
+  np.testing.assert_allclose(np.asarray(u @ v), np.asarray(w), atol=1e-4)
+  # balance: ||u||_F^2 == ||v||_F^2 (Lemma 1 equality choice)
+  np.testing.assert_allclose(float(jnp.sum(u * u)), float(jnp.sum(v * v)),
+                             rtol=1e-4)
+
+
+def test_truncation_preserves_low_rank_exactly():
+  """A rank-r matrix survives truncation at any threshold losslessly."""
+  k = jax.random.PRNGKey(1)
+  w = (jax.random.normal(k, (32, 4)) @ jax.random.normal(k, (4, 32)))
+  leaf = FactoredLinear(w=w, u=None, v=None, name="t")
+  out = svd_lib.truncate_leaf(leaf, TruncationSpec(variance_threshold=0.999,
+                                                   round_to=1))
+  assert out.rank <= 8     # 4 rounded up at most
+  np.testing.assert_allclose(np.asarray(out.product()), np.asarray(w),
+                             atol=1e-3)
+
+
+def test_explained_variance_rank():
+  s = np.array([10.0, 1.0, 0.1, 0.01])
+  var = s ** 2 / np.sum(s ** 2)
+  assert svd_lib.explained_variance_rank(s, 0.98) == 1
+  assert svd_lib.explained_variance_rank(s, 0.999) == 2
+  assert svd_lib.explained_variance_rank(s, 1.0) == 4
+
+
+def test_stage1_stage2_param_counts():
+  k = jax.random.PRNGKey(2)
+  tree = {"fc": dense(k, 64, 64, name="fc"),
+          "small": dense(k, 8, 8, name="small")}
+  plan = FactorizationPlan(min_dim=32, truncation=TruncationSpec(
+      fixed_rank=4, round_to=4))
+  s1 = to_stage1(tree, plan)
+  assert s1["fc"].is_factored and not s1["small"].is_factored
+  assert s1["fc"].rank == 64                     # full-rank stage-1 form
+  s2 = to_stage2(s1, plan)
+  assert s2["fc"].rank == 4
+  assert count_params(s2) < count_params(tree)
+  rep = compression_report(tree, s2)
+  assert rep["total_params_after"] < rep["total_params_before"]
+
+
+def test_stacked_leaf_truncation():
+  """Scanned (L, m, n) weights truncate to one homogeneous rank."""
+  k = jax.random.PRNGKey(3)
+  w = jax.random.normal(k, (3, 16, 16)) * 0.1
+  leaf = FactoredLinear(w=w, u=None, v=None, name="stack")
+  out = svd_lib.truncate_leaf(leaf, TruncationSpec(variance_threshold=0.9,
+                                                   round_to=2))
+  assert out.u.shape[0] == 3 and out.v.shape[0] == 3
+  assert out.u.shape[-1] == out.v.shape[-2]
+
+
+def test_factorize_collapse_roundtrip():
+  k = jax.random.PRNGKey(4)
+  tree = {"w": dense(k, 20, 12, name="w")}
+  s1 = svd_lib.factorize_tree(tree)
+  back = svd_lib.collapse_tree(s1)
+  np.testing.assert_allclose(np.asarray(back["w"].w),
+                             np.asarray(tree["w"].w), atol=1e-4)
