@@ -1,2 +1,4 @@
 """Checkpoint save/restore with elastic resharding."""
 from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

@@ -30,6 +30,10 @@ _MODULES = {
 ARCH_NAMES = list(_MODULES)
 ASSIGNED = [n for n in ARCH_NAMES if n != "deepspeech2-wsj"]
 
+__all__ = ["ARCH_NAMES", "ASSIGNED", "SHAPES", "ModelConfig", "ShapeConfig",
+           "decode_state_specs", "input_specs", "param_specs", "get_config",
+           "get_smoke", "shapes_for"]
+
 
 def get_config(name: str) -> ModelConfig:
   return _MODULES[name].CONFIG

@@ -20,3 +20,15 @@ from repro.core.compress import (FactorizationPlan, compression_report,
                                  to_stage1, to_stage2)
 from repro.core.schedule import (TwoStageSchedule, cosine_schedule,
                                  linear_warmup_exp_decay)
+
+__all__ = [
+    "FactoredLinear", "count_params", "dense", "factored",
+    "iter_factored_leaves", "map_factored_leaves",
+    "RegularizerConfig", "nu_coefficient", "rank_for_variance",
+    "regularization_loss", "singular_values", "trace_norm_metrics",
+    "variational_trace_norm_penalty",
+    "TruncationSpec", "balanced_split", "explained_variance_rank",
+    "factorize_tree", "collapse_tree", "warmstart_tree",
+    "FactorizationPlan", "compression_report", "to_stage1", "to_stage2",
+    "TwoStageSchedule", "cosine_schedule", "linear_warmup_exp_decay",
+]

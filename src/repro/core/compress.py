@@ -13,11 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import fnmatch
-import re
 from typing import Any, Optional, Sequence
-
-import jax
-import numpy as np
 
 from repro.core import svd
 from repro.core.factored import (FactoredLinear, count_params,

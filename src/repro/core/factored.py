@@ -23,6 +23,16 @@ import jax
 import jax.numpy as jnp
 
 
+def acc_dtype(x: jax.Array):
+  """Dot output dtype policy — THE single source of truth for GEMM
+  accumulation behavior (FactoredLinear.apply and layers.common.gemm
+  both route through it): bf16 inputs emit bf16 directly — the MXU still
+  accumulates f32 internally, and emitting bf16 halves the GEMM output
+  HBM traffic and makes the TP all-reduces bf16 instead of f32
+  (EXPERIMENTS.md §Perf iteration A1). f32 inputs keep f32 (CPU tests)."""
+  return x.dtype if x.dtype == jnp.bfloat16 else jnp.float32
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class FactoredLinear:
@@ -82,19 +92,21 @@ class FactoredLinear:
 
     The factored path is the paper's inference form: two skinny GEMMs of
     r(m + n) total weight bytes instead of one mn GEMM — bandwidth-bound
-    decode reads r(m+n)/mn of the unfactored traffic.
+    decode reads r(m+n)/mn of the unfactored traffic. Accumulation dtype
+    follows `acc_dtype` (one policy for every GEMM in the framework).
+    Weights must be 2D: a stacked leaf against a batched activation
+    would silently broadcast the layer axis against the batch axis.
     """
+    acc = acc_dtype(x)
     if self.is_factored:
       if self.u.ndim != 2:
         raise ValueError("apply() expects 2D factors; slice stacked dims first")
-      t = jnp.matmul(x, self.u, preferred_element_type=jnp.float32)
+      t = jnp.matmul(x, self.u, preferred_element_type=acc)
       t = t.astype(x.dtype)
-      return jnp.matmul(t, self.v, preferred_element_type=jnp.float32).astype(
-          x.dtype)
+      return jnp.matmul(t, self.v, preferred_element_type=acc).astype(x.dtype)
     if self.w.ndim != 2:
       raise ValueError("apply() expects a 2D weight; slice stacked dims first")
-    return jnp.matmul(x, self.w, preferred_element_type=jnp.float32).astype(
-        x.dtype)
+    return jnp.matmul(x, self.w, preferred_element_type=acc).astype(x.dtype)
 
   def __call__(self, x: jax.Array) -> jax.Array:
     return self.apply(x)

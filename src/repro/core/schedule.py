@@ -13,7 +13,6 @@ LR at 3x the final stage-1 LR.)
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax.numpy as jnp
 

@@ -17,12 +17,12 @@ coefficient nu(W) (Definition 1), and singular-value diagnostics.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Mapping
+from typing import Any, Mapping
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.factored import FactoredLinear, iter_factored_leaves
+from repro.core.factored import iter_factored_leaves
 
 
 def frobenius_sq(x: jax.Array) -> jax.Array:

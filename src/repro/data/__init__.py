@@ -7,3 +7,6 @@ data layer.
 from repro.data import lm, speech
 from repro.data.lm import LMDataConfig
 from repro.data.speech import SpeechDataConfig, cer, edit_distance
+
+__all__ = ["lm", "speech", "LMDataConfig", "SpeechDataConfig", "cer",
+           "edit_distance"]

@@ -13,7 +13,7 @@ recovery path replays in-flight steps.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import numpy as np

@@ -1,0 +1,27 @@
+"""`repro.dist` — the distributed-execution subsystem.
+
+One public surface for every execution mode (train / serve / dry-run):
+
+  dist.mesh      — mesh construction (pure functions; importing this
+                   package never touches jax device state).
+  dist.sharding  — named sharding rules over the FactoredLinear logical
+                   namespace + `make_constraint`, the single entry point
+                   that produces the `cs` callable every model threads
+                   through its forward/decode functions.
+  dist.hlo_cost  — lowered-HLO FLOP / byte / collective accounting and
+                   roofline extraction for the dry-run cost tables.
+"""
+from repro.dist import hlo_cost, mesh, sharding
+from repro.dist.mesh import (dp_axes, dp_size, make_host_mesh, make_mesh,
+                             make_production_mesh, model_size)
+from repro.dist.sharding import (batch_shardings, identity_constraint,
+                                 make_constraint, param_shardings,
+                                 replicated, state_shardings)
+
+__all__ = [
+    "hlo_cost", "mesh", "sharding",
+    "dp_axes", "dp_size", "make_host_mesh", "make_mesh",
+    "make_production_mesh", "model_size",
+    "batch_shardings", "identity_constraint", "make_constraint",
+    "param_shardings", "replicated", "state_shardings",
+]

@@ -1,0 +1,371 @@
+"""Lowered-HLO cost accounting: FLOPs, HBM traffic, collective bytes.
+
+Parses `compiled.as_text()` (post-SPMD, so shapes are per-device) and
+walks the computation call graph multiplying through `while` trip counts
+— XLA's own cost_analysis counts a scanned body once; this parser counts
+it `known_trip_count` times, which is what makes microbatched train
+steps and decode loops come out right.
+
+Accounting model:
+  flops        — dot/convolution FLOPs (2 * out_elems * contraction).
+  hbm_bytes    — operand + result bytes of every materializing op
+                 (fusions count their boundary, not their interior).
+  collectives  — payload bytes and *wire* bytes: payload scaled by the
+                 ring factor of the collective kind (all-reduce moves
+                 2(n-1)/n of its payload per link, all-gather /
+                 reduce-scatter (n-1)/n, permutes 1.0).
+
+`roofline_from_report` turns a CostReport into the three roofline time
+terms under the reference chip below and names the dominant one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# Reference chip for roofline terms (a TPU-class accelerator).
+PEAK_FLOPS = 197e12          # FLOP/s (bf16 systolic peak)
+HBM_BANDWIDTH = 819e9        # B/s
+ICI_BANDWIDTH = 45e9         # B/s per device, all links combined
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
+    "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_DIM_LABELS_RE = re.compile(r"dim_labels=([\w?]+)_([\w?]+)->([\w?]+)")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute", "collective-broadcast")
+
+# ops that neither move HBM bytes nor compute (bookkeeping / control flow —
+# control flow is descended into instead)
+_FREE_OPS = frozenset({
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "while", "conditional", "call", "after-all", "partition-id",
+    "replica-id", "add-dependency", "domain", "opt-barrier",
+})
+
+
+def _dims(dim_str: str) -> list[int]:
+  return [int(d) for d in dim_str.split(",") if d]
+
+
+def _shape_bytes(shape_str: str) -> float:
+  """Total bytes of every array in a (possibly tuple) shape string."""
+  total = 0.0
+  for dtype, dim_str in _SHAPE_RE.findall(shape_str):
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+      continue
+    n = 1
+    for d in _dims(dim_str):
+      n *= d
+    total += n * size
+  return total
+
+
+def _first_array_dims(shape_str: str) -> Optional[list[int]]:
+  m = _SHAPE_RE.search(shape_str)
+  return _dims(m.group(2)) if m else None
+
+
+def _wire_factor(kind: str, group_size: int) -> float:
+  """Per-device wire bytes per payload byte on a ring of `group_size`."""
+  if group_size <= 1:
+    return 0.0
+  n = float(group_size)
+  if "all-reduce" in kind:
+    return 2.0 * (n - 1.0) / n
+  if "all-gather" in kind or "reduce-scatter" in kind:
+    return (n - 1.0) / n
+  return 1.0                       # all-to-all / permutes / broadcast
+
+
+def _group_size(line: str, n_devices: int) -> int:
+  m = _GROUPS_BRACE_RE.search(line)
+  if m:
+    return len(_dims(m.group(1)))
+  m = _GROUPS_IOTA_RE.search(line)
+  if m:
+    dims = _dims(m.group(1))
+    return dims[-1] if dims else n_devices
+  return n_devices
+
+
+# ---------------------------------------------------------------------------
+# Report dataclasses.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CostReport:
+  flops: float = 0.0
+  dot_flops: float = 0.0
+  hbm_bytes: float = 0.0
+  collective_bytes: float = 0.0
+  collective_wire_bytes: float = 0.0
+  n_collectives: int = 0
+  collective_by_kind: dict = dataclasses.field(default_factory=dict)
+  hbm_by_shape: dict = dataclasses.field(default_factory=dict)
+
+  def add(self, other: "CostReport", mult: float = 1.0) -> None:
+    self.flops += other.flops * mult
+    self.dot_flops += other.dot_flops * mult
+    self.hbm_bytes += other.hbm_bytes * mult
+    self.collective_bytes += other.collective_bytes * mult
+    self.collective_wire_bytes += other.collective_wire_bytes * mult
+    self.n_collectives += int(other.n_collectives * mult)
+    for k, v in other.collective_by_kind.items():
+      self.collective_by_kind[k] = (self.collective_by_kind.get(k, 0.0)
+                                    + v * mult)
+    for k, v in other.hbm_by_shape.items():
+      self.hbm_by_shape[k] = self.hbm_by_shape.get(k, 0.0) + v * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class Roofline:
+  compute_s: float
+  memory_s: float
+  collective_s: float
+  dominant: str                    # "compute" | "memory" | "collective"
+  useful_flop_fraction: float
+  roofline_fraction: float
+
+
+def roofline_from_report(rep: CostReport,
+                         model_flops: Optional[float] = None) -> Roofline:
+  """The three roofline time terms under the reference chip.
+
+  `model_flops` (the analytic 6ND/2ND estimate, per device) feeds
+  useful_flop_fraction — how much of the executed FLOP volume is model
+  math rather than remat/overhead."""
+  compute_s = rep.flops / PEAK_FLOPS
+  memory_s = rep.hbm_bytes / HBM_BANDWIDTH
+  collective_s = rep.collective_wire_bytes / ICI_BANDWIDTH
+  terms = {"compute": compute_s, "memory": memory_s,
+           "collective": collective_s}
+  dominant = max(terms, key=terms.get)
+  total = compute_s + memory_s + collective_s
+  useful = (model_flops / rep.flops if model_flops and rep.flops
+            else (rep.dot_flops / rep.flops if rep.flops else 0.0))
+  return Roofline(
+      compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+      dominant=dominant,
+      useful_flop_fraction=useful,
+      roofline_fraction=terms[dominant] / total if total else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _Instr:
+  opcode: str
+  shape: str                       # result shape string
+  operands: str                    # text inside the opcode's parens
+  attrs: str                       # text after the closing paren
+  line: str
+
+
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
+_CALLED_RE = {
+    "body": re.compile(r"body=%?([\w.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w.\-]+)"),
+    "branches": re.compile(r"branch_computations=\{([^}]*)\}"),
+    "true": re.compile(r"true_computation=%?([\w.\-]+)"),
+    "false": re.compile(r"false_computation=%?([\w.\-]+)"),
+}
+
+
+def _split_instr(line: str) -> Optional[_Instr]:
+  eq = line.find(" = ")
+  if eq < 0:
+    return None
+  rest = line[eq + 3:]
+  # result shape: either "(tuple, ...)" or "dtype[dims]{layout}"
+  if rest.startswith("("):
+    depth, i = 0, 0
+    for i, ch in enumerate(rest):
+      depth += ch == "("
+      depth -= ch == ")"
+      if depth == 0:
+        break
+    shape, rest = rest[:i + 1], rest[i + 1:].lstrip()
+  else:
+    sp = rest.find(" ")
+    if sp < 0:
+      return None
+    shape, rest = rest[:sp], rest[sp + 1:]
+  par = rest.find("(")
+  if par < 0:
+    return None
+  opcode = rest[:par].strip()
+  depth = 0
+  end = len(rest) - 1
+  for j in range(par, len(rest)):
+    depth += rest[j] == "("
+    depth -= rest[j] == ")"
+    if depth == 0:
+      end = j
+      break
+  return _Instr(opcode=opcode, shape=shape, operands=rest[par + 1:end],
+                attrs=rest[end + 1:], line=line)
+
+
+def _parse_computations(text: str) -> tuple[dict, Optional[str]]:
+  comps: dict[str, list[_Instr]] = {}
+  entry = None
+  current: Optional[list] = None
+  for line in text.splitlines():
+    if current is None:
+      m = _HEADER_RE.match(line)
+      if m:
+        name = m.group(2)
+        comps[name] = current = []
+        if m.group(1):
+          entry = name
+    elif line.strip() == "}":
+      current = None
+    else:
+      ins = _split_instr(line)
+      if ins is not None:
+        current.append(ins)
+  if entry is None and comps:
+    entry = next(reversed(comps))
+  return comps, entry
+
+
+def _dot_flops(ins: _Instr) -> float:
+  out = _first_array_dims(ins.shape) or []
+  lhs = _first_array_dims(ins.operands) or []
+  m = _CONTRACT_RE.search(ins.attrs)
+  contract = 1.0
+  if m:
+    for idx in _dims(m.group(1)):
+      if idx < len(lhs):
+        contract *= lhs[idx]
+  out_elems = 1.0
+  for d in out:
+    out_elems *= d
+  return 2.0 * out_elems * contract
+
+
+def _conv_flops(ins: _Instr) -> float:
+  out = _first_array_dims(ins.shape) or []
+  shapes = _SHAPE_RE.findall(ins.operands)
+  if len(shapes) < 2:
+    return 0.0
+  kernel = _dims(shapes[1][1])
+  k_elems = 1.0
+  for d in kernel:
+    k_elems *= d
+  m = _DIM_LABELS_RE.search(ins.attrs)
+  o_dim = kernel[-1] if kernel else 1
+  if m and kernel:
+    o_idx = m.group(2).find("o")
+    if 0 <= o_idx < len(kernel):
+      o_dim = kernel[o_idx]
+  out_elems = 1.0
+  for d in out:
+    out_elems *= d
+  return 2.0 * out_elems * (k_elems / max(o_dim, 1))
+
+
+def analyze_module(hlo_text: str, n_devices: int = 1) -> CostReport:
+  """Parse a post-optimization HLO module dump into a CostReport.
+
+  The module is already SPMD-partitioned, so all byte/FLOP figures are
+  per-device; `n_devices` is the fallback collective group size when an
+  instruction carries no parseable replica_groups."""
+  comps, entry = _parse_computations(hlo_text)
+  memo: dict[str, CostReport] = {}
+
+  def called(ins: _Instr, key: str) -> Optional[str]:
+    m = _CALLED_RE[key].search(ins.attrs)
+    return m.group(1) if m else None
+
+  def cost(name: str) -> CostReport:
+    if name in memo:
+      return memo[name]
+    memo[name] = CostReport()      # cycle guard (HLO graphs are acyclic)
+    rep = CostReport()
+    for ins in comps.get(name, ()):
+      op = ins.opcode
+      if op == "while":
+        m = _TRIP_RE.search(ins.attrs)
+        trip = float(m.group(1)) if m else 1.0
+        body = called(ins, "body")
+        cond = called(ins, "condition")
+        if body:
+          rep.add(cost(body), trip)
+        if cond:
+          rep.add(cost(cond), trip)
+        continue
+      if op == "conditional":
+        branches = []
+        m = _CALLED_RE["branches"].search(ins.attrs)
+        if m:
+          branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+        else:
+          branches = [b for b in (called(ins, "true"), called(ins, "false"))
+                      if b]
+        if branches:
+          costs = [cost(b) for b in branches if b in comps]
+          if costs:
+            rep.add(max(costs, key=lambda c: c.flops + c.hbm_bytes))
+        continue
+      if op == "call":
+        tgt = called(ins, "to_apply")
+        if tgt:
+          rep.add(cost(tgt))
+        continue
+      if op == "fusion":
+        tgt = called(ins, "calls")
+        if tgt:
+          inner = cost(tgt)
+          rep.flops += inner.flops          # dots fused into the kernel
+          rep.dot_flops += inner.dot_flops
+        # fall through: the fusion boundary is the HBM traffic
+      if op == "dot":
+        f = _dot_flops(ins)
+        rep.flops += f
+        rep.dot_flops += f
+      elif op == "convolution":
+        rep.flops += _conv_flops(ins)
+      base = op.replace("-start", "")
+      if base in COLLECTIVE_OPS and not op.endswith("-done"):
+        payload = max(_shape_bytes(ins.shape), _shape_bytes(ins.operands))
+        g = _group_size(ins.line, n_devices)
+        wire = payload * _wire_factor(base, g)
+        rep.collective_bytes += payload
+        rep.collective_wire_bytes += wire
+        rep.n_collectives += 1
+        rep.collective_by_kind[base] = (
+            rep.collective_by_kind.get(base, 0.0) + wire)
+      if op in _FREE_OPS or op.endswith("-done"):
+        continue
+      b = _shape_bytes(ins.shape) + _shape_bytes(ins.operands)
+      rep.hbm_bytes += b
+      out_b = _shape_bytes(ins.shape)
+      if out_b:
+        rep.hbm_by_shape[ins.shape] = (
+            rep.hbm_by_shape.get(ins.shape, 0.0) + out_b)
+    memo[name] = rep
+    return rep
+
+  if entry is None:
+    return CostReport()
+  return cost(entry)

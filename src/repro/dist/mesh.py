@@ -1,0 +1,93 @@
+"""Mesh construction — pure functions over an explicit device list.
+
+Importing this module never touches jax device state: `jax.devices()` is
+only consulted inside a function body when the caller passes no devices.
+That property is load-bearing for the dry-run, which must set
+`XLA_FLAGS=--xla_force_host_platform_device_count=...` before the first
+device enumeration.
+
+Axis-name conventions (shared with dist.sharding):
+  "pod"   — outer data-parallel axis across pods (slow links),
+  "data"  — data-parallel axis within a pod,
+  "model" — tensor/expert-parallel axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+# Data-parallel axes, outermost first. Everything else is model-parallel.
+DATA_AXES = ("pod", "data")
+MODEL_AXIS = "model"
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str], *,
+              devices: Optional[Sequence] = None) -> Mesh:
+  """Reshape `devices` (default: all local) into a named Mesh.
+
+  Extra devices beyond prod(shape) are ignored, so callers can pass
+  `jax.devices()` and carve sub-meshes (e.g. 256 of 512 for single-pod).
+  """
+  devices = list(jax.devices()) if devices is None else list(devices)
+  n = math.prod(shape)
+  if len(devices) < n:
+    raise ValueError(f"mesh {tuple(shape)} needs {n} devices, "
+                     f"got {len(devices)}")
+  if len(shape) != len(axis_names):
+    raise ValueError(f"shape {tuple(shape)} / axis_names {tuple(axis_names)}"
+                     " rank mismatch")
+  arr = np.asarray(devices[:n], dtype=object).reshape(tuple(shape))
+  return Mesh(arr, tuple(axis_names))
+
+
+def make_host_mesh(axis_names: Sequence[str] = ("data", "model"), *,
+                   model: int = 1,
+                   devices: Optional[Sequence] = None) -> Mesh:
+  """All local devices as a (data, model) mesh with `model`-way TP.
+
+  The CPU-test / single-host entry point: `make_host_mesh()` is pure DP
+  over whatever the process sees; `make_host_mesh(model=2)` folds the
+  trailing factor into a model axis.
+  """
+  devices = list(jax.devices()) if devices is None else list(devices)
+  n = len(devices)
+  if len(axis_names) == 1:
+    return make_mesh((n,), axis_names, devices=devices)
+  if n % model:
+    raise ValueError(f"{n} devices not divisible by model={model}")
+  return make_mesh((n // model, model), tuple(axis_names)[:2],
+                   devices=devices)
+
+
+def make_production_mesh(multi_pod: bool = False, *,
+                         devices: Optional[Sequence] = None) -> Mesh:
+  """The two production topologies the dry-run compiles for:
+
+  single-pod  (16, 16)      ("data", "model")         256 chips
+  multi-pod   (2, 16, 16)   ("pod", "data", "model")  512 chips
+  """
+  devices = list(jax.devices()) if devices is None else list(devices)
+  if multi_pod:
+    return make_mesh((2, 16, 16), ("pod", "data", "model"),
+                     devices=devices[:512])
+  return make_mesh((16, 16), ("data", "model"), devices=devices[:256])
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+  """The mesh's data-parallel axis names, outermost first."""
+  return tuple(a for a in DATA_AXES if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+  """Total data-parallel degree (product over dp_axes)."""
+  return math.prod(mesh.shape[a] for a in dp_axes(mesh)) if dp_axes(mesh) \
+      else 1
+
+
+def model_size(mesh: Mesh) -> int:
+  """Model-parallel degree (1 when the mesh has no model axis)."""
+  return int(mesh.shape.get(MODEL_AXIS, 1))

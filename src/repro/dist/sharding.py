@@ -1,0 +1,349 @@
+"""Named sharding rules over the FactoredLinear logical namespace.
+
+Sharding is declared ONCE, here, by logical name — the same `"*/rec"` /
+`"*/nonrec"` / `"layers/attn_q"` namespace that `FactorizationPlan`
+matches on — and consumed everywhere: the trainer, the serving engine and
+the dry-run all obtain their constraint callable through the single
+`make_constraint(mesh, cfg, batch, decode=...)` entry point, and their
+jit boundaries through `param_shardings` / `state_shardings` /
+`batch_shardings`.
+
+Two namespaces:
+
+* **Parameter rules** match a FactoredLinear's logical `name` with glob
+  patterns (PARAM_RULES). Unfactored weights get the classic Megatron
+  split: up-projections column-parallel P(None, "model"), down/out
+  projections row-parallel P("model", None), expert stacks
+  expert-parallel on the leading E axis. Factored nodes shard U
+  column-wise (chop each length-m column across "model") and V row-wise
+  (chop each length-n row across "model") so the rank axis stays local:
+  the (x@U)@V contraction over r never crosses devices, and stage-2
+  truncation — which only changes r — never reshards a checkpoint.
+
+* **Activation rules** (ACTIVATION_RULES) match the short logical names
+  models pass to `cs(x, name)`: "bsd", "bsv", "bsf", "bshd_q", "gecd",
+  ... Each maps dimensions to mesh-axis roles; "data" expands to the
+  mesh's (pod, data) axes.
+
+Every rule is divisibility-gated against the concrete shape: an axis
+whose mesh degree does not divide the dimension is dropped (to None)
+rather than forcing padded/uneven layouts — decode batches of 1 and
+tiny smoke dims degrade gracefully to replication.
+"""
+from __future__ import annotations
+
+import fnmatch
+import math
+from typing import Any, Optional, Sequence
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.factored import FactoredLinear
+from repro.dist.mesh import MODEL_AXIS, dp_axes
+# The contract types live in the leaf module model code already imports;
+# re-exported here so dist.sharding stays the one public constraint surface.
+from repro.layers.common import Constraint, identity_constraint
+
+# _path_tokens is deliberately part of this module's exported surface (the
+# dry-run's sharding-override hook keys on it) despite the underscore name.
+__all__ = ["Constraint", "identity_constraint", "make_constraint",
+           "param_shardings", "state_shardings", "batch_shardings",
+           "replicated", "_path_tokens", "ACTIVATION_RULES", "PARAM_RULES"]
+
+
+# ---------------------------------------------------------------------------
+# Rule tables. "data" expands to the mesh's dp axes, "model" to MODEL_AXIS.
+# ---------------------------------------------------------------------------
+
+# activation logical name -> per-dimension axis roles
+ACTIVATION_RULES: dict[str, tuple] = {
+    "bsd": ("data", None, None),             # residual stream (b, s, d)
+    "bsv": ("data", None, "model"),          # logits (b, s, vocab)
+    "bsf": ("data", None, "model"),          # FFN hidden (b, s, d_ff)
+    "bsi": ("data", None, "model"),          # mamba inner (b, s, d_inner)
+    "bt3h": ("data", None, "model"),         # GRU gates (b, t, 3h)
+    "bshd_q": ("data", None, "model", None),   # q heads
+    "bshd_kv": ("data", None, "model", None),  # kv heads (GQA: may gate off)
+    "gecd": ("data", "model", None, None),   # MoE dispatch buffer (G,E,C,D)
+    "gecf": ("data", "model", None, None),   # MoE expert hidden (G,E,C,F)
+}
+
+# parameter logical-name globs -> rule kind, first match wins
+PARAM_RULES: tuple[tuple[str, str], ...] = (
+    ("*/expert_*", "expert"),    # stacked (E, m, n) expert weights -> EP
+    ("*/attn_o", "row"),
+    ("*/xattn_o", "row"),
+    ("*/mla_o", "row"),
+    ("*/ffn_down", "row"),
+    ("*/ffn_out", "row"),
+    ("*/mlstm_down", "row"),
+    ("*/slstm_out", "row"),
+    ("*/ssm_out", "row"),
+    ("out", "row"),              # DS2 CTC output head (fc_dim, vocab) stays
+                                 # row-split: vocab ~ 32 never divides TP
+    ("*", "col"),                # q/k/v, gates, ups, rec/nonrec, lm_head, ...
+)
+
+
+def _expand(role, mesh) -> tuple[str, ...]:
+  """Axis role -> concrete mesh axes (only those present on the mesh)."""
+  if role is None:
+    return ()
+  if role == "data":
+    return dp_axes(mesh)
+  if role == "model":
+    return (MODEL_AXIS,) if MODEL_AXIS in mesh.axis_names else ()
+  return (role,) if role in mesh.axis_names else ()
+
+
+def _gate(template: Sequence, shape: Sequence[int], mesh) -> Optional[P]:
+  """Divisibility-gate a role template against a concrete shape.
+
+  Returns None when the template rank does not match the array rank
+  (caller replicates / passes through)."""
+  if len(template) != len(shape):
+    return None
+  spec = []
+  for role, dim in zip(template, shape):
+    axes = _expand(role, mesh)
+    size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+    if axes and size > 1 and dim % size == 0:
+      spec.append(axes if len(axes) > 1 else axes[0])
+    else:
+      spec.append(None)
+  return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules.
+# ---------------------------------------------------------------------------
+
+def _param_rule(name: str) -> str:
+  for pat, kind in PARAM_RULES:
+    if fnmatch.fnmatch(name, pat):
+      return kind
+  return "col"
+
+
+def _weight_template(kind: str, ndim: int, field: str) -> tuple:
+  """Role template for one FactoredLinear field (w | u | v).
+
+  Unfactored w follows the Megatron split of its rule. Factored u/v use
+  the uniform rank-local layout: u (m, r) chops m, v (r, n) chops n —
+  both leave r unsharded, so the only collective in (x@U)@V is one
+  all-reduce of the skinny rank-r intermediate, and stage-2 truncation
+  (a change of r only) never reshards."""
+  lead = (None,) * max(ndim - 2, 0)
+  if kind == "expert":
+    # (..., E, m, n): expert-parallel over the E axis, factors alike
+    if ndim < 3:
+      return _weight_template("col", ndim, field)
+    return (None,) * (ndim - 3) + ("model", None, None)
+  if field == "u":
+    return lead + ("model", None)
+  if field == "v":
+    return lead + (None, "model")
+  if kind == "row":
+    return lead + ("model", None)
+  return lead + (None, "model")                    # "col"
+
+
+def _with_fsdp(spec: P, shape: Sequence[int], mesh) -> P:
+  """Add the dp axes to the first unsharded dimension they divide.
+
+  For stacked per-layer weights (ndim >= 3) this is the leading layer
+  axis — the ZeRO/FSDP layout whose gather happens inside the remat
+  region via cs(lp, "layer_params")."""
+  axes = dp_axes(mesh)
+  size = math.prod(mesh.shape[a] for a in axes) if axes else 1
+  if size <= 1:
+    return spec
+  entries = list(spec) + [None] * (len(shape) - len(spec))
+  for i, (e, dim) in enumerate(zip(entries, shape)):
+    if e is None and dim % size == 0 and dim > 1:
+      entries[i] = axes if len(axes) > 1 else axes[0]
+      return P(*entries)
+  return spec
+
+
+def _leaf_spec(shape: Sequence[int], mesh, *, name: Optional[str] = None,
+               field: str = "w", path: Sequence[str] = (),
+               fsdp: bool = False, expert_2d: bool = False) -> P:
+  """Spec for one array leaf — a FactoredLinear field (by logical name)
+  or a raw array (by tree path)."""
+  ndim = len(shape)
+  if name is not None:
+    kind = _param_rule(name)
+    spec = _gate(_weight_template(kind, ndim, field), shape, mesh) or P()
+    if expert_2d and kind == "expert" and ndim >= 3:
+      spec = _with_fsdp(spec, shape, mesh)         # 2D EP for serving
+  elif path and path[-1] == "table" and ndim == 2:
+    # embedding table (vocab, d): vocab-sharded; gathers are tiny
+    spec = _gate(("model", None), shape, mesh) or P()
+  else:
+    spec = P()            # router / norm scales / biases / step counters
+  if fsdp:
+    spec = _with_fsdp(spec, shape, mesh)
+  return spec
+
+
+def _path_tokens(path) -> list[str]:
+  """Key path -> string tokens ("moe_layers", "attn", "wq", "u", ...)."""
+  toks = []
+  for k in path:
+    if hasattr(k, "key"):
+      toks.append(str(k.key))
+    elif hasattr(k, "name"):
+      toks.append(str(k.name))
+    elif hasattr(k, "idx"):
+      toks.append(str(k.idx))
+    else:
+      toks.append(str(k))
+  return toks
+
+
+def param_shardings(params: Any, mesh, *, fsdp: bool = False,
+                    expert_2d: bool = False) -> Any:
+  """NamedSharding tree matching `params` (arrays or ShapeDtypeStructs).
+
+  FactoredLinear nodes are matched by logical name, raw leaves by tree
+  path; the result preserves the tree structure (FactoredLinear nodes
+  carry shardings in their w/u/v fields) so it is directly usable as jit
+  in_shardings / out_shardings."""
+  def on_node(path, leaf):
+    if isinstance(leaf, FactoredLinear):
+      def fld(field):
+        arr = getattr(leaf, field)
+        if arr is None:
+          return None
+        return NamedSharding(mesh, _leaf_spec(
+            arr.shape, mesh, name=leaf.name, field=field,
+            fsdp=fsdp, expert_2d=expert_2d))
+      return FactoredLinear(w=fld("w"), u=fld("u"), v=fld("v"),
+                            name=leaf.name, group=leaf.group)
+    return NamedSharding(mesh, _leaf_spec(
+        leaf.shape, mesh, path=_path_tokens(path), fsdp=fsdp,
+        expert_2d=expert_2d))
+  return jax.tree_util.tree_map_with_path(
+      on_node, params, is_leaf=lambda x: isinstance(x, FactoredLinear))
+
+
+def batch_shardings(batch: Any, mesh, shape) -> Any:
+  """Inputs shard their leading (global batch) dimension over the dp axes."""
+  def f(leaf):
+    if leaf.ndim and leaf.shape[0] == shape.global_batch:
+      spec = _gate(("data",) + (None,) * (leaf.ndim - 1), leaf.shape, mesh)
+      return NamedSharding(mesh, spec or P())
+    return NamedSharding(mesh, P())
+  return jax.tree.map(f, batch)
+
+
+def state_shardings(state: Any, mesh, shape) -> Any:
+  """Decode-state rules: batch dim -> dp axes, max_len dim -> model axis.
+
+  Length-sharding the KV cache is what keeps 500k-token contexts on
+  chip: each model shard owns 1/TP of the sequence axis and attention
+  reduces across it."""
+  def f(leaf):
+    roles: list = [None] * leaf.ndim
+    # the length axis sits AFTER the batch axis in every cache layout, so
+    # match it last-first — otherwise a batch dim that happens to equal
+    # max_len (batch == seq_len configs) would steal the model-axis role
+    len_dim = None
+    for i in range(leaf.ndim - 1, -1, -1):
+      if leaf.shape[i] == shape.seq_len and leaf.shape[i] > 1:
+        len_dim = i
+        roles[i] = "model"
+        break
+    for i, dim in enumerate(leaf.shape):
+      if i != len_dim and dim == shape.global_batch and dim > 1:
+        roles[i] = "data"
+        break
+    return NamedSharding(mesh, _gate(tuple(roles), leaf.shape, mesh) or P())
+  return jax.tree.map(f, state)
+
+
+def replicated(mesh) -> NamedSharding:
+  return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# The constraint callable — the one execution surface.
+# ---------------------------------------------------------------------------
+
+def _constrain_layer_params(tree: Any, mesh) -> Any:
+  """cs(lp, "layer_params"): re-constrain one scanned layer slice.
+
+  Under FSDP/ZeRO the layer stack is sharded along its leading layer
+  axis; the per-layer slice inside the scan body is constrained back to
+  the TP-resident layout (weights keep their model-axis split, small
+  arrays replicate), so the all-gather happens INSIDE the remat region
+  and the backward pass re-gathers instead of keeping all layers live."""
+  def on_node(leaf):
+    if isinstance(leaf, FactoredLinear):
+      def fld(field):
+        arr = getattr(leaf, field)
+        if arr is None:
+          return None
+        spec = _leaf_spec(arr.shape, mesh, name=leaf.name, field=field)
+        return jax.lax.with_sharding_constraint(
+            arr, NamedSharding(mesh, spec))
+      return FactoredLinear(w=fld("w"), u=fld("u"), v=fld("v"),
+                            name=leaf.name, group=leaf.group)
+    return jax.lax.with_sharding_constraint(
+        leaf, NamedSharding(mesh, P()))
+  return jax.tree.map(on_node, tree,
+                      is_leaf=lambda x: isinstance(x, FactoredLinear))
+
+
+def make_constraint(mesh, cfg, global_batch: int, *, decode: bool = False,
+                    rule_overrides: Optional[dict] = None) -> Constraint:
+  """Build the `cs(x, logical_name) -> x` constraint callable.
+
+  This is the ONLY constraint entry point: the trainer, the serving
+  engine and the dry-run builders all call it, so a sharding decision is
+  made exactly once per logical name. With mesh=None it returns
+  `identity_constraint` (single-device training / CPU smoke tests).
+
+  Args:
+    mesh: the jax Mesh (or None for single-device identity).
+    cfg: the ModelConfig the step runs (part of the contract so rules
+      can specialize per family without new call sites).
+    global_batch: the step's global batch — decode batches of 1 and
+      other non-divisible sizes gate their data axis off.
+    decode: True for cached serve steps (kept for rule specialization;
+      the divisibility gate already handles the batch-of-1 case).
+    rule_overrides: {logical name: role-template or PartitionSpec} —
+      the perf-hillclimb hook for trying alternative layouts without
+      touching model code.
+  """
+  del cfg, global_batch, decode   # rules are name+shape driven today
+  if mesh is None:
+    return identity_constraint
+  rules = dict(ACTIVATION_RULES)
+  if rule_overrides:
+    rules.update(rule_overrides)
+
+  def _apply_rule(x, rule):
+    if isinstance(rule, P):
+      return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, rule))
+    spec = _gate(rule, x.shape, mesh)
+    if spec is None:
+      return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+  def cs(x, name: str):
+    if name == "layer_params":
+      override = (rule_overrides or {}).get("layer_params")
+      if override is None:
+        return _constrain_layer_params(x, mesh)
+      # an overridden layer-slice layout applies leaf-wise over the tree
+      # (P() replicates everything; templates gate per leaf rank/shape)
+      return jax.tree.map(lambda a: _apply_rule(a, override), x)
+    rule = rules.get(name)
+    if rule is None:
+      return x                    # unknown logical names pass through
+    return _apply_rule(x, rule)
+
+  return cs

@@ -11,3 +11,6 @@ Validated in interpret=True mode against kernels/ref.py oracles.
 from repro.kernels import ops, ref
 from repro.kernels.ops import (decode_matvec, flash_attention, gru_cell,
                                int8_gemm, lowrank_gemm, quantized_matmul)
+
+__all__ = ["ops", "ref", "decode_matvec", "flash_attention", "gru_cell",
+           "int8_gemm", "lowrank_gemm", "quantized_matmul"]

@@ -12,8 +12,6 @@ without strided reads. Grid: (H/bh,), weights visited once.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl

@@ -1,2 +1,4 @@
 """Launchers: production mesh, multi-pod dry-run, train/serve drivers."""
 from repro.launch.mesh import make_production_mesh
+
+__all__ = ["make_production_mesh"]

@@ -32,8 +32,8 @@ import numpy as np
 from repro import configs
 from repro.dist import hlo_cost
 from repro.dist.mesh import dp_size, make_mesh, model_size
-from repro.dist.sharding import (batch_shardings, make_constraint,
-                                 param_shardings, replicated,
+from repro.dist.sharding import (_path_tokens, batch_shardings,
+                                 make_constraint, param_shardings,
                                  state_shardings)
 from repro.layers.common import ModelConfig, ShapeConfig
 from repro.models import deepspeech
@@ -97,7 +97,6 @@ def _apply_overrides(shard_tree, overrides, mesh):
   """Perf-iteration hook: {path-substring: PartitionSpec} overrides."""
   if not overrides:
     return shard_tree
-  from repro.dist.sharding import _path_tokens
   def f(path, s):
     pstr = "/".join(_path_tokens(path))
     for frag, spec in overrides.items():

@@ -81,7 +81,6 @@ def main() -> None:
   elif cfg.family == "whisper":
     dcl = lm_data.LMDataConfig(vocab_size=cfg.vocab_size, seq_len=args.seq,
                                global_batch=args.batch, seed=args.seed)
-    rng = np.random.RandomState(args.seed)
     def gen(i):
       b = lm_data.batch_at(dcl, i)
       frames = np.random.RandomState(i).randn(

@@ -12,19 +12,14 @@ long prefill at the cost of a larger HLO — a §Perf hillclimb lever.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, Optional
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.factored import FactoredLinear, dense
-from repro.layers.common import ModelConfig, gemm
+from repro.core.factored import dense
+from repro.layers.common import (Constraint, ModelConfig, gemm,
+                                 identity_constraint as _id_cs)
 from repro.layers.norms import rms_norm
 from repro.layers.rope import apply_rope
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, name: x
 
 NEG_INF = -2.0 ** 30  # large-negative in fp32, safe under bf16 rounding
 
@@ -155,6 +150,7 @@ def attention_forward(p: dict, x: jax.Array, cfg: ModelConfig,
 # ----------------------------------------------------------------------------
 # Decode path (single new token against a KV cache).
 # ----------------------------------------------------------------------------
+
 
 def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
                   stack: tuple[int, ...] = (), dtype=None) -> dict:

@@ -7,34 +7,36 @@ not, so the whole model zoo is compressible by core.compress plans.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.factored import FactoredLinear
+from repro.core.factored import FactoredLinear, acc_dtype
+
+# The sharding-constraint contract every model function threads through its
+# layers: cs(x, logical_name) -> x. Hosted here (the leaf module all layer
+# and model code already imports) so model code never depends on repro.dist;
+# dist.sharding re-exports both names and its make_constraint returns
+# identity_constraint when called without a mesh.
+Constraint = Callable[[jax.Array, str], jax.Array]
 
 
-def _acc_dtype(x: jax.Array):
-  """Dot output dtype: bf16 inputs emit bf16 directly — the MXU still
-  accumulates f32 internally, and emitting bf16 halves the GEMM output
-  HBM traffic and makes the TP all-reduces bf16 instead of f32
-  (EXPERIMENTS.md §Perf iteration A1). f32 inputs keep f32 (CPU tests)."""
-  return x.dtype if x.dtype == jnp.bfloat16 else jnp.float32
+def identity_constraint(x, name: str):
+  """The no-mesh constraint: every `cs` call is a pass-through."""
+  return x
 
 
 def gemm(leaf: FactoredLinear | jax.Array, x: jax.Array) -> jax.Array:
-  """y[..., n] = x[..., m] @ W(m, n); factored path = (x @ U) @ V."""
-  acc = _acc_dtype(x)
+  """y[..., n] = x[..., m] @ W(m, n); factored path = (x @ U) @ V.
+
+  FactoredLinear leaves delegate to `leaf.apply(x)` — the factored math
+  AND the accumulation-dtype policy live in exactly one place
+  (core.factored.acc_dtype); raw arrays follow the same policy here."""
   if isinstance(leaf, FactoredLinear):
-    if leaf.is_factored:
-      t = jnp.matmul(x, leaf.u, preferred_element_type=acc)
-      t = t.astype(x.dtype)
-      return jnp.matmul(t, leaf.v,
-                        preferred_element_type=acc).astype(x.dtype)
-    return jnp.matmul(x, leaf.w,
-                      preferred_element_type=acc).astype(x.dtype)
-  return jnp.matmul(x, leaf, preferred_element_type=acc).astype(x.dtype)
+    return leaf.apply(x)
+  return jnp.matmul(x, leaf, preferred_element_type=acc_dtype(x)).astype(
+      x.dtype)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.factored import FactoredLinear, dense
+from repro.core.factored import acc_dtype, dense
 from repro.layers.common import gemm
 
 
@@ -32,6 +32,5 @@ def embed(p: dict, tokens: jax.Array) -> jax.Array:
 def logits(p: dict, x: jax.Array) -> jax.Array:
   if "head" in p:
     return gemm(p["head"], x)
-  from repro.layers.common import _acc_dtype
   return jnp.matmul(x, p["table"].T,
-                    preferred_element_type=_acc_dtype(x)).astype(x.dtype)
+                    preferred_element_type=acc_dtype(x)).astype(x.dtype)

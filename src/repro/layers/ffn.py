@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.factored import dense
-from repro.layers.common import ModelConfig, gemm
+from repro.layers.common import gemm, identity_constraint
 
 
 def init_swiglu(key: jax.Array, d: int, f: int, *, layer_prefix: str,
@@ -21,7 +21,7 @@ def init_swiglu(key: jax.Array, d: int, f: int, *, layer_prefix: str,
   }
 
 
-def swiglu_forward(p: dict, x: jax.Array, cs=lambda a, n: a) -> jax.Array:
+def swiglu_forward(p: dict, x: jax.Array, cs=identity_constraint) -> jax.Array:
   g = cs(gemm(p["w_gate"], x), "bsf")
   u = cs(gemm(p["w_up"], x), "bsf")
   h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
@@ -41,7 +41,7 @@ def init_gelu_ffn(key: jax.Array, d: int, f: int, *, layer_prefix: str,
   }
 
 
-def gelu_ffn_forward(p: dict, x: jax.Array, cs=lambda a, n: a) -> jax.Array:
+def gelu_ffn_forward(p: dict, x: jax.Array, cs=identity_constraint) -> jax.Array:
   h = gemm(p["w_in"], x) + p["b_in"].astype(x.dtype)
   h = cs(jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype), "bsf")
   return gemm(p["w_out"], h) + p["b_out"].astype(x.dtype)

@@ -15,17 +15,12 @@ Cell (paper eq. 10):
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.factored import FactoredLinear, dense
-from repro.layers.common import gemm
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
-
+from repro.layers.common import (Constraint, gemm,
+                                 identity_constraint as _id_cs)
 
 def init_gru(key: jax.Array, in_dim: int, hidden: int, *, layer_prefix: str,
              dtype=jnp.float32) -> dict:

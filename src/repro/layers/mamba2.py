@@ -7,17 +7,13 @@ this is why zamba2/xlstm are the archs that run the long_500k shape.
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.factored import dense
-from repro.layers.common import ModelConfig, gemm
+from repro.layers.common import (Constraint, ModelConfig, gemm,
+                                 identity_constraint as _id_cs)
 from repro.layers.norms import rms_norm
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 
 HEAD_DIM = 64        # mamba2 default P
 CONV_WIDTH = 4
@@ -155,6 +151,7 @@ def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig,
 
 
 # -- decode ------------------------------------------------------------------
+
 
 def init_mamba2_state(cfg: ModelConfig, batch: int,
                       stack: tuple[int, ...] = (), expand: int = 2) -> dict:

@@ -11,18 +11,15 @@ Cache layout: c_kv (b, s, kv_lora_rank) + k_rope (b, s, qk_rope_dim).
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.factored import dense
-from repro.layers.common import MLAConfig, ModelConfig, gemm
+from repro.layers.common import (Constraint, ModelConfig, gemm,
+                                 identity_constraint as _id_cs)
 from repro.layers.norms import rms_norm
 from repro.layers.rope import apply_rope
 
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 NEG_INF = -2.0 ** 30
 
 

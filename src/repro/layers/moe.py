@@ -15,17 +15,13 @@ SwiGLU blocks.
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
-from repro.core.factored import dense
-from repro.layers.common import MoEConfig, ModelConfig, gemm
+from repro.core.factored import acc_dtype, dense
+from repro.layers.common import (Constraint, MoEConfig, ModelConfig,
+                                 identity_constraint as _id_cs)
 from repro.layers.ffn import init_swiglu, swiglu_forward
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 
 
 def init_moe(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
@@ -115,8 +111,7 @@ def moe_forward(p: dict, x: jax.Array, cfg: ModelConfig,
   buf = cs(buf, "gecd")                       # (G, E, C, D) -> dp x EP
 
   # expert FFN, batched over (group, expert) dims; weights stacked (E, d, f)
-  from repro.layers.common import _acc_dtype
-  acc = _acc_dtype(x)
+  acc = acc_dtype(x)
   def expert_ffn(wg, wu, wd, xe):
     gate = jnp.einsum("gecd,edf->gecf", xe, wg,
                       preferred_element_type=acc).astype(x.dtype)

@@ -14,23 +14,21 @@ a long_500k arch.
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.factored import dense
-from repro.layers.common import ModelConfig, gemm
+from repro.layers.common import (Constraint, ModelConfig, gemm,
+                                 identity_constraint as _id_cs)
 from repro.layers.norms import rms_norm
 
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 CHUNK = 256
 
 
 # ---------------------------------------------------------------------------
 # mLSTM
 # ---------------------------------------------------------------------------
+
 
 def init_mlstm(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
                stack: tuple[int, ...] = (), pf: float = 2.0) -> dict:
@@ -175,6 +173,7 @@ def mlstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 # sLSTM
 # ---------------------------------------------------------------------------
+
 
 def init_slstm(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
                stack: tuple[int, ...] = ()) -> dict:

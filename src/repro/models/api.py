@@ -14,20 +14,31 @@ between runs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.layers.common import ModelConfig
+from repro.layers.common import (Constraint, ModelConfig,
+                                 identity_constraint)
 from repro.models import deepspeech, transformer, whisper, xlstm_model, zamba
 
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
+__all__ = ["Constraint", "ModelApi", "get_model", "identity_constraint"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelApi:
+  """One model family behind a uniform callable surface.
+
+  The sharding-constraint contract: every `loss_fn` / `forward` /
+  `decode_step` threads a constraint callable `cs(x, logical_name) -> x`
+  through its layers, annotating activations (and scanned layer slices)
+  by LOGICAL name only — "bsd", "bsv", "bshd_q", "layer_params", ... —
+  never with concrete meshes or PartitionSpecs. The single factory for a
+  real `cs` is `repro.dist.sharding.make_constraint(mesh, cfg, batch,
+  decode=...)`; single-device callers omit the argument and get
+  `identity_constraint` (the default on every model function), which
+  makes each annotation a no-op. Model code therefore compiles
+  identically for train, serve and dry-run — only the `cs` passed in
+  (and the jit in/out shardings around it) changes.
+  """
   family: str
   init: Callable
   loss_fn: Callable

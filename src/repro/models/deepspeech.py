@@ -12,18 +12,14 @@ same growing-size structure at smaller dims.
 """
 from __future__ import annotations
 
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
 from repro.core.factored import dense
-from repro.layers.common import ModelConfig, gemm
+from repro.layers.common import (Constraint, ModelConfig, gemm,
+                                 identity_constraint as _id_cs)
 from repro.layers.gru import gru_forward, init_gru
 from repro.models.ctc import ctc_loss
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 
 
 def conv_out_len(t: int, k: int, stride: int) -> int:
@@ -100,6 +96,7 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
 
 
 # -- streaming inference (the paper's embedded deployment mode) --------------
+
 
 def init_decode_state(cfg: ModelConfig, batch: int) -> dict:
   """Streaming GRU hidden states (the conv frontend is applied on small

@@ -9,7 +9,6 @@ layers). Remat policy wraps the scanned body.
 from __future__ import annotations
 
 import functools
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,13 +16,11 @@ import jax.numpy as jnp
 from repro.layers import attention as attn_lib
 from repro.layers import mla as mla_lib
 from repro.layers import moe as moe_lib
-from repro.layers.common import ModelConfig, gemm
+from repro.layers.common import (Constraint, ModelConfig, gemm,
+                                 identity_constraint as _id_cs)
 from repro.layers.embedding import embed, init_embedding, logits as lm_logits
 from repro.layers.ffn import init_swiglu, swiglu_forward
 from repro.layers.norms import init_rms, rms_norm
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 
 
 def _init_layer(key, cfg: ModelConfig, *, use_moe: bool):
@@ -163,6 +160,7 @@ def loss_fn(params: dict, batch: dict, cfg: ModelConfig,
 # ----------------------------------------------------------------------------
 # Decode.
 # ----------------------------------------------------------------------------
+
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       cache_dtype=None) -> dict:

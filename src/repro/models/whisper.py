@@ -9,20 +9,18 @@ the decoder (matching Radford et al. 2022 structurally).
 from __future__ import annotations
 
 import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.factored import dense
 from repro.layers import attention as attn_lib
-from repro.layers.common import ModelConfig, gemm
+from repro.layers.common import (Constraint, ModelConfig, gemm,
+                                 identity_constraint as _id_cs)
 from repro.layers.embedding import embed, init_embedding, logits as lm_logits
 from repro.layers.ffn import gelu_ffn_forward, init_gelu_ffn
 from repro.layers.norms import init_ln, layer_norm
 
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 NEG_INF = -2.0 ** 30
 
 

@@ -5,19 +5,14 @@ d_ff = 0 per the assigned config — blocks carry their own projections.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable
-
 import jax
 import jax.numpy as jnp
 
 from repro.layers import xlstm as xl
-from repro.layers.common import ModelConfig
+from repro.layers.common import (Constraint, ModelConfig,
+                                 identity_constraint as _id_cs)
 from repro.layers.embedding import embed, init_embedding, logits as lm_logits
 from repro.layers.norms import init_rms, rms_norm
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 
 
 def _npairs(cfg: ModelConfig) -> int:

@@ -13,20 +13,17 @@ a nested scan; remainder layers get their own short scan.
 from __future__ import annotations
 
 import functools
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.layers import attention as attn_lib
 from repro.layers import mamba2 as m2
-from repro.layers.common import ModelConfig
+from repro.layers.common import (Constraint, ModelConfig,
+                                 identity_constraint as _id_cs)
 from repro.layers.embedding import embed, init_embedding, logits as lm_logits
 from repro.layers.ffn import init_swiglu, swiglu_forward
 from repro.layers.norms import init_rms, rms_norm
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 
 
 def _plan(cfg: ModelConfig) -> tuple[int, int, int]:
@@ -111,6 +108,7 @@ def loss_fn(params, batch, cfg, cs=_id_cs):
 
 
 # -- decode -------------------------------------------------------------------
+
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
                       cache_dtype=None) -> dict:

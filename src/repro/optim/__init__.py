@@ -9,6 +9,10 @@ from repro.optim.adamw import (AdamState, AdamWConfig, clip_by_global_norm,
                                global_norm)
 from repro.optim.q_adam import QAdamState, QTensor
 
+__all__ = ["adamw", "compress", "q_adam", "AdamState", "AdamWConfig",
+           "clip_by_global_norm", "global_norm", "QAdamState", "QTensor",
+           "make_optimizer"]
+
 
 def make_optimizer(kind: str):
   """kind: 'adamw' | 'q_adam' -> (init, apply) pair."""

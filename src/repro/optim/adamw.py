@@ -7,7 +7,7 @@ decay skips 1D params (norms, biases) following standard practice.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ State cost: 2 bytes/param (vs 8 for f32 Adam) + scales (1/last_dim).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, NamedTuple
 
 import jax

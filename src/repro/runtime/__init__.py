@@ -1,3 +1,6 @@
 """Runtime: fault-tolerant step supervision."""
 from repro.runtime.supervisor import (FaultInjector, SimulatedDeviceFailure,
                                       Supervisor, SupervisorEvents)
+
+__all__ = ["FaultInjector", "SimulatedDeviceFailure", "Supervisor",
+           "SupervisorEvents"]

@@ -1,3 +1,5 @@
 """Serving engines: batched LM decode + streaming speech."""
 from repro.serving.engine import (GenerationResult, LMEngine,
                                   StreamingSpeechServer)
+
+__all__ = ["GenerationResult", "LMEngine", "StreamingSpeechServer"]

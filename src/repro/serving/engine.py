@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -27,8 +27,6 @@ from repro.dist.sharding import make_constraint
 from repro.layers.common import ModelConfig
 from repro.models import deepspeech
 from repro.models.api import get_model
-
-_id_cs = lambda x, n: x
 
 
 @dataclasses.dataclass
@@ -49,13 +47,9 @@ class LMEngine:
       raise ValueError(f"{model_cfg.name} has no decode path")
     self.batch = batch_size
     self.max_len = max_len
-    cs = (make_constraint(mesh, model_cfg, batch_size, decode=True)
-          if mesh else _id_cs)
-    self.state = self.api.init_decode_state(model_cfg, batch_size, max_len)
-    if cache_dtype is not None:
-      self.state = jax.tree.map(
-          lambda x: x.astype(cache_dtype)
-          if x.dtype in (jnp.float32, jnp.bfloat16) else x, self.state)
+    self.cache_dtype = cache_dtype
+    cs = make_constraint(mesh, model_cfg, batch_size, decode=True)
+    self.state = self._init_state()
     self.positions = jnp.zeros((batch_size,), jnp.int32)
     self.rng = jax.random.PRNGKey(0) if rng is None else rng
 
@@ -64,9 +58,16 @@ class LMEngine:
                                   model_cfg, cs)
     self._step = jax.jit(step, donate_argnums=(1,))
 
+  def _init_state(self):
+    state = self.api.init_decode_state(self.cfg, self.batch, self.max_len)
+    if self.cache_dtype is not None:
+      state = jax.tree.map(
+          lambda x: x.astype(self.cache_dtype)
+          if x.dtype in (jnp.float32, jnp.bfloat16) else x, state)
+    return state
+
   def reset(self) -> None:
-    self.state = self.api.init_decode_state(self.cfg, self.batch,
-                                            self.max_len)
+    self.state = self._init_state()
     self.positions = jnp.zeros((self.batch,), jnp.int32)
 
   def prefill(self, prompts: np.ndarray) -> jax.Array:

@@ -1,2 +1,4 @@
 """Training: microbatched step builder + two-stage Trainer."""
 from repro.training.trainer import TrainConfig, Trainer, make_train_step
+
+__all__ = ["TrainConfig", "Trainer", "make_train_step"]

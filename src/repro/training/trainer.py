@@ -10,9 +10,8 @@ re-jit (params change structure: full-rank factored -> truncated).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,13 +21,11 @@ from repro.core.compress import FactorizationPlan, to_stage1, to_stage2
 from repro.core.schedule import TwoStageSchedule
 from repro.core.tracenorm import (RegularizerConfig, regularization_loss,
                                   trace_norm_metrics)
-from repro.dist.sharding import make_constraint
+from repro.dist.sharding import (Constraint, identity_constraint,
+                                 make_constraint)
 from repro.layers.common import ModelConfig
 from repro.models.api import ModelApi, get_model
 from repro.optim import AdamWConfig, make_optimizer
-
-Constraint = Callable[[jax.Array, str], jax.Array]
-_id_cs: Constraint = lambda x, n: x
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,7 +46,7 @@ def _lr_at(lr, step):
 
 def make_train_step(model_cfg: ModelConfig, train_cfg: TrainConfig,
                     api: Optional[ModelApi] = None,
-                    cs: Constraint = _id_cs,
+                    cs: Constraint = identity_constraint,
                     reg: Optional[RegularizerConfig] = None,
                     donate: bool = True):
   """Build the jitted (params, opt_state, batch, step) -> ... function."""
@@ -113,7 +110,7 @@ class Trainer:
     self.schedule = schedule
     self.plan = plan or FactorizationPlan()
     self.api = get_model(model_cfg)
-    self.cs = make_constraint(mesh, model_cfg, batch_size) if mesh else _id_cs
+    self.cs = make_constraint(mesh, model_cfg, batch_size)
     rng = jax.random.PRNGKey(0) if rng is None else rng
     params = self.api.init(rng, model_cfg)
     if schedule is not None and schedule.regularizer.kind == "trace":

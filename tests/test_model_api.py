@@ -1,0 +1,57 @@
+"""Dispatch coverage for the unified model API (models/api.get_model)."""
+import dataclasses
+
+import pytest
+
+from repro import configs
+from repro.models import (deepspeech, transformer, whisper, xlstm_model,
+                          zamba)
+from repro.models.api import ModelApi, get_model, identity_constraint
+
+FAMILY_CASES = {
+    # arch -> (family, implementing module)
+    "llama3-8b": ("transformer", transformer),
+    "zamba2-7b": ("zamba", zamba),
+    "xlstm-350m": ("xlstm", xlstm_model),
+    "whisper-small": ("whisper", whisper),
+    "deepspeech2-wsj": ("deepspeech", deepspeech),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(FAMILY_CASES))
+def test_get_model_dispatches_all_families(arch):
+  family, module = FAMILY_CASES[arch]
+  api = get_model(configs.get_smoke(arch))
+  assert isinstance(api, ModelApi)
+  assert api.family == family
+  assert api.loss_fn is module.loss_fn
+  assert callable(api.init)
+  assert callable(api.decode_step)
+
+
+def test_moe_mla_configs_share_transformer_family():
+  api = get_model(configs.get_smoke("deepseek-v2-lite"))
+  assert api.family == "transformer"
+  assert api.loss_fn is transformer.loss_fn
+
+
+def test_decodable_property():
+  for arch in FAMILY_CASES:
+    assert get_model(configs.get_smoke(arch)).decodable
+  # decodable is exactly "has a decode_step"
+  api = ModelApi(family="stub", init=lambda k, c: {},
+                 loss_fn=lambda p, b, c, cs=identity_constraint: (0.0, {}))
+  assert not api.decodable
+  assert dataclasses.replace(api, decode_step=lambda *a: None).decodable
+
+
+def test_whisper_api_has_encoder_but_no_forward():
+  api = get_model(configs.get_smoke("whisper-small"))
+  assert api.encode is whisper.encode
+  assert api.forward is None
+
+
+def test_unknown_family_raises_value_error():
+  bad = configs.get_smoke("llama3-8b").with_(family="gpt17")
+  with pytest.raises(ValueError, match="gpt17"):
+    get_model(bad)

@@ -1,11 +1,13 @@
 """Property tests for the paper's core math (Definition 1, Lemma 1)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+import pytest
+
+# hypothesis is not part of the runtime image; CI installs it, local runs skip
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import svd as svd_lib
 from repro.core.factored import FactoredLinear, dense, factored
