@@ -48,7 +48,7 @@ def _derived(bench: str, rows: list[dict]) -> str:
       b1 = {r["format"]: r["roofline_gops"] for r in rows
             if r["batch"] == 1}
       return (f"b1_int8={b1['int8']}GOPs"
-              f"|b1_lowrank={b1['lowrank64_bf16']}GOPs")
+              f"|b1_lowrank={b1['lowrank128_bf16']}GOPs")
     if bench == "bench_factorization_split":
       j = [r for r in rows if r["scheme"] == "partially_joint"]
       s = [r for r in rows if r["scheme"] == "completely_split"]

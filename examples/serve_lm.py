@@ -38,7 +38,11 @@ def main():
   plan = FactorizationPlan(min_dim=64)
   factored = to_stage2(to_stage1(params, plan), plan,
                        TruncationSpec(variance_threshold=0.8, round_to=8))
-  eng2 = LMEngine(cfg, factored, batch_size=4, max_len=64)
+  # kernel_policy="pallas" routes eligible decode GEMMs through the
+  # shape-specialized kernels (factored leaves -> fused lowrank_gemm);
+  # tiny smoke dims fall back to jnp, so this is a pure API demo on CPU
+  eng2 = LMEngine(cfg, factored, batch_size=4, max_len=64,
+                  kernel_policy="pallas")
   t0 = time.perf_counter()
   out2 = eng2.generate(prompts, steps=12, temperature=0.7)
   dt2 = time.perf_counter() - t0

@@ -33,6 +33,16 @@ def acc_dtype(x: jax.Array):
   return x.dtype if x.dtype == jnp.bfloat16 else jnp.float32
 
 
+def matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+  """The framework's reference GEMM: y = x @ w with `acc_dtype`
+  accumulation, output in x.dtype. Defined once, next to the dtype
+  policy, so layers.common.gemm, the kernel dispatcher's jnp regime, and
+  the tied-embedding head all share one code object — the jnp_only
+  bit-exactness guarantee hangs on this."""
+  return jnp.matmul(x, w, preferred_element_type=acc_dtype(x)).astype(
+      x.dtype)
+
+
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class FactoredLinear:
@@ -87,7 +97,7 @@ class FactoredLinear:
       ).astype(self.u.dtype)
     return self.w
 
-  def apply(self, x: jax.Array) -> jax.Array:
+  def apply(self, x: jax.Array, policy=None) -> jax.Array:
     """y = x @ W, computed as (x @ U) @ V when factored.
 
     The factored path is the paper's inference form: two skinny GEMMs of
@@ -96,7 +106,15 @@ class FactoredLinear:
     follows `acc_dtype` (one policy for every GEMM in the framework).
     Weights must be 2D: a stacked leaf against a batched activation
     would silently broadcast the layer axis against the batch axis.
+
+    `policy` (a kernels.dispatch.KernelPolicy) routes the GEMM to the
+    shape-specialized Pallas kernels; None keeps the jnp path below.
+    Imported lazily: core.factored is the leaf module kernels.dispatch
+    itself depends on.
     """
+    if policy is not None:
+      from repro.kernels import dispatch
+      return dispatch.gemm(self, x, policy)
     acc = acc_dtype(x)
     if self.is_factored:
       if self.u.ndim != 2:
@@ -106,7 +124,7 @@ class FactoredLinear:
       return jnp.matmul(t, self.v, preferred_element_type=acc).astype(x.dtype)
     if self.w.ndim != 2:
       raise ValueError("apply() expects a 2D weight; slice stacked dims first")
-    return jnp.matmul(x, self.w, preferred_element_type=acc).astype(x.dtype)
+    return matmul_ref(x, self.w)
 
   def __call__(self, x: jax.Array) -> jax.Array:
     return self.apply(x)

@@ -6,11 +6,17 @@
   gru_cell        — recurrent GEMM + gate fusion (paper eq. 10)
   flash_attention — blockwise online softmax (assigned archs' 32k shapes)
 
-Validated in interpret=True mode against kernels/ref.py oracles.
+`dispatch.KernelPolicy` is the execution surface that routes model GEMMs
+to these kernels; model/serving code threads a policy like it threads
+`cs`. Validated in interpret=True mode against kernels/ref.py oracles.
 """
 from repro.kernels import ops, ref
 from repro.kernels.ops import (decode_matvec, flash_attention, gru_cell,
                                int8_gemm, lowrank_gemm, quantized_matmul)
+from repro.kernels import dispatch
+from repro.kernels.dispatch import (KernelPolicy, decode_policy,
+                                    record_dispatch)
 
-__all__ = ["ops", "ref", "decode_matvec", "flash_attention", "gru_cell",
-           "int8_gemm", "lowrank_gemm", "quantized_matmul"]
+__all__ = ["ops", "ref", "dispatch", "decode_matvec", "flash_attention",
+           "gru_cell", "int8_gemm", "lowrank_gemm", "quantized_matmul",
+           "KernelPolicy", "decode_policy", "record_dispatch"]

@@ -1,0 +1,260 @@
+"""KernelPolicy — the execution-policy surface routing GEMMs to Pallas.
+
+The kernel-side sibling of the `cs` sharding constraint (PR 1): model code
+threads one `policy` object through its layers exactly like `cs`, and every
+GEMM call site (`layers.common.gemm`, `FactoredLinear.apply`, the GRU step)
+consults it. The policy classifies each matmul by *regime*:
+
+  decode_matvec — unfactored weight, flattened batch <= decode_batch_max
+                  (the paper's §4 low-batch serving regime)
+  lowrank_gemm  — factored W = UV leaf -> fused (x @ U) @ V, rank
+                  intermediate in VMEM (paper §3)
+  int8_gemm     — w8a8 via `ops.quantized_matmul` (per-name override only;
+                  nothing in the model zoo is quantized implicitly, and
+                  the weight is re-quantized per call until a quantized
+                  leaf representation lands — see quantized_matmul)
+  gru_cell      — recurrent step fusion (paper eq. 10), routed by
+                  `maybe_gru_cell` from layers/gru
+  jnp           — everything else / degenerate shapes: the exact
+                  `acc_dtype`-policy matmul the framework always ran
+
+Per-name overrides use the same logical-name namespace that
+`FactorizationPlan` and `dist.sharding.PARAM_RULES` match on ("gru0/rec",
+"layers/attn_q", ...), first glob wins. The default policy is `jnp_only`:
+passing no policy (or `KernelPolicy()`) reproduces current numerics
+bit-for-bit, so training and eval are untouched unless a caller opts in.
+
+Classification happens at trace time (shapes are static under jit), so a
+decode-regime policy makes `LMEngine.decode_step` / the DS2 frame step
+*lower through* the Pallas kernels — `record_dispatch()` captures the
+routing decisions of any tracing that happens inside it, which is how the
+serving tests assert the kernels are actually on the hot path.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import fnmatch
+import math
+from typing import Optional
+
+import jax
+
+from repro.core.factored import FactoredLinear, matmul_ref
+from repro.kernels import ops
+
+#: every regime a policy (or override) may name
+REGIMES = ("jnp", "decode_matvec", "lowrank_gemm", "int8_gemm", "gru_cell")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+  """Which kernel each GEMM regime lowers to. Hashable and static under jit.
+
+  mode:
+    "jnp_only" — every call site takes the plain jnp path (the default;
+      exact current numerics, training untouched).
+    "decode"   — shape-specialized routing: factored leaves -> lowrank_gemm,
+      small-batch unfactored GEMMs -> decode_matvec, recurrent steps ->
+      gru_cell; degenerate shapes (any dim < MXU lane) -> jnp.
+
+  overrides: ((glob, regime), ...) over logical GEMM names, first match
+    wins, consulted before the shape rules — e.g. (("*/rec", "jnp"),) pins
+    recurrent weights to jnp, (("fc", "int8_gemm"),) serves one layer w8a8.
+    Overrides still respect the degenerate-shape gate.
+  decode_batch_max: largest flattened batch routed to decode_matvec
+    (the kernel's documented contract; `ops.DECODE_BATCH_MAX`).
+  interpret: forwarded to the Pallas wrappers (None = auto: interpret
+    everywhere but TPU — the CPU test default).
+  """
+  mode: str = "jnp_only"
+  decode_batch_max: int = ops.DECODE_BATCH_MAX
+  overrides: tuple = ()
+  interpret: Optional[bool] = None
+
+  def __post_init__(self):
+    if self.mode not in ("jnp_only", "decode"):
+      raise ValueError(f"unknown KernelPolicy mode: {self.mode!r}")
+    if not 1 <= self.decode_batch_max <= ops.DECODE_BATCH_MAX:
+      # classify() promises the returned regime is the kernel that runs;
+      # a bound past the kernel's own contract would make it lie
+      raise ValueError(
+          f"decode_batch_max must be in [1, {ops.DECODE_BATCH_MAX}], got "
+          f"{self.decode_batch_max}")
+    for pat, regime in self.overrides:
+      if regime not in REGIMES:
+        raise ValueError(f"override {pat!r} names unknown regime {regime!r}")
+
+  def override_for(self, name: Optional[str]) -> Optional[str]:
+    if name is None:
+      return None
+    for pat, regime in self.overrides:
+      if fnmatch.fnmatch(name, pat):
+        return regime
+    return None
+
+
+JNP_ONLY = KernelPolicy()
+
+
+def decode_policy(batch_size: Optional[int] = None, *, overrides: tuple = (),
+                  interpret: Optional[bool] = None) -> KernelPolicy:
+  """The serving-engine policy: route the decode regime through Pallas.
+
+  `batch_size` (the engine's request batch) NARROWS decode_matvec's batch
+  bound to min(16, batch_size): a per-step decode GEMM has flattened
+  batch == batch_size, so anything wider (e.g. a projection batched
+  across time) is not the decode regime and stays on jnp. The kernel's
+  16-row contract is never widened.
+  """
+  bmax = ops.DECODE_BATCH_MAX
+  if batch_size is not None:
+    bmax = min(bmax, max(1, batch_size))
+  return KernelPolicy(mode="decode", decode_batch_max=bmax,
+                      overrides=tuple(overrides), interpret=interpret)
+
+
+def resolve_policy(policy, batch_size: Optional[int] = None
+                   ) -> Optional[KernelPolicy]:
+  """Accept a KernelPolicy, a mode string, or None (engine convenience)."""
+  if policy is None or isinstance(policy, KernelPolicy):
+    return policy
+  if policy in ("jnp", "jnp_only"):
+    return JNP_ONLY
+  if policy in ("pallas", "decode"):
+    return decode_policy(batch_size)
+  raise ValueError(f"unknown kernel policy: {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# Trace-time instrumentation.
+# ---------------------------------------------------------------------------
+
+_RECORDERS: list = []
+
+
+@contextlib.contextmanager
+def record_dispatch():
+  """Capture (logical_name, regime) for every dispatch decision traced
+  inside the context. Decisions happen at trace time, so build/trace the
+  jitted step *inside* the context (jit caches skip re-tracing)."""
+  log: list = []
+  _RECORDERS.append(log)
+  try:
+    yield log
+  finally:
+    _RECORDERS.remove(log)
+
+
+def _record(name: Optional[str], regime: str) -> None:
+  if _RECORDERS:
+    for log in _RECORDERS:
+      log.append((name or "<unnamed>", regime))
+
+
+# ---------------------------------------------------------------------------
+# Classification.
+# ---------------------------------------------------------------------------
+
+def _flat_batch(x: jax.Array) -> int:
+  return math.prod(x.shape[:-1]) if x.ndim > 1 else 1
+
+
+def classify(leaf, x: jax.Array, policy: Optional[KernelPolicy],
+             name: Optional[str] = None) -> str:
+  """Pick the regime for one GEMM. Pure shape/metadata logic (trace-time).
+
+  Mirrors the degenerate-shape gates of kernels/ops so the returned regime
+  is the kernel that actually executes, never an optimistic label."""
+  if policy is None or policy.mode == "jnp_only":
+    return "jnp"
+  factored = isinstance(leaf, FactoredLinear) and leaf.is_factored
+  if name is None:
+    name = getattr(leaf, "name", None)
+  regime = policy.override_for(name)
+  if regime == "gru_cell":
+    # the gru_cell regime only exists at the recurrent-step call site
+    # (maybe_gru_cell); at a plain GEMM site the override means "don't
+    # special-case", i.e. the reference path
+    regime = "jnp"
+  if regime is None:
+    if factored:
+      regime = "lowrank_gemm"
+    elif _flat_batch(x) <= policy.decode_batch_max:
+      regime = "decode_matvec"
+    else:
+      regime = "jnp"
+  # degenerate-shape gates (identical to the ops wrappers' LANE checks)
+  if regime == "lowrank_gemm":
+    if not factored or leaf.u.ndim != 2 or \
+        min(leaf.u.shape[-2], leaf.u.shape[-1], leaf.v.shape[-1]) < ops.LANE:
+      regime = "jnp"
+  elif regime in ("decode_matvec", "int8_gemm"):
+    w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
+    if factored or w is None or w.ndim != 2 or \
+        min(w.shape) < ops.LANE or \
+        (regime == "decode_matvec" and
+         _flat_batch(x) > policy.decode_batch_max):
+      regime = "jnp"
+  return regime
+
+
+# ---------------------------------------------------------------------------
+# The GEMM entry point.
+# ---------------------------------------------------------------------------
+
+def _jnp_gemm(leaf, x: jax.Array) -> jax.Array:
+  if isinstance(leaf, FactoredLinear):
+    return leaf.apply(x)
+  return matmul_ref(x, leaf)
+
+
+def gemm(leaf, x: jax.Array, policy: Optional[KernelPolicy],
+         name: Optional[str] = None) -> jax.Array:
+  """y[..., n] = x[..., m] @ W(m, n), routed by `policy`.
+
+  `layers.common.gemm` and `FactoredLinear.apply` both land here whenever a
+  policy is passed; with policy None / jnp_only this IS the historical jnp
+  path (same code object), so default numerics are unchanged."""
+  regime = classify(leaf, x, policy, name)
+  _record(name or getattr(leaf, "name", None), regime)
+  if regime == "jnp":
+    return _jnp_gemm(leaf, x)
+  lead = x.shape[:-1]
+  x2 = x.reshape(-1, x.shape[-1])
+  if regime == "lowrank_gemm":
+    y = ops.lowrank_gemm(x2, leaf.u, leaf.v, interpret=policy.interpret)
+  elif regime == "decode_matvec":
+    w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
+    y = ops.decode_matvec(x2, w, interpret=policy.interpret)
+  elif regime == "int8_gemm":
+    w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
+    y = ops.quantized_matmul(x2, w, interpret=policy.interpret)
+  else:  # pragma: no cover — REGIMES is closed above
+    raise ValueError(f"unroutable regime {regime!r}")
+  return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# The recurrent-step entry point (layers/gru).
+# ---------------------------------------------------------------------------
+
+def maybe_gru_cell(xw: jax.Array, h: jax.Array, rec, bias: jax.Array,
+                   policy: Optional[KernelPolicy]) -> Optional[jax.Array]:
+  """Route one GRU step to the fused kernel, or return None to decline
+  (caller falls back to the reference gate math, whose inner recurrent
+  GEMM still consults the policy)."""
+  if policy is None or policy.mode == "jnp_only":
+    return None
+  name = getattr(rec, "name", None)
+  override = policy.override_for(name)
+  if override is not None and override != "gru_cell":
+    return None
+  unfactored = isinstance(rec, FactoredLinear) and not rec.is_factored \
+      and rec.w.ndim == 2
+  if not unfactored or h.shape[-1] < ops.LANE:
+    # no _record here: the caller's fallback routes the recurrent GEMM
+    # through gemm(), which records the real decision for this name
+    return None
+  _record(name, "gru_cell")
+  return ops.gru_cell(xw, h, rec.w, bias, interpret=policy.interpret)

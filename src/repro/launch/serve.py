@@ -29,6 +29,10 @@ def main() -> None:
   ap.add_argument("--max-len", type=int, default=128)
   ap.add_argument("--temperature", type=float, default=0.8)
   ap.add_argument("--full", action="store_true")
+  ap.add_argument("--kernels", choices=["jnp", "pallas"], default="jnp",
+                  help="execution policy: 'pallas' routes the decode "
+                       "regime through the shape-specialized kernels "
+                       "(kernels.dispatch), 'jnp' is the reference path")
   args = ap.parse_args()
 
   cfg = (configs.get_config(args.arch) if args.full
@@ -37,7 +41,8 @@ def main() -> None:
   params = api.init(jax.random.PRNGKey(0), cfg)
 
   if cfg.family == "deepspeech":
-    server = StreamingSpeechServer(cfg, params, batch_size=args.batch)
+    server = StreamingSpeechServer(cfg, params, batch_size=args.batch,
+                                   kernel_policy=args.kernels)
     dc = SpeechDataConfig(vocab_size=cfg.vocab_size, feat_dim=cfg.feat_dim,
                           global_batch=args.batch)
     chunk = batch_at(dc, 0)["feats"][:, :32]
@@ -52,7 +57,7 @@ def main() -> None:
   prompts = rng.randint(1, cfg.vocab_size,
                         size=(args.batch, args.prompt_len))
   engine = LMEngine(cfg, params, batch_size=args.batch,
-                    max_len=args.max_len)
+                    max_len=args.max_len, kernel_policy=args.kernels)
   t0 = time.perf_counter()
   res = engine.generate(prompts, steps=args.steps,
                         temperature=args.temperature)

@@ -46,12 +46,12 @@ def init_attention(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
 
 
 def _project_qkv(p: dict, x: jax.Array, cfg: ModelConfig,
-                 positions: jax.Array, cs: Constraint):
+                 positions: jax.Array, cs: Constraint, policy=None):
   b, s, _ = x.shape
   h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-  q = gemm(p["wq"], x).reshape(b, s, h, hd)
-  k = gemm(p["wk"], x).reshape(b, s, kv, hd)
-  v = gemm(p["wv"], x).reshape(b, s, kv, hd)
+  q = gemm(p["wq"], x, policy).reshape(b, s, h, hd)
+  k = gemm(p["wk"], x, policy).reshape(b, s, kv, hd)
+  v = gemm(p["wv"], x, policy).reshape(b, s, kv, hd)
   if cfg.qk_norm:
     q = rms_norm(q, p["q_norm"], cfg.norm_eps)
     k = rms_norm(k, p["k_norm"], cfg.norm_eps)
@@ -137,14 +137,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, cfg: ModelConfig,
 
 
 def attention_forward(p: dict, x: jax.Array, cfg: ModelConfig,
-                      cs: Constraint = _id_cs) -> jax.Array:
+                      cs: Constraint = _id_cs, policy=None) -> jax.Array:
   """Full-sequence causal self-attention (train / prefill)."""
   b, s, _ = x.shape
   positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-  q, k, v = _project_qkv(p, x, cfg, positions, cs)
+  q, k, v = _project_qkv(p, x, cfg, positions, cs, policy)
   out = flash_attention(q, k, v, cfg, cs)
   h, hd = cfg.num_heads, cfg.resolved_head_dim
-  return gemm(p["wo"], out.reshape(b, s, h * hd))
+  return gemm(p["wo"], out.reshape(b, s, h * hd), policy)
 
 
 # ----------------------------------------------------------------------------
@@ -164,11 +164,12 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 def attention_decode(p: dict, x: jax.Array, cache: dict,
                      positions: jax.Array, cfg: ModelConfig,
-                     cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+                     cs: Constraint = _id_cs, policy=None
+                     ) -> tuple[jax.Array, dict]:
   """One decode step. x: (b, 1, d); positions: (b,) write offsets."""
   b = x.shape[0]
   h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
-  q, k_new, v_new = _project_qkv(p, x, cfg, positions[:, None], cs)
+  q, k_new, v_new = _project_qkv(p, x, cfg, positions[:, None], cs, policy)
   # scatter the new kv at per-sequence positions
   bidx = jnp.arange(b)
   k_cache = cache["k"].at[bidx, positions].set(
@@ -197,5 +198,5 @@ def attention_decode(p: dict, x: jax.Array, cache: dict,
     pr = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhs,bshd->bhd", pr, v.astype(jnp.float32))
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
-  y = gemm(p["wo"], out)
+  y = gemm(p["wo"], out, policy)
   return y, {"k": k_cache, "v": v_cache}

@@ -12,7 +12,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.factored import FactoredLinear, acc_dtype
+from repro.core.factored import FactoredLinear, matmul_ref
 
 # The sharding-constraint contract every model function threads through its
 # layers: cs(x, logical_name) -> x. Hosted here (the leaf module all layer
@@ -27,16 +27,25 @@ def identity_constraint(x, name: str):
   return x
 
 
-def gemm(leaf: FactoredLinear | jax.Array, x: jax.Array) -> jax.Array:
+def gemm(leaf: FactoredLinear | jax.Array, x: jax.Array,
+         policy=None) -> jax.Array:
   """y[..., n] = x[..., m] @ W(m, n); factored path = (x @ U) @ V.
 
   FactoredLinear leaves delegate to `leaf.apply(x)` — the factored math
   AND the accumulation-dtype policy live in exactly one place
-  (core.factored.acc_dtype); raw arrays follow the same policy here."""
+  (core.factored.acc_dtype); raw arrays follow the same policy here.
+
+  `policy` is the kernel-side sibling of `cs`: a
+  `kernels.dispatch.KernelPolicy` that classifies this GEMM by regime
+  (decode batch -> decode_matvec, factored leaf -> lowrank_gemm, w8a8
+  override -> int8_gemm) and lowers it through the Pallas kernels. None —
+  the default everywhere — is the exact historical jnp path."""
+  if policy is not None:
+    from repro.kernels import dispatch
+    return dispatch.gemm(leaf, x, policy)
   if isinstance(leaf, FactoredLinear):
     return leaf.apply(x)
-  return jnp.matmul(x, leaf, preferred_element_type=acc_dtype(x)).astype(
-      x.dtype)
+  return matmul_ref(x, leaf)
 
 
 @dataclasses.dataclass(frozen=True)

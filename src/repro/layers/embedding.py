@@ -10,7 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.factored import acc_dtype, dense
+from repro.core.factored import dense, matmul_ref
 from repro.layers.common import gemm
 
 
@@ -29,8 +29,14 @@ def embed(p: dict, tokens: jax.Array) -> jax.Array:
   return p["table"][tokens]
 
 
-def logits(p: dict, x: jax.Array) -> jax.Array:
+def logits(p: dict, x: jax.Array, policy=None) -> jax.Array:
   if "head" in p:
-    return gemm(p["head"], x)
-  return jnp.matmul(x, p["table"].T,
-                    preferred_element_type=acc_dtype(x)).astype(x.dtype)
+    return gemm(p["head"], x, policy)
+  # Tied head: XLA fuses the table transpose into the matmul for free,
+  # while the Pallas kernels would materialize (and pad) a transposed
+  # copy of the model's largest weight on every step — so the tied path
+  # stays jnp unless a policy override names "lm_head_tied" explicitly.
+  if policy is not None and policy.override_for("lm_head_tied"):
+    from repro.kernels import dispatch
+    return dispatch.gemm(p["table"].T, x, policy, name="lm_head_tied")
+  return matmul_ref(x, p["table"].T)

@@ -21,11 +21,12 @@ def init_swiglu(key: jax.Array, d: int, f: int, *, layer_prefix: str,
   }
 
 
-def swiglu_forward(p: dict, x: jax.Array, cs=identity_constraint) -> jax.Array:
-  g = cs(gemm(p["w_gate"], x), "bsf")
-  u = cs(gemm(p["w_up"], x), "bsf")
+def swiglu_forward(p: dict, x: jax.Array, cs=identity_constraint,
+                   policy=None) -> jax.Array:
+  g = cs(gemm(p["w_gate"], x, policy), "bsf")
+  u = cs(gemm(p["w_up"], x, policy), "bsf")
   h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
-  return gemm(p["w_down"], h)
+  return gemm(p["w_down"], h, policy)
 
 
 def init_gelu_ffn(key: jax.Array, d: int, f: int, *, layer_prefix: str,
@@ -41,7 +42,8 @@ def init_gelu_ffn(key: jax.Array, d: int, f: int, *, layer_prefix: str,
   }
 
 
-def gelu_ffn_forward(p: dict, x: jax.Array, cs=identity_constraint) -> jax.Array:
-  h = gemm(p["w_in"], x) + p["b_in"].astype(x.dtype)
+def gelu_ffn_forward(p: dict, x: jax.Array, cs=identity_constraint,
+                     policy=None) -> jax.Array:
+  h = gemm(p["w_in"], x, policy) + p["b_in"].astype(x.dtype)
   h = cs(jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype), "bsf")
-  return gemm(p["w_out"], h) + p["b_out"].astype(x.dtype)
+  return gemm(p["w_out"], h, policy) + p["b_out"].astype(x.dtype)

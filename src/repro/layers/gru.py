@@ -36,9 +36,19 @@ def init_gru(key: jax.Array, in_dim: int, hidden: int, *, layer_prefix: str,
 
 
 def gru_cell(xw: jax.Array, h: jax.Array, rec: FactoredLinear,
-             bias: jax.Array, hidden: int) -> jax.Array:
-  """One step given the precomputed non-recurrent projection xw (b, 3h)."""
-  hu = gemm(rec, h)                                   # (b, 3h) — the
+             bias: jax.Array, hidden: int, policy=None) -> jax.Array:
+  """One step given the precomputed non-recurrent projection xw (b, 3h).
+
+  Under a Pallas `policy` the whole step (recurrent GEMM + gates) lowers
+  through the fused kernels.gru_cell; when the kernel declines (factored
+  recurrent weight, degenerate hidden) the reference gate math below runs,
+  with its inner recurrent GEMM still consulting the policy."""
+  if policy is not None:
+    from repro.kernels import dispatch
+    fused = dispatch.maybe_gru_cell(xw, h, rec, bias, policy)
+    if fused is not None:
+      return fused
+  hu = gemm(rec, h, policy)                           # (b, 3h) — the
   # sequential batch-1-per-step GEMM the paper's kernels target
   g = xw.astype(jnp.float32) + hu.astype(jnp.float32) + bias
   gz, gr, gh_ = g[:, :hidden], g[:, hidden:2 * hidden], g[:, 2 * hidden:]
@@ -51,25 +61,26 @@ def gru_cell(xw: jax.Array, h: jax.Array, rec: FactoredLinear,
   return h1.astype(h.dtype)
 
 
-def gru_forward(p: dict, x: jax.Array, cs: Constraint = _id_cs) -> jax.Array:
+def gru_forward(p: dict, x: jax.Array, cs: Constraint = _id_cs,
+                policy=None) -> jax.Array:
   """Forward-only GRU over a sequence. x: (b, t, in) -> (b, t, hidden)."""
   b, t, _ = x.shape
   hidden = p["rec"].in_dim if isinstance(p["rec"], FactoredLinear) \
       else p["rec"].shape[0]
   # batch the non-recurrent GEMM across time (paper §4)
-  xw = gemm(p["nonrec"], x)
+  xw = gemm(p["nonrec"], x, policy)
   xw = cs(xw, "bt3h")
   h0 = jnp.zeros((b, hidden), x.dtype)
   def step(h, xwt):
-    h1 = gru_cell(xwt, h, p["rec"], p["bias"], hidden)
+    h1 = gru_cell(xwt, h, p["rec"], p["bias"], hidden, policy)
     return h1, h1
   _, hs = jax.lax.scan(step, h0, xw.transpose(1, 0, 2))
   return hs.transpose(1, 0, 2)
 
 
 def gru_decode(p: dict, x_t: jax.Array, h: jax.Array,
-               cs: Constraint = _id_cs) -> jax.Array:
+               cs: Constraint = _id_cs, policy=None) -> jax.Array:
   """Streaming step: x_t (b, in), h (b, hidden) -> h' (b, hidden)."""
   hidden = h.shape[-1]
-  xw = gemm(p["nonrec"], x_t)
-  return gru_cell(xw, h, p["rec"], p["bias"], hidden)
+  xw = gemm(p["nonrec"], x_t, policy)
+  return gru_cell(xw, h, p["rec"], p["bias"], hidden, policy)

@@ -48,12 +48,12 @@ def init_mamba2(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
   }
 
 
-def _split_proj(p, xin, cfg, expand=2):
+def _split_proj(p, xin, cfg, expand=2, policy=None):
   d_inner = expand * cfg.d_model
   nheads = d_inner // HEAD_DIM
   n = cfg.ssm_state
-  zx = gemm(p["in_zx"], xin)
-  bcdt = gemm(p["in_bcdt"], xin)
+  zx = gemm(p["in_zx"], xin, policy)
+  bcdt = gemm(p["in_bcdt"], xin, policy)
   z = zx[..., :d_inner]
   x = zx[..., d_inner:]
   B = bcdt[..., :n]
@@ -132,9 +132,10 @@ def ssd_chunked(x, dt, A, B, C, chunk=CHUNK):
 
 
 def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig,
-                   cs: Constraint = _id_cs, expand: int = 2) -> jax.Array:
+                   cs: Constraint = _id_cs, expand: int = 2,
+                   policy=None) -> jax.Array:
   b, s, d = x.shape
-  z, xi, B, C, dt, d_inner, nheads = _split_proj(p, x, cfg, expand)
+  z, xi, B, C, dt, d_inner, nheads = _split_proj(p, x, cfg, expand, policy)
   xi, _ = _causal_conv(xi, p["conv_w"])
   xi = cs(xi, "bsi")
   dt = jax.nn.softplus(dt.astype(jnp.float32) +
@@ -147,7 +148,7 @@ def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig,
   y = y.reshape(b, s, d_inner).astype(x.dtype)
   y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
   y = rms_norm(y, p["norm"], cfg.norm_eps)
-  return gemm(p["out_proj"], y)
+  return gemm(p["out_proj"], y, policy)
 
 
 # -- decode ------------------------------------------------------------------
@@ -165,11 +166,11 @@ def init_mamba2_state(cfg: ModelConfig, batch: int,
 
 
 def mamba2_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
-                  cs: Constraint = _id_cs, expand: int = 2
-                  ) -> tuple[jax.Array, dict]:
+                  cs: Constraint = _id_cs, expand: int = 2,
+                  policy=None) -> tuple[jax.Array, dict]:
   """One decode step. x: (b, 1, d). State is O(1) in context length."""
   b = x.shape[0]
-  z, xi, B, C, dt, d_inner, nheads = _split_proj(p, x, cfg, expand)
+  z, xi, B, C, dt, d_inner, nheads = _split_proj(p, x, cfg, expand, policy)
   xi, conv_state = _causal_conv(xi, p["conv_w"], state["conv"])
   dt = jax.nn.softplus(dt.astype(jnp.float32) +
                        p["dt_bias"].astype(jnp.float32))[:, 0]   # (b,h)
@@ -186,4 +187,4 @@ def mamba2_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
   y = y.reshape(b, 1, d_inner).astype(x.dtype)
   y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
   y = rms_norm(y, p["norm"], cfg.norm_eps)
-  return gemm(p["out_proj"], y), {"ssm": ssm, "conv": conv_state}
+  return gemm(p["out_proj"], y, policy), {"ssm": ssm, "conv": conv_state}

@@ -55,24 +55,26 @@ def init_mla(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
   return p
 
 
-def _queries(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+def _queries(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+             policy=None):
   m, h = cfg.mla, cfg.num_heads
   b, s, _ = x.shape
   qk = m.qk_nope_dim + m.qk_rope_dim
   if cfg.mla.q_lora_rank:
-    qa = rms_norm(gemm(p["wq_a"], x), p["q_a_norm"], cfg.norm_eps)
-    q = gemm(p["wq_b"], qa)
+    qa = rms_norm(gemm(p["wq_a"], x, policy), p["q_a_norm"], cfg.norm_eps)
+    q = gemm(p["wq_b"], qa, policy)
   else:
-    q = gemm(p["wq"], x)
+    q = gemm(p["wq"], x, policy)
   q = q.reshape(b, s, h, qk)
   q_nope, q_rope = q[..., :m.qk_nope_dim], q[..., m.qk_nope_dim:]
   q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
   return q_nope, q_rope
 
 
-def _latents(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
+def _latents(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+             policy=None):
   m = cfg.mla
-  ckv = gemm(p["w_dkv"], x)
+  ckv = gemm(p["w_dkv"], x, policy)
   c, k_rope = ckv[..., :m.kv_lora_rank], ckv[..., m.kv_lora_rank:]
   c = rms_norm(c, p["kv_a_norm"], cfg.norm_eps)
   # rope part is shared across heads: (b, s, 1, rope_dim)
@@ -82,16 +84,16 @@ def _latents(p: dict, x: jax.Array, cfg: ModelConfig, positions: jax.Array):
 
 
 def mla_forward(p: dict, x: jax.Array, cfg: ModelConfig,
-                cs: Constraint = _id_cs) -> jax.Array:
+                cs: Constraint = _id_cs, policy=None) -> jax.Array:
   """Full-sequence causal MLA (train / prefill). Blockwise over queries."""
   m, h = cfg.mla, cfg.num_heads
   b, s, _ = x.shape
   positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
-  q_nope, q_rope = _queries(p, x, cfg, positions)
-  c, k_rope = _latents(p, x, cfg, positions)
+  q_nope, q_rope = _queries(p, x, cfg, positions, policy)
+  c, k_rope = _latents(p, x, cfg, positions, policy)
   # up-project k/v from the latent for train/prefill (the non-absorbed form)
-  k_nope = gemm(p["w_uk"], c).reshape(b, s, h, m.qk_nope_dim)
-  v = gemm(p["w_uv"], c).reshape(b, s, h, m.v_head_dim)
+  k_nope = gemm(p["w_uk"], c, policy).reshape(b, s, h, m.qk_nope_dim)
+  v = gemm(p["w_uv"], c, policy).reshape(b, s, h, m.v_head_dim)
   q_nope = cs(q_nope, "bshd_q")
   k_nope = cs(k_nope, "bshd_q")
   v = cs(v, "bshd_q")
@@ -143,7 +145,7 @@ def mla_forward(p: dict, x: jax.Array, cfg: ModelConfig,
     return None, q_block(i, a, r)
   _, out = jax.lax.scan(outer, None, (jnp.arange(nq), qn, qr))
   out = out.transpose(1, 0, 2, 3, 4).reshape(b, s, h * m.v_head_dim)
-  return gemm(p["wo"], out)
+  return gemm(p["wo"], out, policy)
 
 
 def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
@@ -157,7 +159,7 @@ def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def mla_decode(p: dict, x: jax.Array, cache: dict, positions: jax.Array,
-               cfg: ModelConfig, cs: Constraint = _id_cs
+               cfg: ModelConfig, cs: Constraint = _id_cs, policy=None
                ) -> tuple[jax.Array, dict]:
   """Absorbed-form decode: score via the latent cache, rank-sized traffic.
 
@@ -165,8 +167,8 @@ def mla_decode(p: dict, x: jax.Array, cache: dict, positions: jax.Array,
   """
   m, h = cfg.mla, cfg.num_heads
   b = x.shape[0]
-  q_nope, q_rope = _queries(p, x, cfg, positions[:, None])
-  c_new, kr_new = _latents(p, x, cfg, positions[:, None])
+  q_nope, q_rope = _queries(p, x, cfg, positions[:, None], policy)
+  c_new, kr_new = _latents(p, x, cfg, positions[:, None], policy)
   bidx = jnp.arange(b)
   c_cache = cache["c_kv"].at[bidx, positions].set(
       c_new[:, 0].astype(cache["c_kv"].dtype))
@@ -190,7 +192,7 @@ def mla_decode(p: dict, x: jax.Array, cache: dict, positions: jax.Array,
   w_uv = _as_w(p["w_uv"]).reshape(m.kv_lora_rank, h, m.v_head_dim)
   out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
   out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype)
-  y = gemm(p["wo"], out)
+  y = gemm(p["wo"], out, policy)
   return y, {"c_kv": c_cache, "k_rope": kr_cache}
 
 

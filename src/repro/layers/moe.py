@@ -87,8 +87,12 @@ def _combine_one_group(out_buf, bookkeeping, topw, t: int, d: int, dtype):
 
 
 def moe_forward(p: dict, x: jax.Array, cfg: ModelConfig,
-                cs: Constraint = _id_cs) -> tuple[jax.Array, jax.Array]:
-  """x: (b, s, d) -> (y, aux_loss)."""
+                cs: Constraint = _id_cs, policy=None
+                ) -> tuple[jax.Array, jax.Array]:
+  """x: (b, s, d) -> (y, aux_loss).
+
+  The routed-expert einsums are stacked (E, m, n) contractions outside the
+  2D-GEMM regimes; only the shared-expert SwiGLU consults `policy`."""
   m = cfg.moe
   b, s, d = x.shape
   t = b * s
@@ -131,7 +135,8 @@ def moe_forward(p: dict, x: jax.Array, cfg: ModelConfig,
   y = y.reshape(t, d)
 
   if m.num_shared:
-    y = y + swiglu_forward(p["shared"], x.reshape(t, d), cs).reshape(t, d)
+    y = y + swiglu_forward(p["shared"], x.reshape(t, d), cs,
+                           policy).reshape(t, d)
   return y.reshape(b, s, d), aux.astype(jnp.float32)
 
 

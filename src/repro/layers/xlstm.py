@@ -94,17 +94,18 @@ def _mlstm_chunk(q, k, v, logf, logi, C0, n0, m0):
 
 
 def mlstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
-                  cs: Constraint = _id_cs, pf: float = 2.0) -> jax.Array:
+                  cs: Constraint = _id_cs, pf: float = 2.0,
+                  policy=None) -> jax.Array:
   b, s, d = x.shape
   di = int(pf * d)
   h = cfg.num_heads
   hd = di // h
-  up = gemm(p["up"], x)
+  up = gemm(p["up"], x, policy)
   xin, z = up[..., :di], up[..., di:]
-  qkv = gemm(p["qkv"], xin)
+  qkv = gemm(p["qkv"], xin, policy)
   q, k, v = [t.reshape(b, s, h, hd).astype(jnp.float32)
              for t in jnp.split(qkv, 3, axis=-1)]
-  gates = gemm(p["ifg"], xin).astype(jnp.float32).reshape(b, s, 2, h)
+  gates = gemm(p["ifg"], xin, policy).astype(jnp.float32).reshape(b, s, 2, h)
   logi = gates[:, :, 0]
   logf = jax.nn.log_sigmoid(gates[:, :, 1])
 
@@ -125,7 +126,7 @@ def mlstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
   y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, di)
   y = y.astype(x.dtype) * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
   y = rms_norm(y, p["norm"], cfg.norm_eps)
-  return gemm(p["down"], y)
+  return gemm(p["down"], y, policy)
 
 
 def init_mlstm_state(cfg: ModelConfig, batch: int,
@@ -141,19 +142,19 @@ def init_mlstm_state(cfg: ModelConfig, batch: int,
 
 
 def mlstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
-                 cs: Constraint = _id_cs, pf: float = 2.0
-                 ) -> tuple[jax.Array, dict]:
+                 cs: Constraint = _id_cs, pf: float = 2.0,
+                 policy=None) -> tuple[jax.Array, dict]:
   b = x.shape[0]
   d = cfg.d_model
   di = int(pf * d)
   h = cfg.num_heads
   hd = di // h
-  up = gemm(p["up"], x)
+  up = gemm(p["up"], x, policy)
   xin, z = up[..., :di], up[..., di:]
-  qkv = gemm(p["qkv"], xin)
+  qkv = gemm(p["qkv"], xin, policy)
   q, k, v = [t.reshape(b, h, hd).astype(jnp.float32)
              for t in jnp.split(qkv[:, 0], 3, axis=-1)]
-  gates = gemm(p["ifg"], xin).astype(jnp.float32).reshape(b, 2, h)
+  gates = gemm(p["ifg"], xin, policy).astype(jnp.float32).reshape(b, 2, h)
   logi, logf = gates[:, 0], jax.nn.log_sigmoid(gates[:, 1])
   m1 = jnp.maximum(logf + state["m"], logi)
   fe = jnp.exp(logf + state["m"] - m1)
@@ -167,7 +168,7 @@ def mlstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
   y = y.reshape(b, 1, di).astype(x.dtype) * \
       jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
   y = rms_norm(y, p["norm"], cfg.norm_eps)
-  return gemm(p["down"], y), {"C": C1, "n": n1, "m": m1}
+  return gemm(p["down"], y, policy), {"C": C1, "n": n1, "m": m1}
 
 
 # ---------------------------------------------------------------------------
@@ -219,12 +220,12 @@ def _slstm_cell(xg, hcnm, rh, h_, hd):
 
 
 def slstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
-                  cs: Constraint = _id_cs) -> jax.Array:
+                  cs: Constraint = _id_cs, policy=None) -> jax.Array:
   b, s, d = x.shape
   h_ = cfg.num_heads
   hd = d // h_
   # non-recurrent GEMM batched across time (paper §4's Wx batching)
-  xg = gemm(p["wx"], x) + p["bias"].astype(x.dtype)
+  xg = gemm(p["wx"], x, policy) + p["bias"].astype(x.dtype)
   rh = p["rh"].product() if hasattr(p["rh"], "product") else p["rh"]
   state = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
            jnp.zeros((b, d), jnp.float32), jnp.full((b, d), -1e30,
@@ -235,7 +236,7 @@ def slstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
   _, hs = jax.lax.scan(step, state, xg.transpose(1, 0, 2))
   y = hs.transpose(1, 0, 2).astype(x.dtype)
   y = rms_norm(y, p["norm"], cfg.norm_eps)
-  return gemm(p["out"], y)
+  return gemm(p["out"], y, policy)
 
 
 def init_slstm_state(cfg: ModelConfig, batch: int,
@@ -247,16 +248,17 @@ def init_slstm_state(cfg: ModelConfig, batch: int,
 
 
 def slstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
-                 cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+                 cs: Constraint = _id_cs, policy=None
+                 ) -> tuple[jax.Array, dict]:
   b = x.shape[0]
   d = cfg.d_model
   h_ = cfg.num_heads
   hd = d // h_
-  xg = (gemm(p["wx"], x) + p["bias"].astype(x.dtype))[:, 0]
+  xg = (gemm(p["wx"], x, policy) + p["bias"].astype(x.dtype))[:, 0]
   rh = p["rh"].product() if hasattr(p["rh"], "product") else p["rh"]
   new = _slstm_cell(xg, (state["h"], state["c"], state["n"], state["m"]),
                     rh, h_, hd)
   y = new[0][:, None, :].astype(x.dtype)
   y = rms_norm(y, p["norm"], cfg.norm_eps)
-  return gemm(p["out"], y), {"h": new[0], "c": new[1], "n": new[2],
-                             "m": new[3]}
+  return gemm(p["out"], y, policy), {"h": new[0], "c": new[1], "n": new[2],
+                                     "m": new[3]}

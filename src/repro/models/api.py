@@ -4,7 +4,7 @@ Every family exposes:
   init(key, cfg)                          -> params pytree
   loss_fn(params, batch, cfg, cs)         -> (scalar loss, metrics dict)
   init_decode_state(cfg, batch, max_len)  -> decode-state pytree (if decodable)
-  decode_step(params, state, token/feat, positions, cfg, cs)
+  decode_step(params, state, token/feat, positions, cfg, cs, policy)
                                           -> (logits, new state)
 
 The training loop, serving engine, dry-run, and benchmarks all go through
@@ -38,6 +38,17 @@ class ModelApi:
   makes each annotation a no-op. Model code therefore compiles
   identically for train, serve and dry-run — only the `cs` passed in
   (and the jit in/out shardings around it) changes.
+
+  The kernel-policy contract is the execution-side twin: `forward` /
+  `decode_step` also thread a `policy` (a
+  `repro.kernels.dispatch.KernelPolicy`) to every GEMM call site, which
+  classifies each matmul by regime (decode batch -> decode_matvec,
+  factored leaf -> lowrank_gemm, recurrent step -> gru_cell, per-name
+  overrides) and lowers it through the Pallas kernels. The single
+  factory for a serving policy is `repro.kernels.dispatch.decode_policy`;
+  the default (None) is the plain jnp path, so training and eval are
+  byte-identical unless a caller opts in. Like `cs`, the policy is
+  trace-time static: pass it by closure, never as a jit operand.
   """
   family: str
   init: Callable

@@ -69,13 +69,14 @@ def _frontend(params: dict, feats: jax.Array, cfg: ModelConfig
 
 
 def forward(params: dict, feats: jax.Array, cfg: ModelConfig,
-            cs: Constraint = _id_cs) -> jax.Array:
+            cs: Constraint = _id_cs, policy=None) -> jax.Array:
   """feats (b, t, feat_dim) -> log_probs (b, t', vocab)."""
   x = _frontend(params, feats, cfg)
   for i in range(len(cfg.gru_dims)):
-    x = gru_forward(params["grus"][f"gru{i}"], x, cs)
-  x = jax.nn.relu(gemm(params["fc"], x).astype(jnp.float32)).astype(x.dtype)
-  logits = gemm(params["out"], x)
+    x = gru_forward(params["grus"][f"gru{i}"], x, cs, policy)
+  x = jax.nn.relu(
+      gemm(params["fc"], x, policy).astype(jnp.float32)).astype(x.dtype)
+  logits = gemm(params["out"], x, policy)
   return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
 
 
@@ -106,21 +107,24 @@ def init_decode_state(cfg: ModelConfig, batch: int) -> dict:
 
 
 def decode_step(params: dict, state: dict, x_t: jax.Array,
-                cfg: ModelConfig, cs: Constraint = _id_cs
+                cfg: ModelConfig, cs: Constraint = _id_cs, policy=None
                 ) -> tuple[jax.Array, dict]:
   """One post-frontend frame x_t (b, gru_in) -> (log_probs (b, v), state).
 
   This is the paper's low-batch regime: each GRU step is a skinny GEMM
   against the recurrent matrix — the workload kernels/decode_matvec and
-  kernels/gru_cell target.
+  kernels/gru_cell target. A decode-regime `policy` routes exactly those
+  call sites through the Pallas kernels.
   """
   from repro.layers.gru import gru_decode
   new_state = {}
   h = x_t
   for i in range(len(cfg.gru_dims)):
-    hi = gru_decode(params["grus"][f"gru{i}"], h, state[f"gru{i}"], cs)
+    hi = gru_decode(params["grus"][f"gru{i}"], h, state[f"gru{i}"], cs,
+                    policy)
     new_state[f"gru{i}"] = hi
     h = hi
-  h = jax.nn.relu(gemm(params["fc"], h).astype(jnp.float32)).astype(h.dtype)
-  logits = gemm(params["out"], h)
+  h = jax.nn.relu(
+      gemm(params["fc"], h, policy).astype(jnp.float32)).astype(h.dtype)
+  logits = gemm(params["out"], h, policy)
   return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1), new_state

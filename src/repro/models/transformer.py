@@ -69,27 +69,30 @@ def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
   return p
 
 
-def _layer_fwd(x, lp, cfg: ModelConfig, cs: Constraint, *, use_moe: bool):
+def _layer_fwd(x, lp, cfg: ModelConfig, cs: Constraint, *, use_moe: bool,
+               policy=None):
   # gather the FSDP-sharded layer slice INSIDE the remat region, so the
   # backward pass re-gathers instead of keeping every layer live
   lp = cs(lp, "layer_params")
   h = rms_norm(x, lp["ln1"], cfg.norm_eps)
   if cfg.mla is not None:
-    h = mla_lib.mla_forward(lp["attn"], h, cfg, cs)
+    h = mla_lib.mla_forward(lp["attn"], h, cfg, cs, policy)
   else:
-    h = attn_lib.attention_forward(lp["attn"], h, cfg, cs)
+    h = attn_lib.attention_forward(lp["attn"], h, cfg, cs, policy)
   x = cs(x + h, "bsd")
   h = rms_norm(x, lp["ln2"], cfg.norm_eps)
   if use_moe:
-    h, aux = moe_lib.moe_forward(lp["moe"], h, cfg, cs)
+    h, aux = moe_lib.moe_forward(lp["moe"], h, cfg, cs, policy)
   else:
-    h, aux = swiglu_forward(lp["ffn"], h, cs), jnp.zeros((), jnp.float32)
+    h, aux = swiglu_forward(lp["ffn"], h, cs, policy), jnp.zeros(
+        (), jnp.float32)
   return cs(x + h, "bsd"), aux
 
 
 def _scan_stack(x, stack, cfg: ModelConfig, cs: Constraint, *,
-                use_moe: bool):
-  body = functools.partial(_layer_fwd, cfg=cfg, cs=cs, use_moe=use_moe)
+                use_moe: bool, policy=None):
+  body = functools.partial(_layer_fwd, cfg=cfg, cs=cs, use_moe=use_moe,
+                           policy=policy)
   if cfg.remat == "full":
     body = jax.remat(body)
   elif cfg.remat == "dots":
@@ -103,8 +106,8 @@ def _scan_stack(x, stack, cfg: ModelConfig, cs: Constraint, *,
 
 
 def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
-            cs: Constraint = _id_cs, *, last_only: bool = False
-            ) -> tuple[jax.Array, jax.Array]:
+            cs: Constraint = _id_cs, *, last_only: bool = False,
+            policy=None) -> tuple[jax.Array, jax.Array]:
   """tokens (b, s) -> (logits (b, s, v), moe aux loss).
 
   last_only=True (serving prefill) narrows to the final position before
@@ -112,15 +115,17 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
   x = cs(embed(params["embedding"], tokens), "bsd")
   aux = jnp.zeros((), jnp.float32)
   if "dense_layers" in params:
-    x, a = _scan_stack(x, params["dense_layers"], cfg, cs, use_moe=False)
+    x, a = _scan_stack(x, params["dense_layers"], cfg, cs, use_moe=False,
+                       policy=policy)
     aux += a
   if "moe_layers" in params:
-    x, a = _scan_stack(x, params["moe_layers"], cfg, cs, use_moe=True)
+    x, a = _scan_stack(x, params["moe_layers"], cfg, cs, use_moe=True,
+                       policy=policy)
     aux += a
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
   if last_only:
     x = x[:, -1:]
-  return cs(lm_logits(params["embedding"], x), "bsv"), aux
+  return cs(lm_logits(params["embedding"], x, policy), "bsv"), aux
 
 
 def _xent(logits: jax.Array, targets: jax.Array) -> jax.Array:
@@ -178,20 +183,20 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def _decode_stack(x, stack, cache, positions, cfg: ModelConfig,
-                  cs: Constraint, *, use_moe: bool):
+                  cs: Constraint, *, use_moe: bool, policy=None):
   dec = (mla_lib.mla_decode if cfg.mla is not None
          else attn_lib.attention_decode)
   def body(h, xs):
     lp, lc = xs
     lp = cs(lp, "layer_params")
     a = rms_norm(h, lp["ln1"], cfg.norm_eps)
-    a, new_c = dec(lp["attn"], a, lc, positions, cfg, cs)
+    a, new_c = dec(lp["attn"], a, lc, positions, cfg, cs, policy)
     h = h + a
     f = rms_norm(h, lp["ln2"], cfg.norm_eps)
     if use_moe:
-      f, _ = moe_lib.moe_forward(lp["moe"], f, cfg, cs)
+      f, _ = moe_lib.moe_forward(lp["moe"], f, cfg, cs, policy)
     else:
-      f = swiglu_forward(lp["ffn"], f, cs)
+      f = swiglu_forward(lp["ffn"], f, cs, policy)
     return h + f, new_c
   x, new_cache = jax.lax.scan(body, x, (stack, cache))
   return x, new_cache
@@ -199,17 +204,18 @@ def _decode_stack(x, stack, cache, positions, cfg: ModelConfig,
 
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
-                cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+                cs: Constraint = _id_cs, policy=None
+                ) -> tuple[jax.Array, dict]:
   """token (b, 1), positions (b,) -> (logits (b, 1, v), new state)."""
   x = cs(embed(params["embedding"], token), "bsd")
   new_state = dict(state)
   if "dense_layers" in params:
     x, new_state["dense"] = _decode_stack(
         x, params["dense_layers"], state["dense"], positions, cfg, cs,
-        use_moe=False)
+        use_moe=False, policy=policy)
   if "moe_layers" in params:
     x, new_state["moe"] = _decode_stack(
         x, params["moe_layers"], state["moe"], positions, cfg, cs,
-        use_moe=True)
+        use_moe=True, policy=policy)
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-  return lm_logits(params["embedding"], x), new_state
+  return lm_logits(params["embedding"], x, policy), new_state

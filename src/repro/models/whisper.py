@@ -48,18 +48,18 @@ def _init_xattn(key, cfg: ModelConfig, prefix: str):
   }
 
 
-def _xattn(p, x, mem, cfg, cs):
+def _xattn(p, x, mem, cfg, cs, policy=None):
   """Cross attention: queries from x (b,s,d), keys/values from mem."""
   b, s, _ = x.shape
   h, hd = cfg.num_heads, cfg.resolved_head_dim
-  q = gemm(p["wq"], x).reshape(b, s, h, hd)
-  k = gemm(p["wk"], mem).reshape(b, mem.shape[1], h, hd)
-  v = gemm(p["wv"], mem).reshape(b, mem.shape[1], h, hd)
+  q = gemm(p["wq"], x, policy).reshape(b, s, h, hd)
+  k = gemm(p["wk"], mem, policy).reshape(b, mem.shape[1], h, hd)
+  v = gemm(p["wv"], mem, policy).reshape(b, mem.shape[1], h, hd)
   sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                   k.astype(jnp.float32)) / (hd ** 0.5)
   pr = jax.nn.softmax(sc, axis=-1)
   o = jnp.einsum("bhqk,bkhd->bqhd", pr, v.astype(jnp.float32))
-  return gemm(p["wo"], o.reshape(b, s, h * hd).astype(x.dtype))
+  return gemm(p["wo"], o.reshape(b, s, h * hd).astype(x.dtype), policy)
 
 
 def _init_enc_layer(key, cfg: ModelConfig):
@@ -213,7 +213,8 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
-                cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+                cs: Constraint = _id_cs, policy=None
+                ) -> tuple[jax.Array, dict]:
   b = token.shape[0]
   x = embed(params["embedding"], token)
   x = x + params["pos_dec"][positions][:, None].astype(x.dtype)
@@ -222,13 +223,14 @@ def decode_step(params: dict, state: dict, token: jax.Array,
     lp, lc = xs
     lp = cs(lp, "layer_params")
     a = layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
-    a, c1 = attn_lib.attention_decode(lp["attn"], a, lc, positions, cfg, cs)
+    a, c1 = attn_lib.attention_decode(lp["attn"], a, lc, positions, cfg, cs,
+                                      policy)
     h = h + a
     a = layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
-    h = h + _xattn(lp["xattn"], a, mem, cfg, cs)
+    h = h + _xattn(lp["xattn"], a, mem, cfg, cs, policy)
     f = layer_norm(h, lp["ln3"]["scale"], lp["ln3"]["bias"], cfg.norm_eps)
-    return h + gelu_ffn_forward(lp["ffn"], f, cs), c1
+    return h + gelu_ffn_forward(lp["ffn"], f, cs, policy), c1
   x, kv = jax.lax.scan(body, x, (params["dec_layers"], state["kv"]))
   x = layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"],
                  cfg.norm_eps)
-  return lm_logits(params["embedding"], x), {"kv": kv, "mem": mem}
+  return lm_logits(params["embedding"], x, policy), {"kv": kv, "mem": mem}

@@ -38,15 +38,17 @@ def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
 
 
 def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
-            cs: Constraint = _id_cs, *, last_only: bool = False
-            ) -> tuple[jax.Array, jax.Array]:
+            cs: Constraint = _id_cs, *, last_only: bool = False,
+            policy=None) -> tuple[jax.Array, jax.Array]:
   x = cs(embed(params["embedding"], tokens), "bsd")
   def pair_block(h, lp):
     lp = cs(lp, "layer_params")     # gather inside the remat region
     h = h + xl.mlstm_forward(lp["mlstm"],
-                             rms_norm(h, lp["m_norm"], cfg.norm_eps), cfg, cs)
+                             rms_norm(h, lp["m_norm"], cfg.norm_eps), cfg, cs,
+                             policy=policy)
     h = h + xl.slstm_forward(lp["slstm"],
-                             rms_norm(h, lp["s_norm"], cfg.norm_eps), cfg, cs)
+                             rms_norm(h, lp["s_norm"], cfg.norm_eps), cfg, cs,
+                             policy)
     return h
   block = jax.remat(pair_block) if cfg.remat == "full" else pair_block
   def body(h, lp):
@@ -55,7 +57,7 @@ def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
   if last_only:
     x = x[:, -1:]
-  return cs(lm_logits(params["embedding"], x), "bsv"), jnp.zeros(
+  return cs(lm_logits(params["embedding"], x, policy), "bsv"), jnp.zeros(
       (), jnp.float32)
 
 
@@ -79,21 +81,23 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
-                cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+                cs: Constraint = _id_cs, policy=None
+                ) -> tuple[jax.Array, dict]:
   x = cs(embed(params["embedding"], token), "bsd")
   def body(h, xs):
     lp, ms, ss = xs
     lp = cs(lp, "layer_params")
     y, ms1 = xl.mlstm_decode(lp["mlstm"],
                              rms_norm(h, lp["m_norm"], cfg.norm_eps), ms,
-                             cfg, cs)
+                             cfg, cs, policy=policy)
     h = h + y
     y, ss1 = xl.slstm_decode(lp["slstm"],
                              rms_norm(h, lp["s_norm"], cfg.norm_eps), ss,
-                             cfg, cs)
+                             cfg, cs, policy)
     return h + y, (ms1, ss1)
   x, (ms, ss) = jax.lax.scan(body, x,
                              (params["pairs"], state["mlstm"],
                               state["slstm"]))
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-  return lm_logits(params["embedding"], x), {"mlstm": ms, "slstm": ss}
+  return lm_logits(params["embedding"], x, policy), {"mlstm": ms,
+                                                     "slstm": ss}

@@ -59,19 +59,20 @@ def init_lm(key: jax.Array, cfg: ModelConfig) -> dict:
   return p
 
 
-def _shared_block(x, sp, cfg, cs, positions_mode):
+def _shared_block(x, sp, cfg, cs, positions_mode, policy=None):
   h = rms_norm(x, sp["ln1"], cfg.norm_eps)
-  h = attn_lib.attention_forward(sp["attn"], h, cfg, cs)
+  h = attn_lib.attention_forward(sp["attn"], h, cfg, cs, policy)
   x = x + h
   h = rms_norm(x, sp["ln2"], cfg.norm_eps)
-  return x + swiglu_forward(sp["ffn"], h, cs)
+  return x + swiglu_forward(sp["ffn"], h, cs, policy)
 
 
-def _mamba_scan(x, stack, cfg, cs, remat=True):
+def _mamba_scan(x, stack, cfg, cs, remat=True, policy=None):
   def block(h, lp):
     lp = cs(lp, "layer_params")     # gather inside the remat region
     return h + m2.mamba2_forward(
-        lp, rms_norm(h, lp["norm_in"], cfg.norm_eps), cfg, cs)
+        lp, rms_norm(h, lp["norm_in"], cfg.norm_eps), cfg, cs,
+        policy=policy)
   if remat:
     block = jax.remat(block)
   def body(h, lp):
@@ -81,20 +82,20 @@ def _mamba_scan(x, stack, cfg, cs, remat=True):
 
 
 def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
-            cs: Constraint = _id_cs, *, last_only: bool = False
-            ) -> tuple[jax.Array, jax.Array]:
+            cs: Constraint = _id_cs, *, last_only: bool = False,
+            policy=None) -> tuple[jax.Array, jax.Array]:
   x = cs(embed(params["embedding"], tokens), "bsd")
   def group_body(h, gstack):
-    h = _shared_block(h, params["shared_attn"], cfg, cs, None)
-    h = _mamba_scan(h, gstack, cfg, cs)
+    h = _shared_block(h, params["shared_attn"], cfg, cs, None, policy)
+    h = _mamba_scan(h, gstack, cfg, cs, policy=policy)
     return h, None
   x, _ = jax.lax.scan(group_body, x, params["main"])
   if "tail" in params:
-    x = _mamba_scan(x, params["tail"], cfg, cs)
+    x = _mamba_scan(x, params["tail"], cfg, cs, policy=policy)
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
   if last_only:
     x = x[:, -1:]
-  return cs(lm_logits(params["embedding"], x), "bsv"), jnp.zeros(
+  return cs(lm_logits(params["embedding"], x, policy), "bsv"), jnp.zeros(
       (), jnp.float32)
 
 
@@ -126,7 +127,8 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
 
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
-                cs: Constraint = _id_cs) -> tuple[jax.Array, dict]:
+                cs: Constraint = _id_cs, policy=None
+                ) -> tuple[jax.Array, dict]:
   x = cs(embed(params["embedding"], token), "bsd")
   new_state = dict(state)
 
@@ -134,15 +136,16 @@ def decode_step(params: dict, state: dict, token: jax.Array,
     gstack, g_ssm, g_kv = xs
     a = rms_norm(h, params["shared_attn"]["ln1"], cfg.norm_eps)
     a, kv1 = attn_lib.attention_decode(params["shared_attn"]["attn"], a,
-                                       g_kv, positions, cfg, cs)
+                                       g_kv, positions, cfg, cs, policy)
     h = h + a
     f = rms_norm(h, params["shared_attn"]["ln2"], cfg.norm_eps)
-    h = h + swiglu_forward(params["shared_attn"]["ffn"], f, cs)
+    h = h + swiglu_forward(params["shared_attn"]["ffn"], f, cs, policy)
     def mamba_body(hh, ys):
       lp, ls = ys
       lp = cs(lp, "layer_params")
       y, s1 = m2.mamba2_decode(
-          lp, rms_norm(hh, lp["norm_in"], cfg.norm_eps), ls, cfg, cs)
+          lp, rms_norm(hh, lp["norm_in"], cfg.norm_eps), ls, cfg, cs,
+          policy=policy)
       return hh + y, s1
     h, ssm1 = jax.lax.scan(mamba_body, h, (gstack, g_ssm))
     return h, (ssm1, kv1)
@@ -157,10 +160,11 @@ def decode_step(params: dict, state: dict, token: jax.Array,
       lp, ls = ys
       lp = cs(lp, "layer_params")
       y, s1 = m2.mamba2_decode(
-          lp, rms_norm(hh, lp["norm_in"], cfg.norm_eps), ls, cfg, cs)
+          lp, rms_norm(hh, lp["norm_in"], cfg.norm_eps), ls, cfg, cs,
+          policy=policy)
       return hh + y, s1
     x, tail_ssm = jax.lax.scan(mamba_body, x,
                                (params["tail"], state["tail_ssm"]))
     new_state["tail_ssm"] = tail_ssm
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-  return lm_logits(params["embedding"], x), new_state
+  return lm_logits(params["embedding"], x, policy), new_state

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist.sharding import make_constraint
+from repro.kernels.dispatch import resolve_policy
 from repro.layers.common import ModelConfig
 from repro.models import deepspeech
 from repro.models.api import get_model
@@ -39,7 +40,7 @@ class LMEngine:
 
   def __init__(self, model_cfg: ModelConfig, params: Any, *,
                batch_size: int, max_len: int, mesh=None,
-               cache_dtype=None, rng=None):
+               cache_dtype=None, rng=None, kernel_policy=None):
     self.cfg = model_cfg
     self.params = params
     self.api = get_model(model_cfg)
@@ -49,13 +50,18 @@ class LMEngine:
     self.max_len = max_len
     self.cache_dtype = cache_dtype
     cs = make_constraint(mesh, model_cfg, batch_size, decode=True)
+    # the decode-regime KernelPolicy is built HERE, once, like cs: the
+    # jitted step closes over it, so "pallas" lowers every eligible GEMM
+    # through kernels.dispatch. None keeps the exact jnp program.
+    policy = resolve_policy(kernel_policy, batch_size)
+    self.kernel_policy = policy
     self.state = self._init_state()
     self.positions = jnp.zeros((batch_size,), jnp.int32)
     self.rng = jax.random.PRNGKey(0) if rng is None else rng
 
     def step(params, state, token, positions):
       return self.api.decode_step(params, state, token, positions,
-                                  model_cfg, cs)
+                                  model_cfg, cs, policy)
     self._step = jax.jit(step, donate_argnums=(1,))
 
   def _init_state(self):
@@ -106,15 +112,20 @@ class StreamingSpeechServer:
   """Frame-synchronous DS2 serving (paper §4's embedded regime)."""
 
   def __init__(self, model_cfg: ModelConfig, params: Any, *,
-               batch_size: int = 1):
+               batch_size: int = 1, kernel_policy=None):
     self.cfg = model_cfg
     self.params = params
     self.batch = batch_size
+    # frame-synchronous GRU steps are the paper's decode regime; a
+    # "pallas" policy routes them through gru_cell / decode_matvec
+    policy = resolve_policy(kernel_policy, batch_size)
+    self.kernel_policy = policy
     self.state = deepspeech.init_decode_state(model_cfg, batch_size)
     self._prev = np.full((batch_size,), -1, np.int64)
 
     def frame_step(params, state, x_t):
-      return deepspeech.decode_step(params, state, x_t, model_cfg)
+      return deepspeech.decode_step(params, state, x_t, model_cfg,
+                                    policy=policy)
     self._frame_step = jax.jit(frame_step, donate_argnums=(1,))
     self._frontend = jax.jit(functools.partial(
         deepspeech._frontend, cfg=model_cfg))

@@ -1,0 +1,258 @@
+"""KernelPolicy dispatch: regime classification, the decode_matvec batch
+contract, and serving-through-kernels — LMEngine / StreamingSpeechServer
+under a Pallas decode policy (interpret mode) must reproduce the jnp_only
+policy while demonstrably routing through the shape-specialized kernels."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compress import FactorizationPlan, to_stage1
+from repro.core.factored import dense, factored
+from repro.kernels import dispatch, ops, ref
+from repro.layers.common import ModelConfig, gemm
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(seed, shape, scale=1.0):
+  return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                           jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Classification.
+# ---------------------------------------------------------------------------
+
+
+def test_classify_regime_table():
+  pol = dispatch.decode_policy(8)
+  w = dense(KEY, 128, 256, name="fc")
+  uv = factored(KEY, 128, 256, r=128, name="lr")
+  x_small = rnd(1, (4, 128))
+  x_big = rnd(2, (64, 128))
+  assert dispatch.classify(w, x_small, pol) == "decode_matvec"
+  assert dispatch.classify(w, x_big, pol) == "jnp"        # batch > max
+  assert dispatch.classify(uv, x_small, pol) == "lowrank_gemm"
+  assert dispatch.classify(uv, x_big, pol) == "lowrank_gemm"
+  # degenerate shapes fall back regardless of regime
+  tiny = dense(KEY, 64, 32, name="tiny")
+  assert dispatch.classify(tiny, rnd(3, (4, 64)), pol) == "jnp"
+  # jnp_only and no-policy are inert
+  assert dispatch.classify(w, x_small, dispatch.JNP_ONLY) == "jnp"
+  assert dispatch.classify(w, x_small, None) == "jnp"
+
+
+def test_classify_per_name_overrides():
+  pol = dispatch.decode_policy(
+      4, overrides=(("*/rec", "jnp"), ("fc", "int8_gemm")))
+  rec = dense(KEY, 128, 384, name="gru0/rec", group="rec")
+  fc = dense(KEY, 128, 256, name="fc")
+  x = rnd(1, (2, 128))
+  assert dispatch.classify(rec, x, pol) == "jnp"
+  assert dispatch.classify(fc, x, pol) == "int8_gemm"
+  # a gru_cell override at a plain GEMM site means "reference path", not
+  # a crash: the regime only exists at the recurrent-step call site
+  gpol = dispatch.decode_policy(4, overrides=(("*/rec", "gru_cell"),))
+  assert dispatch.classify(rec, x, gpol) == "jnp"
+  frec = factored(KEY, 128, 384, r=128, name="gru1/rec", group="rec")
+  got = gemm(frec, x, gpol)       # factored rec: maybe_gru_cell declines,
+  np.testing.assert_allclose(     # the GEMM site must still route safely
+      np.asarray(got), np.asarray(gemm(frec, x)), atol=2e-4, rtol=2e-4)
+  with pytest.raises(ValueError):
+    dispatch.KernelPolicy(mode="decode", overrides=(("x", "nonsense"),))
+  with pytest.raises(ValueError):
+    dispatch.KernelPolicy(mode="bogus")
+
+
+def test_jnp_only_policy_is_bit_exact():
+  """KernelPolicy() must reproduce the default path EXACTLY (the
+  training-untouched guarantee)."""
+  leaf = dense(KEY, 96, 160, name="w")
+  x = rnd(4, (8, 96))
+  assert bool(jnp.all(gemm(leaf, x) == gemm(leaf, x, dispatch.JNP_ONLY)))
+  uv = factored(KEY, 96, 160, r=64, name="uv")
+  assert bool(jnp.all(gemm(uv, x) == gemm(uv, x, dispatch.JNP_ONLY)))
+
+
+def test_dispatch_gemm_matches_reference():
+  pol = dispatch.decode_policy(8)
+  w = dense(KEY, 128, 256, name="fc")
+  uv = factored(KEY, 128, 256, r=128, name="lr")
+  x = rnd(5, (4, 128))
+  np.testing.assert_allclose(np.asarray(gemm(w, x, pol)),
+                             np.asarray(gemm(w, x)), atol=2e-4, rtol=2e-4)
+  np.testing.assert_allclose(np.asarray(gemm(uv, x, pol)),
+                             np.asarray(gemm(uv, x)), atol=2e-4, rtol=2e-4)
+  # 3D activations flatten their leading dims through the kernel
+  x3 = rnd(6, (2, 2, 128))
+  np.testing.assert_allclose(np.asarray(gemm(w, x3, pol)),
+                             np.asarray(gemm(w, x3)), atol=2e-4, rtol=2e-4)
+
+
+def test_int8_override_regime():
+  """The w8a8 regime entry point (jitted quantized_matmul) via override."""
+  pol = dispatch.decode_policy(4, overrides=(("fc", "int8_gemm"),))
+  w = dense(KEY, 128, 256, name="fc")
+  x = rnd(7, (2, 128))
+  with dispatch.record_dispatch() as log:
+    y = gemm(w, x, pol)
+  assert ("fc", "int8_gemm") in log
+  dense_y = np.asarray(gemm(w, x))
+  rel = np.linalg.norm(np.asarray(y) - dense_y) / np.linalg.norm(dense_y)
+  assert rel < 0.05
+
+
+# ---------------------------------------------------------------------------
+# decode_matvec batch contract (b <= 16).
+# ---------------------------------------------------------------------------
+
+
+def test_decode_matvec_batch_boundary():
+  """b > DECODE_BATCH_MAX falls back to the jnp reference instead of being
+  silently accepted; the kernel path still runs at the boundary."""
+  w = rnd(8, (192, 256), 0.05)
+
+  def kernel_boom(*a, **k):
+    raise AssertionError("pallas kernel entered")
+
+  orig = ops._decode_matvec
+  ops._decode_matvec = kernel_boom
+  try:
+    # above the boundary: ref fallback, the pallas body is never traced
+    y17 = ops.decode_matvec(rnd(9, (17, 192)), w)
+    np.testing.assert_allclose(np.asarray(y17),
+                               np.asarray(ref.decode_matvec(
+                                   rnd(9, (17, 192)), w)),
+                               atol=2e-4, rtol=2e-4)
+    # at the boundary: the kernel path IS taken (fresh shape -> retrace)
+    with pytest.raises(Exception):
+      ops.decode_matvec(rnd(10, (16, 192)), w)
+  finally:
+    ops._decode_matvec = orig
+  y16 = ops.decode_matvec(rnd(10, (16, 192)), w)
+  np.testing.assert_allclose(np.asarray(y16),
+                             np.asarray(ref.decode_matvec(
+                                 rnd(10, (16, 192)), w)),
+                             atol=2e-4, rtol=2e-4)
+
+
+def test_quantized_matmul_is_jitted():
+  assert hasattr(ops.quantized_matmul, "lower")  # jax.jit wrapper
+  x = rnd(11, (4, 128))
+  w = rnd(12, (128, 256), 0.05)
+  got = ops.quantized_matmul(x, w)
+  dense_y = np.asarray(x @ w)
+  rel = np.linalg.norm(np.asarray(got) - dense_y) / np.linalg.norm(dense_y)
+  assert rel < 0.05
+
+
+def test_block_table_fitting():
+  """The shared block-size selection: clamp to dim, halve to divisibility."""
+  blocks = ops._fit_blocks("decode_matvec",
+                           {"block_m": 384, "block_n": 1280})
+  assert blocks == {"block_m": 384, "block_n": 256}   # clamp / table default
+  odd = ops._fit_blocks("decode_matvec", {"block_n": 384})
+  assert odd["block_n"] == 128                        # halve to divisibility
+  req = ops._fit_blocks("lowrank_gemm", {"block_m": 512}, {"block_m": 768})
+  assert req["block_m"] == 512                        # request clamped
+
+
+# ---------------------------------------------------------------------------
+# Serving through the kernels (the acceptance check).
+# ---------------------------------------------------------------------------
+
+LM_CFG = ModelConfig(
+    name="dispatch-lm", family="transformer", num_layers=2, d_model=128,
+    num_heads=1, num_kv_heads=1, d_ff=256, vocab_size=128,
+    dtype=jnp.float32, remat="none")
+
+DS_CFG = ModelConfig(
+    name="dispatch-ds2", family="deepspeech", num_layers=2, d_model=128,
+    num_heads=1, num_kv_heads=1, d_ff=128, vocab_size=32,
+    feat_dim=80, gru_dims=(128, 128), fc_dim=128, conv_channels=8,
+    time_stride=2, dtype=jnp.float32, remat="none")
+
+
+def _engine_step_logits(eng, prompts, steps):
+  """Greedy-decode `steps` tokens, returning every step's logits (the
+  robust comparison surface: token ids can flip on float near-ties)."""
+  logits = [np.asarray(eng.prefill(prompts), np.float32)]
+  for _ in range(steps):
+    tok = jnp.argmax(jnp.asarray(logits[-1][:, -1]), -1)[:, None]
+    lg, eng.state = eng._step(eng.params, eng.state, tok.astype(jnp.int32),
+                              eng.positions)
+    eng.positions = eng.positions + 1
+    logits.append(np.asarray(lg, np.float32))
+  return np.concatenate(logits, axis=1)
+
+
+def test_lm_engine_pallas_matches_jnp():
+  """LMEngine decode under a Pallas KernelPolicy (interpret mode)
+  reproduces the jnp_only logits step-for-step and routes through
+  decode_matvec."""
+  from repro.serving import LMEngine
+  from repro.models.api import get_model
+  params = get_model(LM_CFG).init(jax.random.PRNGKey(0), LM_CFG)
+  prompts = np.array([[1, 2], [3, 4]])
+  ref_eng = LMEngine(LM_CFG, params, batch_size=2, max_len=16)
+  want = _engine_step_logits(ref_eng, prompts, steps=4)
+  with dispatch.record_dispatch() as log:
+    pal_eng = LMEngine(LM_CFG, params, batch_size=2, max_len=16,
+                       kernel_policy="pallas")
+    got = _engine_step_logits(pal_eng, prompts, steps=4)
+  assert "decode_matvec" in {r for _, r in log}
+  np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_lm_engine_lowrank_regime():
+  """Factored (stage-1) params decode through the fused lowrank kernel."""
+  from repro.serving import LMEngine
+  from repro.models.api import get_model
+  params = get_model(LM_CFG).init(jax.random.PRNGKey(0), LM_CFG)
+  fparams = to_stage1(params, FactorizationPlan(include=("*",),
+                                                min_dim=128))
+  prompts = np.array([[5, 6], [7, 8]])
+  ref_eng = LMEngine(LM_CFG, fparams, batch_size=2, max_len=16)
+  want = _engine_step_logits(ref_eng, prompts, steps=3)
+  with dispatch.record_dispatch() as log:
+    pal_eng = LMEngine(LM_CFG, fparams, batch_size=2, max_len=16,
+                       kernel_policy="pallas")
+    got = _engine_step_logits(pal_eng, prompts, steps=3)
+  assert "lowrank_gemm" in {r for _, r in log}
+  np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_speech_server_pallas_matches_jnp():
+  """StreamingSpeechServer under the Pallas policy: identical emissions,
+  and the frame step lowers through gru_cell + decode_matvec."""
+  from repro.data.speech import SpeechDataConfig, batch_at
+  from repro.serving import StreamingSpeechServer
+  from repro.models.api import get_model
+  params = get_model(DS_CFG).init(jax.random.PRNGKey(0), DS_CFG)
+  dc = SpeechDataConfig(vocab_size=DS_CFG.vocab_size,
+                        feat_dim=DS_CFG.feat_dim, global_batch=2)
+  chunk = batch_at(dc, 0)["feats"][:, :24]
+  ref_srv = StreamingSpeechServer(DS_CFG, params, batch_size=2)
+  want = ref_srv.process_chunk(chunk)
+  with dispatch.record_dispatch() as log:
+    pal_srv = StreamingSpeechServer(DS_CFG, params, batch_size=2,
+                                    kernel_policy="pallas")
+    got = pal_srv.process_chunk(chunk)
+  regimes = {r for _, r in log}
+  assert {"gru_cell", "decode_matvec"} <= regimes
+  assert got == want
+
+
+def test_deepspeech_decode_step_allclose():
+  """Direct frame-step numerics: Pallas policy vs jnp, tight tolerance."""
+  from repro.models import deepspeech
+  params = deepspeech.init_model(jax.random.PRNGKey(0), DS_CFG)
+  gru_in = ((DS_CFG.feat_dim + 1) // 2 + 1) // 2 * DS_CFG.conv_channels
+  x_t = rnd(13, (2, gru_in), 0.5)
+  state = deepspeech.init_decode_state(DS_CFG, 2)
+  want, _ = deepspeech.decode_step(params, state, x_t, DS_CFG)
+  got, _ = deepspeech.decode_step(params, state, x_t, DS_CFG,
+                                  policy=dispatch.decode_policy(2))
+  np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                             atol=1e-4, rtol=1e-4)
