@@ -1,0 +1,133 @@
+"""Continuous batching vs static batching on a mixed-length workload.
+
+The paper's serving regime (§4) is a handful of concurrent streams
+amortizing each weight load — which makes every idle slot-step a direct
+waste of the memory bandwidth the whole factorization exists to save.
+This bench drives the same request set through
+
+  continuous — LMEngine's queue: admit / prefill / decode / retire on
+               budget, refill the slot from the queue mid-run;
+  static     — groups of `batch` requests padded to the group's longest
+               prompt, every slot stepping until the group's largest
+               token budget is exhausted (the old fixed-batch engine).
+
+and reports wall-clock throughput over *useful* tokens plus slot
+occupancy (busy slot-steps / total slot-steps). Timings are second-pass
+(first pass warms the jit caches). CPU wall-clock: a trajectory signal,
+not a TPU number.
+
+`--json` writes BENCH_serving.json — CI runs this as a smoke step and
+uploads it alongside BENCH_kernels.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models.api import get_model
+from repro.serving import LMEngine
+
+
+def make_workload(num_requests: int, vocab: int, seed: int = 0):
+  """Mixed prompt lengths and token budgets — the shape continuous
+  batching exists for."""
+  rng = np.random.RandomState(seed)
+  prompts = [rng.randint(1, vocab, size=(int(rng.randint(2, 9)),))
+             for _ in range(num_requests)]
+  budgets = [int(rng.randint(2, 21)) for _ in range(num_requests)]
+  return prompts, budgets
+
+
+def run_continuous(cfg, params, prompts, budgets, *, batch, max_len,
+                   kernel_policy):
+  eng = LMEngine(cfg, params, batch_size=batch, max_len=max_len,
+                 kernel_policy=kernel_policy)
+  t0 = time.perf_counter()
+  for p, n in zip(prompts, budgets):
+    eng.submit(p, max_new_tokens=n)
+  finished = eng.run()
+  dt = time.perf_counter() - t0
+  tokens = sum(len(f.tokens) for f in finished)
+  return {"wall_s": dt, "tokens": tokens, "tok_s": tokens / dt,
+          "occupancy": eng.occupancy, "decode_steps": eng.decode_steps}
+
+
+def run_static(cfg, params, prompts, budgets, *, batch, max_len,
+               kernel_policy):
+  """Fixed-batch baseline: groups in arrival order, prompts padded to the
+  group max, every slot runs the group's largest budget."""
+  wall = 0.0
+  useful = busy = total = steps = 0
+  for g in range(0, len(prompts), batch):
+    gp, gb = prompts[g:g + batch], budgets[g:g + batch]
+    plen = max(p.size for p in gp)
+    padded = np.ones((len(gp), plen), np.int32)
+    for r, p in enumerate(gp):
+      padded[r, :p.size] = p
+    eng = LMEngine(cfg, params, batch_size=len(gp), max_len=max_len,
+                   kernel_policy=kernel_policy)
+    t0 = time.perf_counter()
+    eng.generate(padded, steps=max(gb))
+    wall += time.perf_counter() - t0
+    useful += sum(gb)
+    busy += sum(gb)                       # slot-steps doing requested work
+    total += len(gp) * max(gb)            # slot-steps actually executed
+    steps += max(gb)
+  return {"wall_s": wall, "tokens": useful, "tok_s": useful / wall,
+          "occupancy": busy / total, "decode_steps": steps}
+
+
+def run(arch: str, *, batch: int, num_requests: int, max_len: int,
+        kernel_policy) -> dict:
+  cfg = configs.get_smoke(arch).with_(vocab_size=128, dtype=jnp.float32)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  prompts, budgets = make_workload(num_requests, cfg.vocab_size)
+  kw = dict(batch=batch, max_len=max_len, kernel_policy=kernel_policy)
+  run_continuous(cfg, params, prompts, budgets, **kw)   # jit warmup
+  run_static(cfg, params, prompts, budgets, **kw)
+  cont = run_continuous(cfg, params, prompts, budgets, **kw)
+  stat = run_static(cfg, params, prompts, budgets, **kw)
+  return {
+      "arch": cfg.name, "batch": batch, "num_requests": num_requests,
+      "max_len": max_len,
+      "prompt_lens": [int(p.size) for p in prompts], "budgets": budgets,
+      "continuous": cont, "static": stat,
+      "speedup": cont["tok_s"] / stat["tok_s"],
+  }
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default="qwen3-4b")
+  ap.add_argument("--batch", type=int, default=4)
+  ap.add_argument("--num-requests", type=int, default=12)
+  ap.add_argument("--max-len", type=int, default=64)
+  ap.add_argument("--kernels", choices=["jnp", "pallas"], default="jnp")
+  ap.add_argument("--json", action="store_true",
+                  help="write BENCH_serving.json")
+  args = ap.parse_args()
+
+  out = run(args.arch, batch=args.batch, num_requests=args.num_requests,
+            max_len=args.max_len, kernel_policy=args.kernels)
+  for mode in ("continuous", "static"):
+    r = out[mode]
+    print(f"{mode:>10}: {r['tokens']} tok in {r['wall_s']:.2f}s "
+          f"({r['tok_s']:.1f} tok/s), occupancy {r['occupancy']:.2f}, "
+          f"{r['decode_steps']} decode steps")
+  print(f"   speedup: {out['speedup']:.2f}x "
+        f"({args.num_requests} requests, {args.batch} slots)")
+  if args.json:
+    with open("BENCH_serving.json", "w") as f:
+      json.dump(out, f, indent=1)
+    print("wrote BENCH_serving.json")
+
+
+if __name__ == "__main__":
+  main()

@@ -1,7 +1,8 @@
-"""Serve a small LM with batched requests through the decode engine —
-including the paper's compressed-inference path: the same model served
-(a) dense and (b) stage-2 factored, comparing weight bytes per decode
-step (the quantity the farm kernels stream).
+"""Serve a small LM through the continuous-batching decode engine —
+mixed-length requests sharing a few slots (the paper's low-batch regime),
+including the compressed-inference path: the same model served (a) dense
+and (b) stage-2 factored, comparing weight bytes per decode step (the
+quantity the farm kernels stream).
 
     PYTHONPATH=src python examples/serve_lm.py
 """
@@ -19,37 +20,45 @@ from repro.models.api import get_model
 from repro.serving import LMEngine
 
 
+def serve(tag, cfg, params, requests):
+  eng = LMEngine(cfg, params, batch_size=4, max_len=64)
+  for prompt, budget in requests:
+    eng.submit(prompt, max_new_tokens=budget)
+  t0 = time.perf_counter()
+  finished = eng.run(temperature=0.7)
+  dt = time.perf_counter() - t0
+  tokens = sum(len(f.tokens) for f in finished)
+  print(f"  params {count_params(params):,}; {tokens} tokens over "
+        f"{len(finished)} requests, {tokens / dt:.1f} tok/s (CPU), "
+        f"occupancy {eng.occupancy:.2f}; "
+        f"sample {finished[0].tokens[:6].tolist()}")
+  return finished
+
+
 def main():
   cfg = configs.get_smoke("qwen3-4b").with_(vocab_size=512,
                                             dtype=jnp.float32)
   api = get_model(cfg)
   params = api.init(jax.random.PRNGKey(0), cfg)
-  prompts = np.random.RandomState(0).randint(1, 512, size=(4, 8))
+  rng = np.random.RandomState(0)
+  # 8 mixed-length requests through 4 slots: retired slots refill mid-run
+  requests = [(rng.randint(1, 512, size=(rng.randint(3, 12),)),
+               int(rng.randint(4, 16))) for _ in range(8)]
 
   print("== dense serving ==")
-  eng = LMEngine(cfg, params, batch_size=4, max_len=64)
-  t0 = time.perf_counter()
-  out = eng.generate(prompts, steps=12, temperature=0.7)
-  dt = time.perf_counter() - t0
-  print(f"  params {count_params(params):,}; "
-        f"{12 * 4 / dt:.1f} tok/s (CPU); sample {out.tokens[0][:6]}")
+  serve("dense", cfg, params, requests)
 
   print("== stage-2 factored serving (paper's compressed path) ==")
   plan = FactorizationPlan(min_dim=64)
   factored = to_stage2(to_stage1(params, plan), plan,
                        TruncationSpec(variance_threshold=0.8, round_to=8))
-  # kernel_policy="pallas" routes eligible decode GEMMs through the
+  # kernel_policy="pallas" would route eligible decode GEMMs through the
   # shape-specialized kernels (factored leaves -> fused lowrank_gemm);
-  # tiny smoke dims fall back to jnp, so this is a pure API demo on CPU
-  eng2 = LMEngine(cfg, factored, batch_size=4, max_len=64,
-                  kernel_policy="pallas")
-  t0 = time.perf_counter()
-  out2 = eng2.generate(prompts, steps=12, temperature=0.7)
-  dt2 = time.perf_counter() - t0
+  # tiny smoke dims fall back to jnp, so this stays the jnp path on CPU
+  serve("factored", cfg, factored, requests)
   p0, p1 = count_params(params), count_params(factored)
-  print(f"  params {p1:,} ({100 * (1 - p1 / p0):.0f}% fewer weight bytes "
-        f"to stream per decode step); {12 * 4 / dt2:.1f} tok/s (CPU); "
-        f"sample {out2.tokens[0][:6]}")
+  print(f"  {100 * (1 - p1 / p0):.0f}% fewer weight bytes to stream "
+        f"per decode step")
 
 
 if __name__ == "__main__":

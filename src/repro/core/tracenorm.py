@@ -136,7 +136,9 @@ def rank_for_variance(sigma: jax.Array, threshold: float) -> jax.Array:
   cum = jnp.cumsum(var)
   total = cum[-1]
   frac = cum / jnp.maximum(total, 1e-30)
-  return jnp.sum(frac < threshold) + 1
+  # clamp to [1, d]: for an all-zero sigma the 1e-30 guard makes every
+  # frac < threshold, which would report rank d + 1 (> len(sigma))
+  return jnp.clip(jnp.sum(frac < threshold) + 1, 1, sigma.shape[0])
 
 
 def trace_norm_metrics(params: Any) -> Mapping[str, jax.Array]:

@@ -1,10 +1,11 @@
-"""Serving driver: --arch selects any decodable config; generates from a
-batch of prompts through the LMEngine (or streams speech through the DS2
-server). Smoke configs run on CPU; full configs target pods.
+"""Serving driver: --arch selects any decodable config; drives a queue of
+mixed-length requests through the continuous-batching LMEngine (or streams
+speech through the DS2 server). Smoke configs run on CPU; full configs
+target pods.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
-      --batch 4 --steps 16
+      --batch 4 --num-requests 12 --steps 16
 """
 from __future__ import annotations
 
@@ -23,11 +24,21 @@ from repro.serving import LMEngine, StreamingSpeechServer
 def main() -> None:
   ap = argparse.ArgumentParser()
   ap.add_argument("--arch", required=True, choices=configs.ARCH_NAMES)
-  ap.add_argument("--batch", type=int, default=4)
-  ap.add_argument("--steps", type=int, default=16)
-  ap.add_argument("--prompt-len", type=int, default=8)
+  ap.add_argument("--batch", type=int, default=4,
+                  help="engine slots (concurrent decode streams)")
+  ap.add_argument("--num-requests", type=int, default=None,
+                  help="requests to queue (default: --batch); extras "
+                       "refill slots as earlier requests retire")
+  ap.add_argument("--steps", type=int, default=16,
+                  help="per-request new-token budget (requests draw "
+                       "varying budgets up to this)")
+  ap.add_argument("--prompt-len", type=int, default=8,
+                  help="mean prompt length; requests draw varying "
+                       "lengths around this")
   ap.add_argument("--max-len", type=int, default=128)
   ap.add_argument("--temperature", type=float, default=0.8)
+  ap.add_argument("--eos-id", type=int, default=None,
+                  help="token id retiring a request early")
   ap.add_argument("--full", action="store_true")
   ap.add_argument("--kernels", choices=["jnp", "pallas"], default="jnp",
                   help="execution policy: 'pallas' routes the decode "
@@ -45,26 +56,37 @@ def main() -> None:
                                    kernel_policy=args.kernels)
     dc = SpeechDataConfig(vocab_size=cfg.vocab_size, feat_dim=cfg.feat_dim,
                           global_batch=args.batch)
-    chunk = batch_at(dc, 0)["feats"][:, :32]
+    feats = batch_at(dc, 0)["feats"][:, :32]
     t0 = time.perf_counter()
-    out = server.process_chunk(chunk)
+    # chunked streaming: conv context carries across the boundary, so
+    # these two calls + flush emit exactly the full-utterance labels
+    out = [server.process_chunk(feats[:, :16]),
+           server.process_chunk(feats[:, 16:]), server.flush()]
     dt = time.perf_counter() - t0
+    emitted = [sum(len(o[i]) for o in out) for i in range(args.batch)]
     print(f"streamed 32 frames x {args.batch} in {dt*1e3:.1f} ms; "
-          f"emitted: {[len(o) for o in out]}")
+          f"emitted: {emitted}")
     return
 
+  num_requests = args.num_requests or args.batch
   rng = np.random.RandomState(0)
-  prompts = rng.randint(1, cfg.vocab_size,
-                        size=(args.batch, args.prompt_len))
+  lo, hi = max(1, args.prompt_len // 2), 2 * args.prompt_len
   engine = LMEngine(cfg, params, batch_size=args.batch,
-                    max_len=args.max_len, kernel_policy=args.kernels)
+                    max_len=args.max_len, kernel_policy=args.kernels,
+                    eos_id=args.eos_id)
+  for _ in range(num_requests):
+    prompt = rng.randint(1, cfg.vocab_size, size=(rng.randint(lo, hi + 1),))
+    engine.submit(prompt, max_new_tokens=int(rng.randint(1, args.steps + 1)))
   t0 = time.perf_counter()
-  res = engine.generate(prompts, steps=args.steps,
-                        temperature=args.temperature)
+  finished = engine.run(temperature=args.temperature)
   dt = time.perf_counter() - t0
-  print(f"generated {args.steps} tokens x {args.batch} requests "
-        f"in {dt:.2f}s ({args.steps * args.batch / dt:.1f} tok/s)")
-  print("sample:", res.tokens[0].tolist())
+  tokens = sum(len(f.tokens) for f in finished)
+  print(f"served {len(finished)} requests ({tokens} tokens) through "
+        f"{args.batch} slots in {dt:.2f}s ({tokens / dt:.1f} tok/s, "
+        f"occupancy {engine.occupancy:.2f})")
+  for f in finished[:4]:
+    print(f"  req {f.uid}: prompt {len(f.prompt)} -> {len(f.tokens)} "
+          f"tokens ({f.finish_reason}); sample {f.tokens[:6].tolist()}")
 
 
 if __name__ == "__main__":

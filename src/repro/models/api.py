@@ -16,11 +16,47 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Optional
 
+import jax
+import jax.numpy as jnp
+
 from repro.layers.common import (Constraint, ModelConfig,
                                  identity_constraint)
 from repro.models import deepspeech, transformer, whisper, xlstm_model, zamba
 
-__all__ = ["Constraint", "ModelApi", "get_model", "identity_constraint"]
+__all__ = ["Constraint", "KV_CACHE_KEYS", "ModelApi", "cast_kv_cache",
+           "get_model", "identity_constraint"]
+
+#: Leaf names that tag an attention KV cache inside a decode-state pytree
+#: (GQA caches store "k"/"v"; MLA caches store the latent "c_kv" plus the
+#: shared "k_rope"). Everything else in decode state — SSM carries, conv
+#: tails, xLSTM accumulators, GRU hidden states, encoder memory — is a
+#: recurrent carry that must keep its full working precision.
+KV_CACHE_KEYS = frozenset({"k", "v", "c_kv", "k_rope"})
+
+
+def _leaf_key(path) -> Optional[str]:
+  if path and isinstance(path[-1], jax.tree_util.DictKey):
+    return path[-1].key
+  return None
+
+
+def cast_kv_cache(state, dtype):
+  """Cast only the attention KV-cache leaves of a decode state to `dtype`.
+
+  This is the whole scope of `LMEngine(cache_dtype=...)`: the KV cache is
+  write-once-read-many, so a low-precision copy trades a bounded readback
+  error for halved cache traffic (the paper's bandwidth argument). SSM /
+  recurrent carries are read-modify-write every step — downcasting them
+  compounds error across the sequence — so they are left untouched.
+  """
+  if dtype is None:
+    return state
+  def cast(path, x):
+    if _leaf_key(path) in KV_CACHE_KEYS and jnp.issubdtype(
+        x.dtype, jnp.floating):
+      return x.astype(dtype)
+    return x
+  return jax.tree_util.tree_map_with_path(cast, state)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,10 +94,47 @@ class ModelApi:
   decode_step: Optional[Callable] = None
   # encoder for enc-dec families (used by serving to fill the memory)
   encode: Optional[Callable] = None
+  # cfg -> pytree of ints, same structure as init_decode_state's output,
+  # giving the batch-axis index of every decode-state leaf. This is the
+  # family's slot-surgery contract: caches stack over layer dims, so the
+  # batch axis is not uniformly leading.
+  decode_state_batch_axes: Optional[Callable] = None
 
   @property
   def decodable(self) -> bool:
     return self.decode_step is not None
+
+  # -- decode-state slot surgery ------------------------------------------
+  # The continuous-batching engine treats each batch row of the decode
+  # state as a *slot* with its own request lifecycle. These helpers move
+  # single-request (batch-1) states in and out of a live batched state
+  # without re-tracing: `slot` may be a traced int32, so one jitted
+  # program serves every slot index.
+
+  def _slot_axes(self, cfg: ModelConfig):
+    if self.decode_state_batch_axes is None:
+      raise ValueError(
+          f"{self.family} does not define decode_state_batch_axes")
+    return self.decode_state_batch_axes(cfg)
+
+  def extract_slot(self, cfg: ModelConfig, state, slot):
+    """Slice slot `slot` out of a batched decode state (keeps batch=1)."""
+    return jax.tree.map(
+        lambda x, ax: jax.lax.dynamic_slice_in_dim(x, slot, 1, axis=ax),
+        state, self._slot_axes(cfg))
+
+  def insert_slot(self, cfg: ModelConfig, state, slot_state, slot):
+    """Write a batch-1 `slot_state` into slot `slot` of a batched state."""
+    return jax.tree.map(
+        lambda x, s, ax: jax.lax.dynamic_update_slice_in_dim(
+            x, s.astype(x.dtype), slot, axis=ax),
+        state, slot_state, self._slot_axes(cfg))
+
+  def reset_slot(self, cfg: ModelConfig, state, slot, *, max_len=None):
+    """Return `state` with slot `slot` restored to its init value (fresh
+    KV rows / SSM carries), leaving every other slot untouched."""
+    fresh = self.init_decode_state(cfg, 1, max_len)
+    return self.insert_slot(cfg, state, fresh, slot)
 
 
 def get_model(cfg: ModelConfig) -> ModelApi:
@@ -71,28 +144,33 @@ def get_model(cfg: ModelConfig) -> ModelApi:
         family=fam, init=transformer.init_lm, loss_fn=transformer.loss_fn,
         forward=transformer.forward,
         init_decode_state=transformer.init_decode_state,
-        decode_step=transformer.decode_step)
+        decode_step=transformer.decode_step,
+        decode_state_batch_axes=transformer.decode_state_batch_axes)
   if fam == "zamba":
     return ModelApi(
         family=fam, init=zamba.init_lm, loss_fn=zamba.loss_fn,
         forward=zamba.forward, init_decode_state=zamba.init_decode_state,
-        decode_step=zamba.decode_step)
+        decode_step=zamba.decode_step,
+        decode_state_batch_axes=zamba.decode_state_batch_axes)
   if fam == "xlstm":
     return ModelApi(
         family=fam, init=xlstm_model.init_lm, loss_fn=xlstm_model.loss_fn,
         forward=xlstm_model.forward,
         init_decode_state=xlstm_model.init_decode_state,
-        decode_step=xlstm_model.decode_step)
+        decode_step=xlstm_model.decode_step,
+        decode_state_batch_axes=xlstm_model.decode_state_batch_axes)
   if fam == "whisper":
     return ModelApi(
         family=fam, init=whisper.init_model, loss_fn=whisper.loss_fn,
         forward=None, init_decode_state=whisper.init_decode_state,
-        decode_step=whisper.decode_step, encode=whisper.encode)
+        decode_step=whisper.decode_step, encode=whisper.encode,
+        decode_state_batch_axes=whisper.decode_state_batch_axes)
   if fam == "deepspeech":
     return ModelApi(
         family=fam, init=deepspeech.init_model, loss_fn=deepspeech.loss_fn,
         forward=deepspeech.forward,
         init_decode_state=lambda cfg, batch, max_len=None:
             deepspeech.init_decode_state(cfg, batch),
-        decode_step=deepspeech.decode_step)
+        decode_step=deepspeech.decode_step,
+        decode_state_batch_axes=deepspeech.decode_state_batch_axes)
   raise ValueError(f"unknown model family: {fam}")

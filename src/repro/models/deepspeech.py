@@ -22,6 +22,10 @@ from repro.layers.gru import gru_forward, init_gru
 from repro.models.ctc import ctc_loss
 
 
+CONV1_TIME_STRIDE = 2   # conv1 halves time; conv2's time stride is
+                        # cfg.time_stride
+CONV_FREQ_STRIDE = 2    # both convs halve frequency
+
 def conv_out_len(t: int, k: int, stride: int) -> int:
   return (t + stride - 1) // stride  # SAME padding
 
@@ -57,11 +61,12 @@ def _frontend(params: dict, feats: jax.Array, cfg: ModelConfig
   x = feats[..., None]                                   # (b, t, f, 1)
   x = jax.lax.conv_general_dilated(
       x.astype(cfg.dtype), params["conv1"],
-      window_strides=(2, 2), padding="SAME",
+      window_strides=(CONV1_TIME_STRIDE, CONV_FREQ_STRIDE), padding="SAME",
       dimension_numbers=("NHWC", "HWIO", "NHWC"))
   x = jax.nn.relu(x.astype(jnp.float32)).astype(cfg.dtype)
   x = jax.lax.conv_general_dilated(
-      x, params["conv2"], window_strides=(cfg.time_stride, 2),
+      x, params["conv2"],
+      window_strides=(cfg.time_stride, CONV_FREQ_STRIDE),
       padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
   x = jax.nn.relu(x.astype(jnp.float32)).astype(cfg.dtype)
   b, t, f, c = x.shape
@@ -81,7 +86,8 @@ def forward(params: dict, feats: jax.Array, cfg: ModelConfig,
 
 
 def output_lengths(input_lengths: jax.Array, cfg: ModelConfig) -> jax.Array:
-  t1 = (input_lengths + 1) // 2
+  s1 = CONV1_TIME_STRIDE
+  t1 = (input_lengths + s1 - 1) // s1
   return (t1 + cfg.time_stride - 1) // cfg.time_stride
 
 
@@ -104,6 +110,12 @@ def init_decode_state(cfg: ModelConfig, batch: int) -> dict:
   feature chunks by the serving loop)."""
   return {f"gru{i}": jnp.zeros((batch, h), cfg.dtype)
           for i, h in enumerate(cfg.gru_dims)}
+
+
+def decode_state_batch_axes(cfg: ModelConfig) -> dict:
+  """Batch-axis index per decode-state leaf (slot-surgery contract):
+  streaming GRU hidden states carry batch leading."""
+  return {f"gru{i}": 0 for i in range(len(cfg.gru_dims))}
 
 
 def decode_step(params: dict, state: dict, x_t: jax.Array,

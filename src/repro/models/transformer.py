@@ -182,6 +182,23 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
   return state
 
 
+def decode_state_batch_axes(cfg: ModelConfig) -> dict:
+  """Batch-axis index per decode-state leaf (same structure as
+  `init_decode_state`) — the contract the ModelApi slot-surgery helpers
+  (`insert_slot` / `extract_slot` / `reset_slot`) operate on. Caches are
+  stacked over layers, so the batch axis sits after the stack dims."""
+  n_dense = cfg.moe.first_dense_layers if cfg.moe else cfg.num_layers
+  n_moe = cfg.num_layers - n_dense if cfg.moe else 0
+  cache = ({"c_kv": 1, "k_rope": 1} if cfg.mla is not None
+           else {"k": 1, "v": 1})
+  axes = {}
+  if n_dense:
+    axes["dense"] = dict(cache)
+  if n_moe:
+    axes["moe"] = dict(cache)
+  return axes
+
+
 def _decode_stack(x, stack, cache, positions, cfg: ModelConfig,
                   cs: Constraint, *, use_moe: bool, policy=None):
   dec = (mla_lib.mla_decode if cfg.mla is not None

@@ -211,6 +211,13 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
   }
 
 
+def decode_state_batch_axes(cfg: ModelConfig) -> dict:
+  """Batch-axis index per decode-state leaf (slot-surgery contract):
+  the self-attention cache is stacked over layers; the encoder memory
+  carries batch leading."""
+  return {"kv": {"k": 1, "v": 1}, "mem": 0}
+
+
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
                 cs: Constraint = _id_cs, policy=None

@@ -79,6 +79,15 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
   }
 
 
+def decode_state_batch_axes(cfg: ModelConfig) -> dict:
+  """Batch-axis index per decode-state leaf (slot-surgery contract):
+  both block states are stacked over the pair dimension."""
+  return {
+      "mlstm": {"C": 1, "n": 1, "m": 1},
+      "slstm": {"h": 1, "c": 1, "n": 1, "m": 1},
+  }
+
+
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
                 cs: Constraint = _id_cs, policy=None

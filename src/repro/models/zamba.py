@@ -125,6 +125,21 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
   return st
 
 
+def decode_state_batch_axes(cfg: ModelConfig) -> dict:
+  """Batch-axis index per decode-state leaf (slot-surgery contract).
+
+  `main_ssm` is stacked (groups, attn_every, ...) so batch is axis 2;
+  the shared KV cache and the tail SSM stack one level only."""
+  _, _, tail = _plan(cfg)
+  axes = {
+      "main_ssm": {"ssm": 2, "conv": 2},
+      "shared_kv": {"k": 1, "v": 1},
+  }
+  if tail:
+    axes["tail_ssm"] = {"ssm": 1, "conv": 1}
+  return axes
+
+
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
                 cs: Constraint = _id_cs, policy=None

@@ -1,5 +1,6 @@
-"""Serving engines: batched LM decode + streaming speech."""
-from repro.serving.engine import (GenerationResult, LMEngine,
-                                  StreamingSpeechServer)
+"""Serving engines: continuous-batching LM decode + streaming speech."""
+from repro.serving.engine import (FinishedRequest, GenerationResult,
+                                  LMEngine, Request, StreamingSpeechServer)
 
-__all__ = ["GenerationResult", "LMEngine", "StreamingSpeechServer"]
+__all__ = ["FinishedRequest", "GenerationResult", "LMEngine", "Request",
+           "StreamingSpeechServer"]

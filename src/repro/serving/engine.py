@@ -1,23 +1,41 @@
-"""Serving: batched LM decode engine + the paper's streaming speech path.
+"""Serving: continuous-batching LM decode engine + the paper's streaming
+speech path.
 
-LMEngine — request-batched autoregressive decoding over a persistent KV /
-SSM state. `decode_step` is one jitted program (the exact program the
-decode_32k / long_500k dry-run cells lower). Prefill here replays the
-prompt through the decode step (sequential prefill): correct for every
-family incl. SSM hybrids, and fine at demo scale — production prefill is
-the separate `prefill_32k` lowering, which computes the full-sequence
-forward.
+LMEngine — continuous batching over a persistent KV / SSM decode state.
+The engine owns `batch_size` *slots*, each with its own request lifecycle
+
+    admit -> prefill -> decode -> retire (EOS / token budget / max_len)
+
+and a host-side request queue. Prefill is one jitted `jax.lax.scan` over
+prompt positions (bucketed by padded prompt length, so a handful of
+programs serve every prompt). Decoding is one masked jitted step for the
+whole batch: retired slots keep stepping with clamped positions (their
+garbage is overwritten at the next admit), so refilling a slot from the
+queue never re-traces. Slot admission uses the ModelApi slot-surgery
+helpers (`insert_slot` / `extract_slot` / `reset_slot`): a request is
+prefilled into a fresh batch-1 state and spliced into its slot. This is
+the paper's §4 regime — batch 1-4 streams amortizing each weight load —
+with no slot burning idle once its request finishes.
+
+`max_len` is a hard boundary: prefill rejects prompts that don't fit and
+a slot whose cache is full retires with reason "max_len" instead of
+wrapping the scatter index and corrupting the cache.
+
+`cache_dtype` downcasts only the attention KV-cache leaves (see
+`models.api.cast_kv_cache`); SSM / recurrent carries stay full precision.
 
 StreamingSpeechServer — the paper's embedded deployment mode: frame-
-synchronous DS2 inference. The conv frontend runs on small feature chunks;
-each GRU step is the low-batch recurrent GEMM that kernels/decode_matvec
-and kernels/gru_cell target; CTC greedy labels stream out per frame.
+synchronous DS2 inference. The conv frontend streams over mel chunks
+*with receptive-field context carried across chunk boundaries*, so the
+streamed CTC labels match the full-utterance forward exactly; each GRU
+step is the low-batch recurrent GEMM that kernels/decode_matvec and
+kernels/gru_cell target.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import functools
-from typing import Any
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -27,20 +45,57 @@ from repro.dist.sharding import make_constraint
 from repro.kernels.dispatch import resolve_policy
 from repro.layers.common import ModelConfig
 from repro.models import deepspeech
-from repro.models.api import get_model
+from repro.models.api import cast_kv_cache, get_model
+
+_INHERIT = object()   # submit(eos_id=...) sentinel: use the engine's eos_id
 
 
 @dataclasses.dataclass
 class GenerationResult:
-  tokens: np.ndarray            # (b, steps)
+  tokens: np.ndarray            # (b, steps); rows past their length are 0
   steps: int
+  lengths: Optional[np.ndarray] = None   # (b,) generated tokens per row
+
+
+@dataclasses.dataclass
+class Request:
+  uid: int
+  prompt: np.ndarray            # (p,) int32
+  max_new_tokens: Optional[int]  # None = until EOS or max_len
+  eos_id: Optional[int]
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+  uid: int
+  prompt: np.ndarray
+  tokens: np.ndarray            # generated tokens, prompt excluded
+  finish_reason: str            # "eos" | "length" | "max_len"
+
+
+@dataclasses.dataclass
+class _Slot:
+  req: Request
+  tokens: list
+  remaining: Optional[int]
+
+
+def _next_pow2(n: int) -> int:
+  return 1 << max(0, int(n - 1).bit_length())
+
+
+def _bcast_mask(mask: jax.Array, ndim: int, axis: int) -> jax.Array:
+  shape = [1] * ndim
+  shape[axis] = mask.shape[0]
+  return mask.reshape(shape)
 
 
 class LMEngine:
 
   def __init__(self, model_cfg: ModelConfig, params: Any, *,
                batch_size: int, max_len: int, mesh=None,
-               cache_dtype=None, rng=None, kernel_policy=None):
+               cache_dtype=None, rng=None, kernel_policy=None,
+               eos_id: Optional[int] = None):
     self.cfg = model_cfg
     self.params = params
     self.api = get_model(model_cfg)
@@ -49,55 +104,256 @@ class LMEngine:
     self.batch = batch_size
     self.max_len = max_len
     self.cache_dtype = cache_dtype
+    self.eos_id = eos_id
     cs = make_constraint(mesh, model_cfg, batch_size, decode=True)
     # the decode-regime KernelPolicy is built HERE, once, like cs: the
     # jitted step closes over it, so "pallas" lowers every eligible GEMM
     # through kernels.dispatch. None keeps the exact jnp program.
     policy = resolve_policy(kernel_policy, batch_size)
     self.kernel_policy = policy
-    self.state = self._init_state()
+    self._axes = self.api.decode_state_batch_axes(model_cfg)
+    self.state = self._init_state(batch_size)
     self.positions = jnp.zeros((batch_size,), jnp.int32)
     self.rng = jax.random.PRNGKey(0) if rng is None else rng
 
+    # host-side per-slot lifecycle + the request queue
+    self._queue: collections.deque = collections.deque()
+    self._slots: list = [None] * batch_size
+    self._active = np.zeros((batch_size,), bool)
+    self._next_tok = np.zeros((batch_size, 1), np.int32)
+    self._finished: dict = {}
+    self._next_uid = 0
+    # occupancy accounting for bench_serving: busy slot-steps / slot-steps
+    self.decode_steps = 0
+    self.busy_slot_steps = 0
+
+    api, cfg = self.api, model_cfg
+
     def step(params, state, token, positions):
-      return self.api.decode_step(params, state, token, positions,
-                                  model_cfg, cs, policy)
+      return api.decode_step(params, state, token, positions, cfg, cs,
+                             policy)
     self._step = jax.jit(step, donate_argnums=(1,))
 
-  def _init_state(self):
-    state = self.api.init_decode_state(self.cfg, self.batch, self.max_len)
-    if self.cache_dtype is not None:
-      state = jax.tree.map(
-          lambda x: x.astype(self.cache_dtype)
-          if x.dtype in (jnp.float32, jnp.bfloat16) else x, state)
-    return state
+    def prefill_prog(params, state, prompts, plens, pos0):
+      """Fused prefill: scan over prompt positions inside one program.
+
+      prompts (b, P) padded to the bucket length; plens (b,) true lengths
+      (>= 1); pos0 (b,) starting positions. Rows keep stepping past their
+      own length with the state select masked back, so one program serves
+      every mix of prompt lengths at a bucket size. Returns (last live
+      logits per row (b, 1, v) float32, state after plens tokens)."""
+      b, P = prompts.shape
+      def masked(live, new, old):
+        return jax.tree.map(
+            lambda n, o, ax: jnp.where(_bcast_mask(live, n.ndim, ax), n, o),
+            new, old, self._axes)
+      logits0, state1 = api.decode_step(params, state, prompts[:, 0:1],
+                                        pos0, cfg, cs, policy)
+      last0 = logits0.astype(jnp.float32)
+      def body(carry, t):
+        st, last = carry
+        tok = jax.lax.dynamic_slice_in_dim(prompts, t, 1, axis=1)
+        logits, new_st = api.decode_step(params, st, tok, pos0 + t, cfg,
+                                         cs, policy)
+        live = t < plens
+        st = masked(live, new_st, st)
+        last = jnp.where(live[:, None, None], logits.astype(jnp.float32),
+                         last)
+        return (st, last), None
+      (state2, last), _ = jax.lax.scan(body, (state1, last0),
+                                       jnp.arange(1, P))
+      return last, state2
+    # no donation: admission prefills from the cached fresh-slot template,
+    # which must survive the call
+    self._prefill = jax.jit(prefill_prog)
+
+    def insert(state, slot_state, slot):
+      return api.insert_slot(cfg, state, slot_state, slot)
+    self._insert = jax.jit(insert, donate_argnums=(0,))
+    # one fresh single-slot decode state, reused as the admission template
+    self._fresh_slot = self._init_state(1)
+
+  def _init_state(self, batch: int):
+    state = self.api.init_decode_state(self.cfg, batch, self.max_len)
+    # scope: KV-cache leaves only — SSM/recurrent carries are read-modify-
+    # write every step and must keep their working precision
+    return cast_kv_cache(state, self.cache_dtype)
 
   def reset(self) -> None:
-    self.state = self._init_state()
+    self.state = self._init_state(self.batch)
     self.positions = jnp.zeros((self.batch,), jnp.int32)
+    self._queue.clear()
+    self._slots = [None] * self.batch
+    self._active[:] = False
+    self._next_tok[:] = 0
+    self._finished = {}
+    self.decode_steps = 0
+    self.busy_slot_steps = 0
+
+  # -- request lifecycle ----------------------------------------------------
+
+  @property
+  def num_active(self) -> int:
+    return int(self._active.sum())
+
+  @property
+  def occupancy(self) -> float:
+    """Mean fraction of slots doing useful work per decode step."""
+    total = self.decode_steps * self.batch
+    return self.busy_slot_steps / total if total else 0.0
+
+  def submit(self, prompt, *, max_new_tokens: Optional[int] = None,
+             eos_id=_INHERIT) -> int:
+    """Queue one request; returns its uid. `eos_id=None` disables EOS
+    retirement for this request (the engine default applies otherwise)."""
+    prompt = np.asarray(prompt, np.int32).reshape(-1)
+    if prompt.size == 0:
+      raise ValueError("empty prompt")
+    if prompt.size > self.max_len:
+      raise ValueError(
+          f"prompt length {prompt.size} exceeds max_len {self.max_len}")
+    if max_new_tokens is not None and max_new_tokens < 1:
+      raise ValueError("max_new_tokens must be >= 1")
+    uid = self._next_uid
+    self._next_uid += 1
+    eos = self.eos_id if eos_id is _INHERIT else eos_id
+    self._queue.append(Request(uid=uid, prompt=prompt,
+                               max_new_tokens=max_new_tokens, eos_id=eos))
+    return uid
+
+  def _retire(self, slot: int, reason: str) -> None:
+    s = self._slots[slot]
+    self._finished[s.req.uid] = FinishedRequest(
+        uid=s.req.uid, prompt=s.req.prompt,
+        tokens=np.asarray(s.tokens, np.int32), finish_reason=reason)
+    self._slots[slot] = None
+    self._active[slot] = False
+    self._next_tok[slot] = 0
+    # no state scrub here: the slot keeps stepping masked (positions
+    # clamped to 0) and the next admit splices a fully fresh prefilled
+    # state over every row of the slot
+
+  def _record_token(self, slot: int, tok: int, pos: int) -> bool:
+    """Append a sampled token; retire the slot if the request is done.
+    `pos` is the slot's cache write count. Returns True while the slot
+    stays active."""
+    s = self._slots[slot]
+    s.tokens.append(tok)
+    if s.remaining is not None:
+      s.remaining -= 1
+    if s.req.eos_id is not None and tok == s.req.eos_id:
+      self._retire(slot, "eos")
+      return False
+    if s.remaining == 0:
+      self._retire(slot, "length")
+      return False
+    if pos >= self.max_len:
+      # cache full: one more step would scatter past max_len and corrupt
+      # the KV cache — retire instead (the hard boundary)
+      self._retire(slot, "max_len")
+      return False
+    return True
+
+  def _admit(self, req: Request, slot: int, temperature: float) -> None:
+    """Prefill `req` into a fresh batch-1 state and splice it into `slot`."""
+    plen = req.prompt.size
+    bucket = min(max(self.max_len, 1), _next_pow2(plen))
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, :plen] = req.prompt
+    last, slot_state = self._prefill(
+        self.params, self._fresh_slot, jnp.asarray(padded),
+        jnp.asarray([plen], jnp.int32), jnp.zeros((1,), jnp.int32))
+    self.state = self._insert(self.state, slot_state,
+                              jnp.asarray(slot, jnp.int32))
+    self.positions = self.positions.at[slot].set(plen)
+    self._slots[slot] = _Slot(req=req, tokens=[],
+                              remaining=req.max_new_tokens)
+    self._active[slot] = True
+    tok = int(np.asarray(self._sample(last, temperature))[0, 0])
+    if self._record_token(slot, tok, plen):
+      self._next_tok[slot, 0] = tok
+
+  def _admit_from_queue(self, temperature: float) -> None:
+    slot = 0
+    while self._queue and slot < self.batch:
+      if self._active[slot]:
+        slot += 1
+        continue
+      # a request may finish during admission (EOS in the prefill logits,
+      # budget 1, or a full cache) — then the slot is still free
+      self._admit(self._queue.popleft(), slot, temperature)
+
+  def _decode_all(self, temperature: float) -> None:
+    """One masked decode step for every slot. Inactive slots step with
+    positions clamped to 0 and token 0; their state rows are garbage until
+    the next admit overwrites them, which keeps the step program fixed."""
+    active = jnp.asarray(self._active)
+    safe_pos = jnp.where(active, self.positions, 0)
+    logits, self.state = self._step(self.params, self.state,
+                                    jnp.asarray(self._next_tok), safe_pos)
+    self.positions = jnp.where(active, self.positions + 1, self.positions)
+    self.decode_steps += 1
+    self.busy_slot_steps += int(self._active.sum())
+    toks = np.asarray(self._sample(logits, temperature))
+    pos = np.asarray(self.positions)        # one host sync per step
+    for i in range(self.batch):
+      if self._active[i] and self._record_token(i, int(toks[i, 0]),
+                                                int(pos[i])):
+        self._next_tok[i, 0] = toks[i, 0]
+
+  def run(self, *, temperature: float = 0.0) -> list:
+    """Drain the queue: admit, decode, retire, refill until idle. Returns
+    the requests finished since the last call, in submission order."""
+    while self._queue or self._active.any():
+      self._admit_from_queue(temperature)
+      if self._active.any():
+        self._decode_all(temperature)
+    out = [self._finished[uid] for uid in sorted(self._finished)]
+    self._finished = {}
+    return out
+
+  # -- static-batch compatibility surface -----------------------------------
 
   def prefill(self, prompts: np.ndarray) -> jax.Array:
-    """Feed prompts (b, p) through the decode step; returns last logits."""
-    prompts = jnp.asarray(prompts, jnp.int32)
-    logits = None
-    for t in range(prompts.shape[1]):
-      logits, self.state = self._step(self.params, self.state,
-                                      prompts[:, t:t + 1], self.positions)
-      self.positions = self.positions + 1
+    """Feed prompts (b, p) through the fused prefill scan; returns last
+    logits (b, 1, v). Static-batch surface: b must equal batch_size."""
+    prompts = np.asarray(prompts)
+    b, p = prompts.shape
+    if b != self.batch:
+      raise ValueError(f"prefill batch {b} != engine batch {self.batch}")
+    if p == 0:
+      raise ValueError("empty prompts")
+    start = np.asarray(self.positions)
+    if int(start.max()) + p > self.max_len:
+      raise ValueError(
+          f"prefill would pass max_len={self.max_len} "
+          f"(start {int(start.max())} + prompt {p})")
+    bucket = min(max(self.max_len, 1), _next_pow2(p))
+    padded = np.zeros((b, bucket), np.int32)
+    padded[:, :p] = prompts
+    logits, self.state = self._prefill(
+        self.params, self.state, jnp.asarray(padded),
+        jnp.full((b,), p, jnp.int32), self.positions)
+    self.positions = self.positions + p
     return logits
 
   def generate(self, prompts: np.ndarray, *, steps: int,
                temperature: float = 0.0) -> GenerationResult:
-    logits = self.prefill(prompts)
-    out = []
-    for _ in range(steps):
-      tok = self._sample(logits, temperature)
-      out.append(np.asarray(tok))
-      logits, self.state = self._step(self.params, self.state, tok,
-                                      self.positions)
-      self.positions = self.positions + 1
-    return GenerationResult(tokens=np.concatenate(out, axis=1),
-                            steps=steps)
+    """Static-batch wrapper over the continuous engine: every row becomes
+    a request with a `steps` token budget and no EOS exit (legacy
+    semantics). Rows retired early at the max_len boundary come back
+    shorter; see `lengths`. Accepts more rows than slots — extras queue."""
+    prompts = np.asarray(prompts)
+    uids = [self.submit(row, max_new_tokens=steps, eos_id=None)
+            for row in prompts]
+    by_uid = {f.uid: f for f in self.run(temperature=temperature)}
+    tokens = np.zeros((len(uids), steps), np.int32)
+    lengths = np.zeros((len(uids),), np.int32)
+    for r, uid in enumerate(uids):
+      t = by_uid[uid].tokens
+      tokens[r, :t.size] = t
+      lengths[r] = t.size
+    return GenerationResult(tokens=tokens, steps=steps, lengths=lengths)
 
   def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
     lg = logits[:, -1].astype(jnp.float32)
@@ -108,8 +364,91 @@ class LMEngine:
         k, lg / temperature, axis=-1)[:, None].astype(jnp.int32)
 
 
+# ----------------------------------------------------------------------------
+# Streaming speech.
+# ----------------------------------------------------------------------------
+
+
+def _same_pad(size: int, kernel: int, stride: int) -> tuple[int, int]:
+  """XLA/TF SAME padding split for a fixed, fully visible axis length."""
+  out = -(-size // stride)
+  total = max((out - 1) * stride + kernel - size, 0)
+  return total // 2, total - total // 2
+
+
+class _ConvStream:
+  """One strided-conv stage streamed over time with SAME-padding parity.
+
+  For an aligned total length (t % stride == 0) SAME padding is the
+  constant split pl = (k - s) // 2 left, the rest right. The stage
+  materializes the left pad once at stream start, buffers pushed frames,
+  and emits output frame j as soon as its receptive field
+  [j*s - pl, j*s - pl + k) is complete; `flush` appends the right pad and
+  drains the tail. Chunked emission therefore equals the full-utterance
+  SAME conv frame-for-frame (the alignment caveat is checked by the
+  server at flush time).
+  """
+
+  def __init__(self, kernel: int, stride: int, apply_fn):
+    self.k, self.s = kernel, stride
+    self.pad_l = (kernel - stride) // 2
+    self.pad_r = (kernel - stride) - self.pad_l
+    self.apply = apply_fn        # (b, t, ...) -> outputs, VALID in time
+    self.buf: Optional[np.ndarray] = None
+    self.n_in = 0                # frames received, padding excluded
+    self.flushed = False
+
+  def _zeros(self, like: np.ndarray, t: int) -> np.ndarray:
+    return np.zeros((like.shape[0], t) + like.shape[2:], like.dtype)
+
+  def _emit(self) -> Optional[np.ndarray]:
+    n = self.buf.shape[1]
+    m = (n - self.k) // self.s + 1 if n >= self.k else 0
+    if m <= 0:
+      return None
+    window = self.buf[:, :(m - 1) * self.s + self.k]
+    self.buf = self.buf[:, m * self.s:]
+    return np.asarray(self.apply(window))
+
+  def push(self, x) -> Optional[np.ndarray]:
+    if self.flushed:
+      raise RuntimeError("conv stream already flushed; reset() first")
+    x = np.asarray(x)
+    if self.buf is None:
+      self.buf = np.concatenate([self._zeros(x, self.pad_l), x], axis=1)
+    else:
+      self.buf = np.concatenate([self.buf, x.astype(self.buf.dtype)],
+                                axis=1)
+    self.n_in += x.shape[1]
+    return self._emit()
+
+  def flush(self) -> Optional[np.ndarray]:
+    # idempotent: re-flushing must not re-pad the residual buffer and
+    # complete a fake window
+    if self.buf is None or self.flushed:
+      return None
+    self.flushed = True
+    self.buf = np.concatenate(
+        [self.buf, self._zeros(self.buf, self.pad_r)], axis=1)
+    return self._emit()
+
+  def reset(self) -> None:
+    self.buf = None
+    self.n_in = 0
+    self.flushed = False
+
+
 class StreamingSpeechServer:
-  """Frame-synchronous DS2 serving (paper §4's embedded regime)."""
+  """Frame-synchronous DS2 serving (paper §4's embedded regime).
+
+  The conv frontend is streamed: each `_ConvStream` stage carries the
+  receptive-field context its kernel needs across `process_chunk` calls,
+  so a chunked utterance produces exactly the labels of the full-utterance
+  forward. Call `flush()` (or `process_chunk(..., final=True)`) at end of
+  utterance to drain the right-edge context; exact parity requires the
+  total frame count to be a multiple of 2 * time_stride (the composite
+  frontend stride), which `flush` asserts.
+  """
 
   def __init__(self, model_cfg: ModelConfig, params: Any, *,
                batch_size: int = 1, kernel_policy=None):
@@ -127,23 +466,103 @@ class StreamingSpeechServer:
       return deepspeech.decode_step(params, state, x_t, model_cfg,
                                     policy=policy)
     self._frame_step = jax.jit(frame_step, donate_argnums=(1,))
-    self._frontend = jax.jit(functools.partial(
-        deepspeech._frontend, cfg=model_cfg))
+
+    cfg = model_cfg
+    # geometry comes from the conv weights themselves (one source of
+    # truth with deepspeech.init_model) + the shared stride constants
+    k1t, k1f = params["conv1"].shape[:2]
+    k2t, k2f = params["conv2"].shape[:2]
+    s1t, sf = deepspeech.CONV1_TIME_STRIDE, deepspeech.CONV_FREQ_STRIDE
+    f1l, f1r = _same_pad(cfg.feat_dim, k1f, sf)
+    f2l, f2r = _same_pad(-(-cfg.feat_dim // sf), k2f, sf)
+
+    def conv1(params, x):                       # (b, t, f) raw mel
+      x = jax.lax.conv_general_dilated(
+          x[..., None].astype(cfg.dtype), params["conv1"],
+          window_strides=(s1t, sf), padding=((0, 0), (f1l, f1r)),
+          dimension_numbers=("NHWC", "HWIO", "NHWC"))
+      return jax.nn.relu(x.astype(jnp.float32)).astype(cfg.dtype)
+
+    def conv2(params, x):                       # (b, t, f', ch)
+      x = jax.lax.conv_general_dilated(
+          x, params["conv2"], window_strides=(cfg.time_stride, sf),
+          padding=((0, 0), (f2l, f2r)),
+          dimension_numbers=("NHWC", "HWIO", "NHWC"))
+      x = jax.nn.relu(x.astype(jnp.float32)).astype(cfg.dtype)
+      b, t, f, c = x.shape
+      return x.reshape(b, t, f * c)
+
+    self._conv1 = jax.jit(conv1)
+    self._conv2 = jax.jit(conv2)
+    self._stream1 = _ConvStream(k1t, s1t,
+                                lambda x: self._conv1(self.params, x))
+    self._stream2 = _ConvStream(k2t, cfg.time_stride,
+                                lambda x: self._conv2(self.params, x))
+    self._finished = False
 
   def reset(self) -> None:
     self.state = deepspeech.init_decode_state(self.cfg, self.batch)
     self._prev = np.full((self.batch,), -1, np.int64)
+    self._stream1.reset()
+    self._stream2.reset()
+    self._finished = False
 
-  def process_chunk(self, feats: np.ndarray) -> list[list[int]]:
-    """feats (b, t, feat_dim) raw mel chunk -> newly emitted labels."""
-    x = self._frontend(self.params, jnp.asarray(feats))
-    emitted: list[list[int]] = [[] for _ in range(self.batch)]
+  def _run_frames(self, x: np.ndarray) -> list:
+    """Post-frontend frames (b, t', gru_in) -> newly emitted labels."""
+    emitted = [[] for _ in range(self.batch)]
     for t in range(x.shape[1]):
       log_probs, self.state = self._frame_step(self.params, self.state,
-                                               x[:, t])
+                                               jnp.asarray(x[:, t]))
       best = np.asarray(jnp.argmax(log_probs, axis=-1))
       for i in range(self.batch):
         if best[i] != 0 and best[i] != self._prev[i]:
           emitted[i].append(int(best[i]))
         self._prev[i] = best[i]
     return emitted
+
+  def _frontend_outputs(self, feats=None, *, final: bool = False) -> list:
+    outs = []
+    if feats is not None:
+      y1 = self._stream1.push(feats)
+      if y1 is not None and y1.shape[1]:
+        outs.append(self._stream2.push(y1))
+    if final:
+      y1 = self._stream1.flush()
+      if y1 is not None and y1.shape[1]:
+        outs.append(self._stream2.push(y1))
+      outs.append(self._stream2.flush())
+    return [o for o in outs if o is not None and o.shape[1]]
+
+  def process_chunk(self, feats: np.ndarray, *,
+                    final: bool = False) -> list:
+    """feats (b, t, feat_dim) raw mel chunk -> newly emitted labels.
+
+    Emission lags the chunk boundary by the frontend's receptive field —
+    the context carried so chunked output equals the full forward. Pass
+    final=True (or call flush()) after the last chunk; a redundant
+    final/flush is a no-op, new frames after it require reset()."""
+    feats = np.asarray(feats)
+    if self._finished:
+      if feats.shape[1]:
+        raise RuntimeError("utterance already finalized; reset() first")
+      return [[] for _ in range(self.batch)]
+    outs = self._frontend_outputs(feats, final=final)
+    if final:
+      stride = deepspeech.CONV1_TIME_STRIDE * self.cfg.time_stride
+      if self._stream1.n_in % stride:
+        raise ValueError(
+            f"utterance length {self._stream1.n_in} not a multiple of the "
+            f"composite frontend stride {stride}: SAME padding would "
+            "differ from the full-utterance forward")
+      self._finished = True
+    emitted = [[] for _ in range(self.batch)]
+    for out in outs:
+      for i, e in enumerate(self._run_frames(out)):
+        emitted[i].extend(e)
+    return emitted
+
+  def flush(self) -> list:
+    """Drain the right-edge conv context at end of utterance."""
+    return self.process_chunk(
+        np.zeros((self.batch, 0, self.cfg.feat_dim), np.float32),
+        final=True)

@@ -1,6 +1,18 @@
-"""Decode-path consistency: step-by-step cached decoding must reproduce
-the full-sequence forward logits (catches every KV/SSM-cache bug class).
-Plus engine-level generation determinism."""
+"""Serving-layer tests.
+
+Decode-path consistency: step-by-step cached decoding must reproduce the
+full-sequence forward logits (catches every KV/SSM-cache bug class).
+
+Continuous batching: the engine's mixed-length, EOS-retiring, slot-refilling
+schedule must be invisible — every request's tokens match a dedicated
+batch-1 engine token-for-token, under both jnp and Pallas kernel policies.
+
+Plus the serving-correctness regressions: cache_dtype scoped to KV leaves,
+max_len as a hard boundary, chunked streaming == full-utterance forward,
+and slot-surgery round-trips per model family.
+"""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -14,9 +26,15 @@ DECODABLE = ["llama3-8b", "qwen3-4b", "glm4-9b", "stablelm-3b",
              "chameleon-34b", "deepseek-v2-lite", "zamba2-7b", "xlstm-350m"]
 
 
+def _params_for(arch, **with_kw):
+  cfg = configs.get_smoke(arch).with_(dtype=jnp.float32, **with_kw)
+  api = get_model(cfg)
+  return cfg, api, api.init(jax.random.PRNGKey(0), cfg)
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", DECODABLE)
 def test_decode_matches_forward(arch):
-  import dataclasses
   cfg = configs.get_smoke(arch).with_(dtype=jnp.float32)
   if cfg.moe is not None:
     # ample capacity: capacity-based MoE drops tokens at train-time batch
@@ -69,6 +87,279 @@ def test_engine_int8_kv_cache_runs():
                  cache_dtype=jnp.float16)
   out = eng.generate(np.array([[1, 2], [3, 4]]), steps=3)
   assert out.tokens.shape == (2, 3)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching.
+# ---------------------------------------------------------------------------
+
+# mixed prompt lengths + budgets, 2x the slots -> refill mid-run
+# (lengths stay <= 8 so every engine shares the same prefill buckets)
+PROMPT_LENS = (3, 7, 2, 5, 8, 4)
+BUDGETS = (4, 8, 3, 6, 2, 5)
+
+
+def _mixed_requests(vocab):
+  rng = np.random.RandomState(7)
+  return [rng.randint(1, vocab, size=(l,)) for l in PROMPT_LENS]
+
+
+def _reference_runs(cfg, params, prompts, budgets, *, policy=None,
+                    eos_id=None):
+  """Each request decoded alone in a dedicated batch-1 engine."""
+  out = []
+  for p, n in zip(prompts, budgets):
+    eng = LMEngine(cfg, params, batch_size=1, max_len=32,
+                   kernel_policy=policy, eos_id=eos_id)
+    eng.submit(p, max_new_tokens=n)
+    out.append(eng.run()[0])
+  return out
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", [None, "pallas"])
+@pytest.mark.parametrize("arch", ["qwen3-4b", "zamba2-7b"])
+def test_continuous_batching_parity(arch, policy):
+  """Token-for-token parity with per-request decoding across an attention
+  family and an SSM-hybrid family, jnp and Pallas kernel policies."""
+  cfg, _, params = _params_for(arch, vocab_size=64)
+  prompts = _mixed_requests(cfg.vocab_size)
+
+  eng = LMEngine(cfg, params, batch_size=3, max_len=32,
+                 kernel_policy=policy)
+  uids = [eng.submit(p, max_new_tokens=n)
+          for p, n in zip(prompts, BUDGETS)]
+  finished = {f.uid: f for f in eng.run()}
+  assert sorted(finished) == sorted(uids)
+  # 6 requests through 3 slots: refill happened and slots stayed busy
+  assert eng.decode_steps * 3 > eng.busy_slot_steps > 0
+
+  for uid, ref in zip(uids, _reference_runs(cfg, params, prompts, BUDGETS,
+                                            policy=policy)):
+    np.testing.assert_array_equal(finished[uid].tokens, ref.tokens)
+    assert finished[uid].finish_reason == ref.finish_reason
+
+
+@pytest.mark.slow
+def test_eos_retirement_and_slot_refill():
+  """EOS retires a slot mid-run at different steps per request; the freed
+  slot is refilled from the queue; outputs still match batch-1 decoding."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  prompts = _mixed_requests(cfg.vocab_size)
+
+  # pick an EOS id that actually occurs: the 2nd token of the longest run
+  probe = _reference_runs(cfg, params, prompts, BUDGETS)
+  eos_id = int(probe[1].tokens[1])
+
+  eng = LMEngine(cfg, params, batch_size=2, max_len=32, eos_id=eos_id)
+  uids = [eng.submit(p, max_new_tokens=n)
+          for p, n in zip(prompts, BUDGETS)]
+  finished = {f.uid: f for f in eng.run()}
+  refs = _reference_runs(cfg, params, prompts, BUDGETS, eos_id=eos_id)
+
+  reasons = set()
+  for uid, ref in zip(uids, refs):
+    np.testing.assert_array_equal(finished[uid].tokens, ref.tokens)
+    assert finished[uid].finish_reason == ref.finish_reason
+    reasons.add(finished[uid].finish_reason)
+  assert "eos" in reasons          # at least one request hit EOS...
+  assert "length" in reasons       # ...and at least one ran to budget
+  lens = {len(finished[u].tokens) for u in uids
+          if finished[u].finish_reason == "eos"}
+  assert lens, "no EOS retirement happened"
+
+
+def test_generate_queues_beyond_batch():
+  """The static-batch wrapper accepts more rows than slots (extras queue)."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  prompts = np.random.RandomState(3).randint(1, 64, size=(5, 4))
+  big = LMEngine(cfg, params, batch_size=5, max_len=32)
+  small = LMEngine(cfg, params, batch_size=2, max_len=32)
+  a = big.generate(prompts, steps=4).tokens
+  b = small.generate(prompts, steps=4).tokens
+  np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Regression: cache_dtype is scoped to attention KV leaves.
+# ---------------------------------------------------------------------------
+
+
+def test_cache_dtype_spares_ssm_state():
+  """On an SSM-hybrid config, cache_dtype touches only the shared KV
+  cache; Mamba2 carries keep full precision (regression: the old blanket
+  cast downcast every float leaf of decode state)."""
+  cfg, _, params = _params_for("zamba2-7b", vocab_size=64)
+  eng = LMEngine(cfg, params, batch_size=2, max_len=16,
+                 cache_dtype=jnp.float16)
+  assert eng.state["shared_kv"]["k"].dtype == jnp.float16
+  assert eng.state["shared_kv"]["v"].dtype == jnp.float16
+  # SSM recurrent carry must stay float32, the conv tail at cfg.dtype
+  assert eng.state["main_ssm"]["ssm"].dtype == jnp.float32
+  assert eng.state["main_ssm"]["conv"].dtype == cfg.dtype
+  assert eng.state["tail_ssm"]["ssm"].dtype == jnp.float32
+  # and the engine still decodes
+  out = eng.generate(np.array([[1, 2], [3, 4]]), steps=3)
+  assert out.tokens.shape == (2, 3)
+
+
+def test_cache_dtype_casts_attention_cache():
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  eng = LMEngine(cfg, params, batch_size=2, max_len=16,
+                 cache_dtype=jnp.float16)
+  assert eng.state["dense"]["k"].dtype == jnp.float16
+  assert eng.state["dense"]["v"].dtype == jnp.float16
+
+
+# ---------------------------------------------------------------------------
+# Regression: max_len is a hard boundary.
+# ---------------------------------------------------------------------------
+
+
+def test_max_len_retires_instead_of_wrapping():
+  """A slot whose cache is full retires with reason "max_len"; its tokens
+  are a clean prefix of an uncapped run (no scatter wraparound corrupting
+  the cache and the logits)."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  prompt = np.array([1, 2, 3, 4])
+
+  capped = LMEngine(cfg, params, batch_size=1, max_len=8)
+  capped.submit(prompt, max_new_tokens=100)
+  got = capped.run()[0]
+  assert got.finish_reason == "max_len"
+  # prefill fills 4 rows; 1 token from prefill logits + 4 decode writes
+  assert len(got.tokens) == 5
+
+  roomy = LMEngine(cfg, params, batch_size=1, max_len=32)
+  roomy.submit(prompt, max_new_tokens=100)
+  want = roomy.run()[0]
+  np.testing.assert_array_equal(got.tokens, want.tokens[:len(got.tokens)])
+
+
+def test_max_len_rejects_oversized_prompt():
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  eng = LMEngine(cfg, params, batch_size=1, max_len=8)
+  with pytest.raises(ValueError, match="max_len"):
+    eng.submit(np.arange(1, 10))
+  with pytest.raises(ValueError, match="max_len"):
+    eng.prefill(np.arange(1, 10)[None, :])
+
+
+def test_generate_pads_rows_retired_at_max_len():
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  eng = LMEngine(cfg, params, batch_size=2, max_len=8)
+  out = eng.generate(np.array([[1, 2, 3, 4], [5, 6, 7, 8]]), steps=10)
+  assert out.tokens.shape == (2, 10)
+  np.testing.assert_array_equal(out.lengths, [5, 5])
+  assert (out.tokens[:, 5:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Slot surgery (ModelApi insert/extract/reset_slot).
+# ---------------------------------------------------------------------------
+
+SLOTTED = ["qwen3-4b", "deepseek-v2-lite", "zamba2-7b", "xlstm-350m",
+           "whisper-small", "deepspeech2-wsj"]
+
+
+@pytest.mark.parametrize("arch", SLOTTED)
+def test_decode_state_batch_axes_contract(arch):
+  """Every family's declared batch axes match the axis that actually
+  varies with the batch argument of init_decode_state."""
+  cfg = configs.get_smoke(arch)
+  api = get_model(cfg)
+  s2 = jax.eval_shape(lambda: api.init_decode_state(cfg, 2, 16))
+  s3 = jax.eval_shape(lambda: api.init_decode_state(cfg, 3, 16))
+  def axis(a, b):
+    d = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+    assert len(d) == 1, (a.shape, b.shape)
+    return d[0]
+  assert jax.tree.map(axis, s2, s3) == api.decode_state_batch_axes(cfg)
+
+
+@pytest.mark.parametrize("arch", SLOTTED)
+def test_slot_surgery_roundtrip(arch):
+  """insert_slot(extract_slot(state, i), j) moves one request's rows and
+  nothing else; reset_slot restores a slot to its init values."""
+  cfg = configs.get_smoke(arch)
+  api = get_model(cfg)
+  key = iter(jax.random.split(jax.random.PRNGKey(0), 64))
+  randomize = lambda x: jax.random.normal(next(key), x.shape).astype(x.dtype)
+  state = jax.tree.map(randomize, api.init_decode_state(cfg, 3, 16))
+  axes = api.decode_state_batch_axes(cfg)
+
+  slot1 = api.extract_slot(cfg, state, 1)
+  moved = api.insert_slot(cfg, state, slot1, 2)
+  for s, m, ax in zip(jax.tree.leaves(state), jax.tree.leaves(moved),
+                      jax.tree.leaves(axes)):
+    np.testing.assert_array_equal(np.take(np.asarray(m), 2, axis=ax),
+                                  np.take(np.asarray(s), 1, axis=ax))
+    np.testing.assert_array_equal(np.take(np.asarray(m), 0, axis=ax),
+                                  np.take(np.asarray(s), 0, axis=ax))
+
+  fresh = api.init_decode_state(cfg, 3, 16)
+  wiped = api.reset_slot(cfg, state, 0, max_len=16)
+  for w, f, s, ax in zip(jax.tree.leaves(wiped), jax.tree.leaves(fresh),
+                         jax.tree.leaves(state), jax.tree.leaves(axes)):
+    np.testing.assert_array_equal(np.take(np.asarray(w), 0, axis=ax),
+                                  np.take(np.asarray(f), 0, axis=ax))
+    np.testing.assert_array_equal(np.take(np.asarray(w), 1, axis=ax),
+                                  np.take(np.asarray(s), 1, axis=ax))
+
+
+# ---------------------------------------------------------------------------
+# Streaming speech: chunked == full-utterance.
+# ---------------------------------------------------------------------------
+
+
+def _collapse(best_row):
+  prev, out = -1, []
+  for lab in best_row:
+    if lab != 0 and lab != prev:
+      out.append(int(lab))
+    prev = lab
+  return out
+
+
+@pytest.mark.slow
+def test_streaming_chunked_matches_full_utterance():
+  """The conv frontend carries receptive-field context across chunk
+  boundaries, so streamed CTC labels equal the full-utterance forward
+  (regression: each chunk used to see its mel frames in isolation)."""
+  from repro.models import deepspeech
+  from repro.serving import StreamingSpeechServer
+  cfg = configs.get_smoke("deepspeech2-wsj")
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  rng = np.random.RandomState(0)
+  feats = rng.randn(2, 48, cfg.feat_dim).astype(np.float32)
+
+  log_probs = deepspeech.forward(params, jnp.asarray(feats), cfg)
+  best = np.asarray(jnp.argmax(log_probs, axis=-1))
+  ref = [_collapse(best[i]) for i in range(2)]
+
+  server = StreamingSpeechServer(cfg, params, batch_size=2)
+  got = [[], []]
+  # uneven chunks: context must survive arbitrary chunking
+  for chunk in np.split(feats, [16, 28], axis=1):
+    for i, e in enumerate(server.process_chunk(chunk)):
+      got[i].extend(e)
+  for i, e in enumerate(server.flush()):
+    got[i].extend(e)
+  assert got == ref
+
+  # a redundant flush after finalizing must NOT re-pad the residual conv
+  # buffer and emit a spurious label; new frames require reset()
+  assert server.flush() == [[], []]
+  with pytest.raises(RuntimeError, match="reset"):
+    server.process_chunk(feats[:, :4])
+
+  # a second utterance after reset() must not see stale context
+  server.reset()
+  got2 = [[], []]
+  for i, e in enumerate(server.process_chunk(feats, final=True)):
+    got2[i].extend(e)
+  assert got2 == ref
 
 
 def test_streaming_speech_server():

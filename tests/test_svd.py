@@ -39,6 +39,19 @@ def test_explained_variance_rank():
   assert svd_lib.explained_variance_rank(s, 1.0) == 4
 
 
+def test_rank_for_variance_degenerate_matrix():
+  """All-zero singular values (a zero matrix) must report a rank in
+  [1, d] — regression: the 1e-30 guard made every cumulative fraction
+  fall below the threshold, returning d + 1."""
+  from repro.core.tracenorm import rank_for_variance
+  for d in (1, 2, 7):
+    sigma = jnp.zeros((d,))
+    r = int(rank_for_variance(sigma, 0.9))
+    assert 1 <= r <= d
+  # near-zero but nonzero stays exact: one singular value explains all
+  assert int(rank_for_variance(jnp.array([1e-20, 0.0]), 0.9)) <= 2
+
+
 def test_stage1_stage2_param_counts():
   k = jax.random.PRNGKey(2)
   tree = {"fc": dense(k, 64, 64, name="fc"),

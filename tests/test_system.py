@@ -8,6 +8,7 @@ model is smaller, (d) trace-norm diagnostics are well-formed.
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro import configs
 from repro.core.compress import FactorizationPlan
@@ -31,6 +32,7 @@ def _eval_cer(trainer, cfg, dc, step=999):
   return cer(decoded, batch["labels"], batch["label_lengths"])
 
 
+@pytest.mark.slow
 def test_speech_two_stage_end_to_end():
   cfg = configs.get_smoke("deepspeech2-wsj").with_(dtype=jnp.float32)
   dc = SpeechDataConfig(vocab_size=cfg.vocab_size, feat_dim=cfg.feat_dim,

@@ -73,11 +73,15 @@ def test_variational_penalty_upper_bounds_trace_norm(w):
   assert float(variational_trace_norm_penalty(u2, v2)) >= attained - 1e-5
 
 
-@hypothesis.given(st.integers(2, 16), st.floats(0.1, 0.99))
+@hypothesis.given(st.integers(2, 16), st.floats(0.1, 0.99),
+                  st.booleans())
 @hypothesis.settings(max_examples=30, deadline=None)
-def test_rank_for_variance_monotone(d, thresh):
-  sigma = jnp.sort(jnp.abs(jax.random.normal(
-      jax.random.PRNGKey(d), (d,))))[::-1]
+def test_rank_for_variance_monotone(d, thresh, degenerate):
+  # degenerate=True exercises the all-zero singular-value vector (a zero
+  # matrix): rank must clamp into [1, d], not report d + 1
+  sigma = (jnp.zeros((d,)) if degenerate else
+           jnp.sort(jnp.abs(jax.random.normal(
+               jax.random.PRNGKey(d), (d,))))[::-1])
   r = int(rank_for_variance(sigma, thresh))
   assert 1 <= r <= d
   r2 = int(rank_for_variance(sigma, min(thresh + 0.009, 0.999)))
