@@ -10,8 +10,12 @@ Layout:
       <leaf>.npy              one file per pytree leaf
 
 Keyed by pytree *path*, so restore only needs a structure template (from
-jax.eval_shape over the model init) — static FactoredLinear metadata never
-touches disk and can evolve without invalidating checkpoints.
+jax.eval_shape over the model init) — static FactoredLinear /
+QuantizedLinear metadata never touches disk and can evolve without
+invalidating checkpoints. Quantized (PTQ) trees are first-class: int8
+weight arrays and f32 scales are ordinary leaves ("fc/w_q",
+"fc/w_scale", ...) and round-trip bit-identically, so a PTQ'd checkpoint
+is a deployable serving artifact.
 """
 from __future__ import annotations
 
@@ -20,6 +24,7 @@ import os
 import re
 import shutil
 import threading
+import warnings
 from typing import Any, Optional
 
 import jax
@@ -143,6 +148,12 @@ class CheckpointManager:
     shardings: optional matching tree of NamedSharding — the elastic
     reshard path (checkpoint saved on any topology lands on this one).
     Returns (tree, manifest_extra).
+
+    Restore is template-driven; a checkpoint leaf with no template path
+    raises a UserWarning instead of disappearing silently — e.g. a
+    calibration-quantized tree (act_scale leaves on disk) restored with
+    an uncalibrated template would otherwise quietly fall back to
+    dynamic activation quantization and change serving numerics.
     """
     if step is None:
       step = self.latest_step()
@@ -158,8 +169,10 @@ class CheckpointManager:
           shardings, is_leaf=lambda s: isinstance(s, jax.sharding.Sharding)
       )[0]
     leaves = []
+    consumed = set()
     for i, (p, t) in enumerate(flat):
       pstr = _path_str(p)
+      consumed.add(pstr)
       ent = manifest["leaves"].get(pstr)
       if ent is None:
         raise KeyError(f"checkpoint {d} missing leaf {pstr}")
@@ -172,4 +185,10 @@ class CheckpointManager:
         leaves.append(jax.device_put(arr, shard_flat[i]))
       else:
         leaves.append(jax.numpy.asarray(arr))
+    unused = sorted(set(manifest["leaves"]) - consumed)
+    if unused:
+      warnings.warn(
+          f"checkpoint {d} has {len(unused)} leaves the template does not "
+          f"reference (first few: {unused[:4]}); they were NOT restored",
+          stacklevel=2)
     return treedef.unflatten(leaves), manifest.get("extra", {})

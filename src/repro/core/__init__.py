@@ -7,8 +7,9 @@
   schedule   — two-stage training schedule + LR schedules
 """
 from repro.core.factored import (FactoredLinear, count_params, dense,
-                                 factored, iter_factored_leaves,
-                                 map_factored_leaves)
+                                 factored, is_gemm_leaf,
+                                 iter_factored_leaves, iter_gemm_leaves,
+                                 map_factored_leaves, register_gemm_leaf)
 from repro.core.tracenorm import (RegularizerConfig, nu_coefficient,
                                   rank_for_variance, regularization_loss,
                                   singular_values, trace_norm_metrics,
@@ -22,8 +23,9 @@ from repro.core.schedule import (TwoStageSchedule, cosine_schedule,
                                  linear_warmup_exp_decay)
 
 __all__ = [
-    "FactoredLinear", "count_params", "dense", "factored",
-    "iter_factored_leaves", "map_factored_leaves",
+    "FactoredLinear", "count_params", "dense", "factored", "is_gemm_leaf",
+    "iter_factored_leaves", "iter_gemm_leaves", "map_factored_leaves",
+    "register_gemm_leaf",
     "RegularizerConfig", "nu_coefficient", "rank_for_variance",
     "regularization_loss", "singular_values", "trace_norm_metrics",
     "variational_trace_norm_penalty",

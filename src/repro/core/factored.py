@@ -170,32 +170,61 @@ def factored(key: jax.Array, m: int, n: int, r: Optional[int] = None, *,
 # Tree traversal.
 # ----------------------------------------------------------------------------
 
+#: GEMM-leaf node types every tree traversal stops at. FactoredLinear is
+#: built in; sibling leaf representations living in the same name/group
+#: namespace (repro.quant's QuantizedLinear) register themselves on import
+#: so traversal, param counting, and reports treat them as whole GEMMs
+#: instead of descending into their arrays.
+GEMM_LEAF_TYPES: tuple = (FactoredLinear,)
+
+
+def register_gemm_leaf(cls) -> type:
+  """Register another GEMM-leaf node type (idempotent; returns `cls` so it
+  can be used as a class decorator)."""
+  global GEMM_LEAF_TYPES
+  if cls not in GEMM_LEAF_TYPES:
+    GEMM_LEAF_TYPES = GEMM_LEAF_TYPES + (cls,)
+  return cls
+
+
+def is_gemm_leaf(x: Any) -> bool:
+  return isinstance(x, GEMM_LEAF_TYPES)
+
+
 def iter_factored_leaves(tree: Any) -> Iterator[FactoredLinear]:
   """Yield every FactoredLinear node in a pytree (depth-first).
 
   FactoredLinear registers as a pytree *node*, so plain tree_flatten would
   descend into it; we traverse with `is_leaf` to stop at the node level.
+  Other GEMM-leaf types (e.g. QuantizedLinear) are passed over whole, not
+  descended into.
   """
-  leaves = jax.tree.leaves(
-      tree, is_leaf=lambda x: isinstance(x, FactoredLinear))
+  leaves = jax.tree.leaves(tree, is_leaf=is_gemm_leaf)
   for leaf in leaves:
     if isinstance(leaf, FactoredLinear):
       yield leaf
 
 
 def map_factored_leaves(fn, tree: Any) -> Any:
-  """tree_map over FactoredLinear nodes only (other leaves untouched)."""
+  """tree_map over FactoredLinear nodes only (other leaves — including
+  other registered GEMM-leaf nodes — untouched)."""
   return jax.tree.map(
       lambda x: fn(x) if isinstance(x, FactoredLinear) else x,
-      tree, is_leaf=lambda x: isinstance(x, FactoredLinear))
+      tree, is_leaf=is_gemm_leaf)
+
+
+def iter_gemm_leaves(tree: Any) -> Iterator[Any]:
+  """Yield every GEMM-leaf node of any registered type (depth-first)."""
+  for leaf in jax.tree.leaves(tree, is_leaf=is_gemm_leaf):
+    if is_gemm_leaf(leaf):
+      yield leaf
 
 
 def count_params(tree: Any) -> int:
   """Total parameter count, counting factored nodes at their factored size."""
   total = 0
-  for leaf in jax.tree.leaves(tree,
-                              is_leaf=lambda x: isinstance(x, FactoredLinear)):
-    if isinstance(leaf, FactoredLinear):
+  for leaf in jax.tree.leaves(tree, is_leaf=is_gemm_leaf):
+    if is_gemm_leaf(leaf):
       total += leaf.num_params
     else:
       total += leaf.size

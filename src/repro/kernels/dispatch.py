@@ -9,10 +9,13 @@ consults it. The policy classifies each matmul by *regime*:
                   (the paper's §4 low-batch serving regime)
   lowrank_gemm  — factored W = UV leaf -> fused (x @ U) @ V, rank
                   intermediate in VMEM (paper §3)
-  int8_gemm     — w8a8 via `ops.quantized_matmul` (per-name override only;
-                  nothing in the model zoo is quantized implicitly, and
-                  the weight is re-quantized per call until a quantized
-                  leaf representation lands — see quantized_matmul)
+  int8_gemm     — w8a8. A pre-quantized leaf (repro.quant's
+                  QuantizedLinear) classifies here by type: the kernel
+                  consumes its stored int8 weights + per-column scales
+                  directly, zero weight quantize ops in the traced step.
+                  A per-name override on a float leaf still works (via
+                  `ops.quantized_matmul`, which re-quantizes per call —
+                  a numerics/code-path regime, not a perf one)
   gru_cell      — recurrent step fusion (paper eq. 10), routed by
                   `maybe_gru_cell` from layers/gru
   jnp           — everything else / degenerate shapes: the exact
@@ -152,6 +155,33 @@ def _record(name: Optional[str], regime: str) -> None:
       log.append((name or "<unnamed>", regime))
 
 
+_OBSERVERS: list = []
+
+
+@contextlib.contextmanager
+def observe_gemm_inputs():
+  """Capture {logical name: max |x| seen} for every GEMM routed through
+  `gemm()` inside the context — the activation-range tap
+  `repro.quant.calibrate_activation_ranges` builds on. Eager-only:
+  traced activations (inside jit / lax.scan) are skipped, since their
+  values don't exist at trace time."""
+  log: dict = {}
+  _OBSERVERS.append(log)
+  try:
+    yield log
+  finally:
+    _OBSERVERS.remove(log)
+
+
+def _observe(name: Optional[str], x: jax.Array) -> None:
+  if not _OBSERVERS or isinstance(x, jax.core.Tracer):
+    return
+  amax = float(jax.numpy.max(jax.numpy.abs(x.astype(jax.numpy.float32))))
+  key = name or "<unnamed>"
+  for log in _OBSERVERS:
+    log[key] = max(log.get(key, 0.0), amax)
+
+
 # ---------------------------------------------------------------------------
 # Classification.
 # ---------------------------------------------------------------------------
@@ -160,17 +190,33 @@ def _flat_batch(x: jax.Array) -> int:
   return math.prod(x.shape[:-1]) if x.ndim > 1 else 1
 
 
+def _is_quantized(leaf) -> bool:
+  # lazy: repro.quant imports this module (observer + compress plan), so
+  # the leaf type can't be imported at dispatch's module level
+  from repro.quant.leaf import QuantizedLinear
+  return isinstance(leaf, QuantizedLinear)
+
+
 def classify(leaf, x: jax.Array, policy: Optional[KernelPolicy],
              name: Optional[str] = None) -> str:
   """Pick the regime for one GEMM. Pure shape/metadata logic (trace-time).
 
   Mirrors the degenerate-shape gates of kernels/ops so the returned regime
-  is the kernel that actually executes, never an optimistic label."""
+  is the kernel that actually executes, never an optimistic label. The
+  one nuance: a pre-quantized leaf is ALWAYS the int8_gemm regime — for
+  sub-LANE shapes the ops wrapper runs the int8 ref oracle, which is the
+  same w8a8 arithmetic, so the label stays truthful about the math."""
   if policy is None or policy.mode == "jnp_only":
     return "jnp"
-  factored = isinstance(leaf, FactoredLinear) and leaf.is_factored
   if name is None:
     name = getattr(leaf, "name", None)
+  if _is_quantized(leaf):
+    # quantized storage classifies by TYPE, not by shape or override:
+    # there is no float weight to run any other regime on. An explicit
+    # "jnp" override still works — the reference path for a quantized
+    # leaf is its own w8a8 oracle (leaf.apply), identical arithmetic.
+    return "jnp" if policy.override_for(name) == "jnp" else "int8_gemm"
+  factored = isinstance(leaf, FactoredLinear) and leaf.is_factored
   regime = policy.override_for(name)
   if regime == "gru_cell":
     # the gru_cell regime only exists at the recurrent-step call site
@@ -204,7 +250,7 @@ def classify(leaf, x: jax.Array, policy: Optional[KernelPolicy],
 # ---------------------------------------------------------------------------
 
 def _jnp_gemm(leaf, x: jax.Array) -> jax.Array:
-  if isinstance(leaf, FactoredLinear):
+  if isinstance(leaf, FactoredLinear) or _is_quantized(leaf):
     return leaf.apply(x)
   return matmul_ref(x, leaf)
 
@@ -218,6 +264,7 @@ def gemm(leaf, x: jax.Array, policy: Optional[KernelPolicy],
   path (same code object), so default numerics are unchanged."""
   regime = classify(leaf, x, policy, name)
   _record(name or getattr(leaf, "name", None), regime)
+  _observe(name or getattr(leaf, "name", None), x)
   if regime == "jnp":
     return _jnp_gemm(leaf, x)
   lead = x.shape[:-1]
@@ -228,8 +275,14 @@ def gemm(leaf, x: jax.Array, policy: Optional[KernelPolicy],
     w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
     y = ops.decode_matvec(x2, w, interpret=policy.interpret)
   elif regime == "int8_gemm":
-    w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
-    y = ops.quantized_matmul(x2, w, interpret=policy.interpret)
+    if _is_quantized(leaf):
+      # pre-quantized storage: stored int8 weights + scales consumed
+      # directly (the serving win); only activations quantize per call
+      from repro.quant.leaf import kernel_apply
+      y = kernel_apply(leaf, x2, interpret=policy.interpret)
+    else:
+      w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
+      y = ops.quantized_matmul(x2, w, interpret=policy.interpret)
   else:  # pragma: no cover — REGIMES is closed above
     raise ValueError(f"unroutable regime {regime!r}")
   return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)

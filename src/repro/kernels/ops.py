@@ -119,15 +119,13 @@ def quantized_matmul(x: jax.Array, w: jax.Array,
                      interpret: bool | None = None) -> jax.Array:
   """w8a8 entry point: quantize both operands then int8_gemm.
 
-  This is the regime `kernels.dispatch` routes "int8_gemm" overrides to.
-  Jitted so the quantize+gemm program is traced once per shape instead of
-  re-traced every call (the bench path used to pay that on every step).
-
-  KNOWN COST: the weight is re-quantized per call (O(mn) scan) because
-  params reach the jitted step as traced operands — amortizing it needs a
-  quantized FactoredLinear representation so serving engines can quantize
-  once at load. Until then the override is a numerics/code-path regime,
-  not a TPU win."""
+  This is the regime `kernels.dispatch` routes "int8_gemm" overrides on
+  FLOAT leaves to. Jitted so the quantize+gemm program is traced once per
+  shape instead of re-traced every call. The weight is re-quantized per
+  call (O(mn) scan) — a numerics/code-path regime, not a perf one. The
+  perf path is `repro.quant`: PTQ'd QuantizedLinear leaves classify into
+  int8_gemm by type and consume their stored scales directly with zero
+  weight quantize ops (see quant.kernel_apply)."""
   x_q, x_s = ref.quantize_rowwise(x)
   w_q, w_s = ref.quantize_colwise(w)
   return int8_gemm(x_q, w_q, x_s, w_s, interpret=interpret).astype(x.dtype)

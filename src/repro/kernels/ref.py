@@ -82,3 +82,17 @@ def quantize_colwise(w: jax.Array) -> tuple[jax.Array, jax.Array]:
   q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
                -127, 127).astype(jnp.int8)
   return q, scale
+
+
+def quantize_static(x: jax.Array, scale: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+  """Symmetric int8 quantization of x (..., m) with a fixed scalar scale
+  (a calibrated activation range): returns (q, per-row scales).
+
+  Unlike the dynamic row-wise path, values past the calibrated range
+  saturate at +-127 — the standard static-activation-quantization
+  trade (one less reduction per step, bounded clipping error)."""
+  scale = jnp.maximum(scale.astype(jnp.float32), 1e-8 / 127.0)
+  q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale),
+               -127, 127).astype(jnp.int8)
+  return q, jnp.broadcast_to(scale, x.shape[:-1])

@@ -44,12 +44,24 @@ def main() -> None:
                   help="execution policy: 'pallas' routes the decode "
                        "regime through the shape-specialized kernels "
                        "(kernels.dispatch), 'jnp' is the reference path")
+  ap.add_argument("--quantize", action="store_true",
+                  help="one-shot PTQ (repro.quant) before serving: every "
+                       "GEMM leaf becomes int8 + per-column scales and "
+                       "decodes through the int8_gemm regime")
   args = ap.parse_args()
 
   cfg = (configs.get_config(args.arch) if args.full
          else configs.get_smoke(args.arch))
   api = get_model(cfg)
   params = api.init(jax.random.PRNGKey(0), cfg)
+  if args.quantize:
+    from repro.core.factored import iter_gemm_leaves
+    from repro.quant import QuantizedLinear, quantize_params
+    params = quantize_params(params)
+    n_int8 = sum(l.num_params for l in iter_gemm_leaves(params)
+                 if isinstance(l, QuantizedLinear))
+    print(f"PTQ'd {n_int8} GEMM params to int8 "
+          f"(serving from quantized storage)")
 
   if cfg.family == "deepspeech":
     server = StreamingSpeechServer(cfg, params, batch_size=args.batch,

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.factored import FactoredLinear, matmul_ref
+from repro.quant.leaf import QuantizedLinear
 
 # The sharding-constraint contract every model function threads through its
 # layers: cs(x, logical_name) -> x. Hosted here (the leaf module all layer
@@ -27,23 +28,26 @@ def identity_constraint(x, name: str):
   return x
 
 
-def gemm(leaf: FactoredLinear | jax.Array, x: jax.Array,
-         policy=None) -> jax.Array:
+def gemm(leaf, x: jax.Array, policy=None) -> jax.Array:
   """y[..., n] = x[..., m] @ W(m, n); factored path = (x @ U) @ V.
 
-  FactoredLinear leaves delegate to `leaf.apply(x)` — the factored math
-  AND the accumulation-dtype policy live in exactly one place
+  `leaf` is a FactoredLinear, a quant.QuantizedLinear, or a raw array.
+  Leaf nodes delegate to `leaf.apply(x)` — the factored math AND the
+  accumulation-dtype policy live in exactly one place
   (core.factored.acc_dtype); raw arrays follow the same policy here.
+  QuantizedLinear leaves apply their w8a8 oracle (quant.leaf.ref_apply),
+  so a PTQ'd tree serves correctly even with no policy at all.
 
   `policy` is the kernel-side sibling of `cs`: a
   `kernels.dispatch.KernelPolicy` that classifies this GEMM by regime
-  (decode batch -> decode_matvec, factored leaf -> lowrank_gemm, w8a8
-  override -> int8_gemm) and lowers it through the Pallas kernels. None —
-  the default everywhere — is the exact historical jnp path."""
+  (decode batch -> decode_matvec, factored leaf -> lowrank_gemm,
+  quantized leaf / w8a8 override -> int8_gemm) and lowers it through the
+  Pallas kernels. None — the default everywhere — is the exact
+  historical jnp path."""
   if policy is not None:
     from repro.kernels import dispatch
     return dispatch.gemm(leaf, x, policy)
-  if isinstance(leaf, FactoredLinear):
+  if isinstance(leaf, (FactoredLinear, QuantizedLinear)):
     return leaf.apply(x)
   return matmul_ref(x, leaf)
 

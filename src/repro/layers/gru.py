@@ -65,7 +65,8 @@ def gru_forward(p: dict, x: jax.Array, cs: Constraint = _id_cs,
                 policy=None) -> jax.Array:
   """Forward-only GRU over a sequence. x: (b, t, in) -> (b, t, hidden)."""
   b, t, _ = x.shape
-  hidden = p["rec"].in_dim if isinstance(p["rec"], FactoredLinear) \
+  # FactoredLinear and QuantizedLinear both expose in_dim; raw arrays don't
+  hidden = p["rec"].in_dim if hasattr(p["rec"], "in_dim") \
       else p["rec"].shape[0]
   # batch the non-recurrent GEMM across time (paper §4)
   xw = gemm(p["nonrec"], x, policy)

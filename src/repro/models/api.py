@@ -79,7 +79,8 @@ class ModelApi:
   `decode_step` also thread a `policy` (a
   `repro.kernels.dispatch.KernelPolicy`) to every GEMM call site, which
   classifies each matmul by regime (decode batch -> decode_matvec,
-  factored leaf -> lowrank_gemm, recurrent step -> gru_cell, per-name
+  factored leaf -> lowrank_gemm, recurrent step -> gru_cell, PTQ'd
+  quantized leaf -> int8_gemm on its stored scales, per-name
   overrides) and lowers it through the Pallas kernels. The single
   factory for a serving policy is `repro.kernels.dispatch.decode_policy`;
   the default (None) is the plain jnp path, so training and eval are

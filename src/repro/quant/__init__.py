@@ -1,0 +1,21 @@
+"""repro.quant — quantized weight leaves end-to-end (paper §4).
+
+  leaf — QuantizedLinear: int8 w/u/v + per-column scales, same logical
+         name/group namespace as FactoredLinear; w8a8 reference apply
+  ptq  — quantize_params: one-shot post-training quantization over a
+         params pytree, plan-scoped, with optional activation-range
+         calibration over a data iterator
+
+A PTQ'd tree is a first-class serving artifact: `kernels.dispatch`
+classifies its leaves into the int8_gemm regime consuming the stored
+scales directly (no per-call weight requantization), both serving
+engines accept it unchanged, `launch.serve --quantize` builds one, and
+`checkpoint.CheckpointManager` round-trips it bit-identically.
+"""
+from repro.quant.leaf import QuantizedLinear, kernel_apply, ref_apply
+from repro.quant.ptq import (DEFAULT_PLAN, calibrate_activation_ranges,
+                             is_quantized, quantize_leaf, quantize_params)
+
+__all__ = ["QuantizedLinear", "kernel_apply", "ref_apply", "DEFAULT_PLAN",
+           "calibrate_activation_ranges", "is_quantized", "quantize_leaf",
+           "quantize_params"]

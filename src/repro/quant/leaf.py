@@ -1,0 +1,153 @@
+"""QuantizedLinear — the genuinely-quantized GEMM leaf (paper §4).
+
+The serving-side sibling of `FactoredLinear`: the same logical
+name/group namespace (so `FactorizationPlan` globs, sharding rules, and
+`KernelPolicy` per-name overrides keep matching), but the weight storage
+is symmetric per-column int8 plus f32 scales — the exact operand format
+`kernels/int8_gemm` consumes. A quantized leaf is produced once by
+`repro.quant.quantize_params` (PTQ); from then on every decode step
+reads int8 weights directly, with NO per-call weight requantization
+(retiring the KNOWN COST note that used to live on
+`kernels.ops.quantized_matmul`).
+
+Shapes (2D only — quantized leaves are a serving artifact, never stacked
+under a layer scan):
+  unfactored: w_q (m, n) s8, w_scale (n,) f32
+  factored:   u_q (m, r) s8, u_scale (r,) f32;
+              v_q (r, n) s8, v_scale (n,) f32
+  act_scale:  optional () f32 — a calibrated static activation range;
+              None means dynamic per-row activation quantization.
+
+Arithmetic: w8a8. Activations are quantized per row (dynamically, or
+with the calibrated static scale), the int8 GEMM accumulates in int32,
+and the per-row x per-column dequant happens on the f32 output —
+identical math in `apply()` (the jnp reference path) and in the Pallas
+`int8_gemm` kernel the dispatcher routes to, which is what makes the
+pallas/jnp serving parity hold token-for-token.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.factored import register_gemm_leaf
+from repro.kernels import ref
+
+
+def _act_quantize(x: jax.Array, act_scale: Optional[jax.Array]
+                  ) -> tuple[jax.Array, jax.Array]:
+  """Quantize an activation (..., m): calibrated static scale if present,
+  dynamic symmetric per-row otherwise. Returns (q, per-row scales)."""
+  if act_scale is None:
+    return ref.quantize_rowwise(x)
+  return ref.quantize_static(x, act_scale)
+
+
+@register_gemm_leaf
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QuantizedLinear:
+  """An int8-quantized GEMM weight, unfactored (w_q) or factored
+  (u_q @ v_q), with per-column scales stored alongside."""
+  w_q: Optional[jax.Array]
+  w_scale: Optional[jax.Array]
+  u_q: Optional[jax.Array]
+  u_scale: Optional[jax.Array]
+  v_q: Optional[jax.Array]
+  v_scale: Optional[jax.Array]
+  act_scale: Optional[jax.Array] = None
+  name: str = dataclasses.field(metadata=dict(static=True), default="gemm")
+  group: str = dataclasses.field(metadata=dict(static=True),
+                                 default="nonrec")
+  #: dtype string of the float weight this leaf was quantized from;
+  #: `product()` dequantizes back into it
+  orig_dtype: str = dataclasses.field(metadata=dict(static=True),
+                                      default="float32")
+
+  # -- structure ------------------------------------------------------------
+  @property
+  def is_factored(self) -> bool:
+    return self.u_q is not None
+
+  @property
+  def in_dim(self) -> int:
+    return self.u_q.shape[-2] if self.is_factored else self.w_q.shape[-2]
+
+  @property
+  def out_dim(self) -> int:
+    return self.v_q.shape[-1] if self.is_factored else self.w_q.shape[-1]
+
+  @property
+  def rank(self) -> int:
+    if self.is_factored:
+      return self.u_q.shape[-1]
+    return min(self.w_q.shape[-2], self.w_q.shape[-1])
+
+  @property
+  def num_params(self) -> int:
+    if self.is_factored:
+      return self.u_q.size + self.v_q.size
+    return self.w_q.size
+
+  @property
+  def dtype(self):
+    return jnp.dtype(self.orig_dtype)
+
+  # -- math -----------------------------------------------------------------
+  def product(self) -> jax.Array:
+    """Materialize the dequantized W (the float-math escape hatch some
+    layers use for absorbed/stacked weights)."""
+    if self.is_factored:
+      u = self.u_q.astype(jnp.float32) * self.u_scale[None, :]
+      v = self.v_q.astype(jnp.float32) * self.v_scale[None, :]
+      return jnp.matmul(u, v).astype(self.dtype)
+    return (self.w_q.astype(jnp.float32) *
+            self.w_scale[None, :]).astype(self.dtype)
+
+  def apply(self, x: jax.Array, policy=None) -> jax.Array:
+    """y = x @ W in w8a8 arithmetic (the jnp reference for the int8_gemm
+    regime); `policy` routes through kernels.dispatch like FactoredLinear.
+    """
+    if policy is not None:
+      from repro.kernels import dispatch
+      return dispatch.gemm(self, x, policy)
+    lead = x.shape[:-1]
+    y = ref_apply(self, x.reshape(-1, x.shape[-1]))
+    return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+
+  def __call__(self, x: jax.Array) -> jax.Array:
+    return self.apply(x)
+
+
+def _apply(leaf: QuantizedLinear, x2: jax.Array, int8_gemm) -> jax.Array:
+  """ONE w8a8 flow for both execution paths, parameterized by the
+  int8 GEMM implementation — the pallas/jnp token-for-token parity
+  guarantee is structural, not maintained by hand. x2 (b, m) -> f32
+  (b, n). The factored path requantizes the rank intermediate per row
+  (w8a8 on both skinny GEMMs)."""
+  x_q, x_s = _act_quantize(x2, leaf.act_scale)
+  if leaf.is_factored:
+    t = int8_gemm(x_q, leaf.u_q, x_s, leaf.u_scale)
+    t_q, t_s = ref.quantize_rowwise(t)
+    return int8_gemm(t_q, leaf.v_q, t_s, leaf.v_scale)
+  return int8_gemm(x_q, leaf.w_q, x_s, leaf.w_scale)
+
+
+def ref_apply(leaf: QuantizedLinear, x2: jax.Array) -> jax.Array:
+  """The pure-jnp int8 oracle for one quantized GEMM."""
+  return _apply(leaf, x2, ref.int8_gemm)
+
+
+def kernel_apply(leaf: QuantizedLinear, x2: jax.Array,
+                 interpret: Optional[bool] = None) -> jax.Array:
+  """The Pallas path for one quantized GEMM (what `kernels.dispatch`
+  routes the int8_gemm regime to for pre-quantized leaves): activations
+  quantize per call (cheap, O(bm)), stored weight scales are consumed
+  directly — zero weight quantize ops in the traced step."""
+  from repro.kernels import ops
+  return _apply(leaf, x2,
+                functools.partial(ops.int8_gemm, interpret=interpret))

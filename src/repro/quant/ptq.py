@@ -1,0 +1,112 @@
+"""Post-training quantization: one-shot float tree -> quantized tree.
+
+`quantize_params` walks a params pytree, replaces every `FactoredLinear`
+the plan matches with a `QuantizedLinear` (symmetric per-column int8,
+the `kernels/int8_gemm` operand format), and leaves everything else —
+conv stacks, norms, embedding tables, biases — untouched. The plan is a
+`core.compress.FactorizationPlan`, so quantization scoping composes with
+the compression pipeline in the same logical-name glob namespace:
+stage-2-truncate with one plan, then PTQ with another (or the same one).
+
+Optional activation-range calibration: run the float model over a few
+batches inside `calibrate_activation_ranges` and pass the resulting
+{name: amax} dict as `calib`. Calibrated leaves quantize activations
+with a static scale (amax / 127) instead of the dynamic per-row max;
+leaves without a calibration entry (e.g. recurrent GEMMs hidden inside a
+`lax.scan`, whose activations are tracers) keep dynamic quantization.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import FactorizationPlan
+from repro.core.factored import FactoredLinear, map_factored_leaves
+from repro.kernels import ref
+from repro.quant.leaf import QuantizedLinear
+
+#: default PTQ scope: every GEMM leaf, regardless of size (quantizing a
+#: tiny GEMM is harmless — unlike factoring one, which is why
+#: FactorizationPlan's own default min_dim is 128)
+DEFAULT_PLAN = FactorizationPlan(min_dim=1)
+
+
+def quantize_leaf(leaf: FactoredLinear,
+                  act_amax: Optional[float] = None) -> QuantizedLinear:
+  """Symmetric per-column int8 quantization of one GEMM leaf."""
+  act_scale = None
+  if act_amax is not None:
+    act_scale = jnp.float32(max(float(act_amax), 1e-8) / 127.0)
+  kw = dict(act_scale=act_scale, name=leaf.name, group=leaf.group,
+            orig_dtype=str(jnp.dtype(leaf.dtype)))
+  if leaf.is_factored:
+    if leaf.u.ndim != 2:
+      raise ValueError(
+          f"cannot quantize stacked leaf {leaf.name!r}; slice first")
+    u_q, u_s = ref.quantize_colwise(leaf.u)
+    v_q, v_s = ref.quantize_colwise(leaf.v)
+    return QuantizedLinear(w_q=None, w_scale=None, u_q=u_q, u_scale=u_s,
+                           v_q=v_q, v_scale=v_s, **kw)
+  if leaf.w.ndim != 2:
+    raise ValueError(
+        f"cannot quantize stacked leaf {leaf.name!r}; slice first")
+  w_q, w_s = ref.quantize_colwise(leaf.w)
+  return QuantizedLinear(w_q=w_q, w_scale=w_s, u_q=None, u_scale=None,
+                         v_q=None, v_scale=None, **kw)
+
+
+def quantize_params(params: Any, plan: Optional[FactorizationPlan] = None,
+                    *, calib: Optional[Mapping[str, float]] = None) -> Any:
+  """One-shot PTQ over a params pytree.
+
+  plan  — which GEMMs to quantize, matched on logical names exactly like
+          compression plans (default: all of them). Stacked (3D+) leaves
+          are skipped — they only occur under training-time layer scans.
+  calib — optional {logical name: activation amax} from
+          `calibrate_activation_ranges`; matched leaves get a static
+          activation scale.
+  """
+  plan = DEFAULT_PLAN if plan is None else plan
+
+  def f(leaf: FactoredLinear):
+    arr = leaf.u if leaf.is_factored else leaf.w
+    if arr.ndim != 2 or not plan.matches(leaf):
+      return leaf
+    amax = calib.get(leaf.name) if calib else None
+    return quantize_leaf(leaf, act_amax=amax)
+
+  return map_factored_leaves(f, params)
+
+
+def is_quantized(tree: Any) -> bool:
+  """True if any GEMM leaf in the tree is a QuantizedLinear."""
+  found = False
+  def check(x):
+    nonlocal found
+    found = found or isinstance(x, QuantizedLinear)
+    return x
+  jax.tree.map(check, tree,
+               is_leaf=lambda x: isinstance(x, QuantizedLinear))
+  return found
+
+
+def calibrate_activation_ranges(apply_fn, batches: Iterable[Any]
+                                ) -> dict[str, float]:
+  """Record per-GEMM activation ranges by running the float model.
+
+  `apply_fn(batch)` must run the model forward *eagerly* (not under jit)
+  with a KernelPolicy threaded — `dispatch.JNP_ONLY` works and keeps the
+  numerics the plain jnp path — so every GEMM routes through
+  `kernels.dispatch.gemm`, whose input observer this taps. GEMMs whose
+  activations are tracers (inside a `lax.scan`/jit) are skipped; those
+  leaves simply keep dynamic activation quantization.
+
+  Returns {logical GEMM name: max |x| seen across all batches}.
+  """
+  from repro.kernels import dispatch
+  with dispatch.observe_gemm_inputs() as log:
+    for batch in batches:
+      apply_fn(batch)
+  return dict(log)

@@ -24,6 +24,12 @@ wrapping the scatter index and corrupting the cache.
 `cache_dtype` downcasts only the attention KV-cache leaves (see
 `models.api.cast_kv_cache`); SSM / recurrent carries stay full precision.
 
+Both engines accept PTQ'd params (repro.quant's QuantizedLinear leaves)
+unchanged: under the pallas policy the dispatcher routes those GEMMs to
+the int8_gemm kernel consuming the stored scales directly, and under
+jnp/no policy the leaf's own w8a8 oracle runs — the same arithmetic, so
+quantized serving is policy-invariant token-for-token.
+
 StreamingSpeechServer — the paper's embedded deployment mode: frame-
 synchronous DS2 inference. The conv frontend streams over mel chunks
 *with receptive-field context carried across chunk boundaries*, so the

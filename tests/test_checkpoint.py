@@ -52,6 +52,49 @@ def test_gc_keeps_latest(tmp_path):
   assert mgr.all_steps() == [3, 4]
 
 
+def test_quantized_tree_roundtrips_bit_identical(tmp_path):
+  """A PTQ'd tree is a first-class checkpoint artifact: int8 weights and
+  f32 scales restore with exact bytes and dtypes through an eval_shape
+  template (the acceptance criterion's storage half)."""
+  from repro.quant import QuantizedLinear, quantize_params
+  mgr = CheckpointManager(str(tmp_path))
+  k1, k2 = jax.random.split(jax.random.PRNGKey(3))
+  tree = quantize_params({
+      "fc": dense(k1, 32, 48, name="fc"),
+      "lr": factored(k2, 32, 48, 16, name="lr"),
+  })
+  assert isinstance(tree["fc"], QuantizedLinear)
+  mgr.save(11, tree, extra={"quantized": True})
+  restored, extra = mgr.restore(jax.eval_shape(lambda: tree))
+  assert extra["quantized"]
+  for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+    assert a.dtype == b.dtype
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+  assert restored["fc"].w_q.dtype == jnp.int8
+  # static metadata (name/group) comes from the template, not disk
+  assert restored["lr"].name == "lr" and restored["lr"].is_factored
+
+
+def test_unreferenced_checkpoint_leaves_warn(tmp_path):
+  """A calibration-quantized checkpoint restored with an uncalibrated
+  template must not drop the act_scale leaves silently — serving
+  numerics would change with no signal."""
+  from repro.quant import quantize_params
+  mgr = CheckpointManager(str(tmp_path))
+  params = {"fc": dense(jax.random.PRNGKey(4), 16, 24, name="fc")}
+  calibrated = quantize_params(params, calib={"fc": 3.0})
+  mgr.save(0, calibrated)
+  uncalibrated = jax.eval_shape(lambda: quantize_params(params))
+  with pytest.warns(UserWarning, match="act_scale"):
+    restored, _ = mgr.restore(uncalibrated)
+  assert restored["fc"].act_scale is None
+  # the matching template stays warning-free
+  import warnings as _w
+  with _w.catch_warnings():
+    _w.simplefilter("error")
+    mgr.restore(jax.eval_shape(lambda: calibrated))
+
+
 def test_shape_mismatch_rejected(tmp_path):
   mgr = CheckpointManager(str(tmp_path))
   mgr.save(0, {"x": jnp.zeros((4,))})

@@ -244,6 +244,39 @@ def test_speech_server_pallas_matches_jnp():
   assert got == want
 
 
+def test_int8_regime_prequantized_zero_weight_requant(monkeypatch):
+  """Pins the fix to the old dispatch.py TODO: with PTQ'd leaves the
+  int8 regime consumes stored scales directly — ZERO weight quantize ops
+  are traced into the decode step. (Activation row-quantization is
+  inherent to w8a8 and allowed; `ref.quantize_colwise` is the one
+  function that quantizes a weight.)"""
+  from repro.quant import quantize_params
+  from repro.serving import LMEngine
+  from repro.models.api import get_model
+
+  colwise_calls = []
+  orig_colwise = ref.quantize_colwise
+  monkeypatch.setattr(
+      ref, "quantize_colwise",
+      lambda w: colwise_calls.append(w.shape) or orig_colwise(w))
+
+  # control: a float-leaf int8 override DOES requantize the weight at
+  # trace time (ops.quantized_matmul); unique shape forces a fresh trace
+  ops.quantized_matmul.lower(rnd(20, (2, 136)), rnd(21, (136, 264), 0.05))
+  assert colwise_calls, "instrumentation failed to see the float path"
+
+  params = get_model(LM_CFG).init(jax.random.PRNGKey(0), LM_CFG)
+  qparams = quantize_params(params)     # the one-shot PTQ (outside trace)
+  colwise_calls.clear()
+  with dispatch.record_dispatch() as log:
+    eng = LMEngine(LM_CFG, qparams, batch_size=2, max_len=16,
+                   kernel_policy="pallas")
+    eng.generate(np.array([[1, 2], [3, 4]]), steps=2)
+  assert "int8_gemm" in {r for _, r in log}
+  assert colwise_calls == [], (
+      f"decode step re-quantized weights: {colwise_calls}")
+
+
 def test_deepspeech_decode_step_allclose():
   """Direct frame-step numerics: Pallas policy vs jnp, tight tolerance."""
   from repro.models import deepspeech

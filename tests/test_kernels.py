@@ -119,6 +119,75 @@ def test_lowrank_vs_dense_weight_bytes():
   assert factored_bytes < 0.3 * dense_bytes
 
 
+# ---------------------------------------------------------------------------
+# Parity grid: every Pallas kernel vs its ref oracle across one shared
+# shape x dtype grid (interpret mode), including non-multiple-of-block
+# edge shapes that exercise the pad/slice + block-halving paths.
+# ---------------------------------------------------------------------------
+
+# (b, m, n): aligned, rectangular, and deliberately awkward (odd dims,
+# dims that halve below the block table, sub-SUBLANE batches)
+PARITY_GRID = [
+    (1, 128, 128),       # minimal aligned
+    (4, 512, 1024),      # rectangular aligned
+    (3, 300, 700),       # odd everything -> padding
+    (7, 130, 258),       # barely past one lane
+    (16, 384, 136),      # boundary batch, narrow odd output
+]
+
+
+@pytest.mark.parametrize("b,m,n", PARITY_GRID)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_parity_grid_decode_matvec(b, m, n, dtype):
+  x = rnd(b + m, (b, m), dtype=dtype)
+  w = rnd(m + n, (m, n), 0.05, dtype)
+  got = ops.decode_matvec(x, w)
+  want = ref.decode_matvec(x, w)
+  np.testing.assert_allclose(np.asarray(got, np.float32),
+                             np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("b,m,n", PARITY_GRID)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_parity_grid_lowrank_gemm(b, m, n, dtype):
+  r = max(128, min(m, n) // 2)
+  x = rnd(b + m, (b, m), dtype=dtype)
+  u = rnd(m + r, (m, r), 0.05, dtype)
+  v = rnd(r + n, (r, n), 0.05, dtype)
+  got = ops.lowrank_gemm(x, u, v)
+  want = ref.lowrank_gemm(x, u, v)
+  np.testing.assert_allclose(np.asarray(got, np.float32),
+                             np.asarray(want, np.float32), **tol(dtype))
+
+
+@pytest.mark.parametrize("b,m,n", PARITY_GRID)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_parity_grid_int8_gemm(b, m, n, dtype):
+  """int8 operands carry no dtype, but the pre-quant input sweeps the
+  same dtype grid (bf16 weights are what PTQ actually quantizes)."""
+  x = rnd(b + m, (b, m), dtype=dtype)
+  w = rnd(m + n, (m, n), 0.05, dtype)
+  xq, xs = ref.quantize_rowwise(x)
+  wq, ws = ref.quantize_colwise(w)
+  got = ops.int8_gemm(xq, wq, xs, ws)
+  want = ref.int8_gemm(xq, wq, xs, ws)
+  np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                             atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,h", [(1, 128), (3, 256), (16, 512), (5, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_parity_grid_gru_cell(b, h, dtype):
+  xw = rnd(1 + h, (b, 3 * h), dtype=dtype)
+  hid = rnd(2 + h, (b, h), dtype=dtype)
+  u = rnd(3 + h, (h, 3 * h), 0.05, dtype)
+  bias = rnd(4 + h, (3 * h,), 0.1)
+  got = ops.gru_cell(xw, hid, u, bias)
+  want = ref.gru_cell(xw, hid, u, bias)
+  np.testing.assert_allclose(np.asarray(got, np.float32),
+                             np.asarray(want, np.float32), **tol(dtype))
+
+
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_quantization_error_bound(seed):
   """Symmetric per-channel int8: |w - deq(q(w))| <= scale/2 elementwise,

@@ -1,0 +1,237 @@
+"""repro.quant end-to-end: PTQ pass, QuantizedLinear math, dispatch
+routing, calibration, and the quantized-serving parity acceptance —
+LMEngine under the pallas policy with PTQ'd params must match the f32
+jnp_only engine token-for-token on greedy decode, and the two policies
+must agree on a PTQ'd tree exactly (same w8a8 arithmetic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compress import FactorizationPlan, to_stage1
+from repro.core.factored import (FactoredLinear, count_params, dense,
+                                 factored, is_gemm_leaf, iter_gemm_leaves)
+from repro.kernels import dispatch
+from repro.layers.common import ModelConfig, gemm
+from repro.models.api import get_model
+from repro.quant import (QuantizedLinear, calibrate_activation_ranges,
+                         is_quantized, quantize_leaf, quantize_params)
+from repro.serving import LMEngine
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rnd(seed, shape, scale=1.0):
+  return jax.random.normal(jax.random.PRNGKey(seed), shape,
+                           jnp.float32) * scale
+
+
+LM_CFG = ModelConfig(
+    name="quant-lm", family="transformer", num_layers=2, d_model=128,
+    num_heads=1, num_kv_heads=1, d_ff=256, vocab_size=128,
+    dtype=jnp.float32, remat="none")
+
+
+# ---------------------------------------------------------------------------
+# The leaf + PTQ pass.
+# ---------------------------------------------------------------------------
+
+
+def test_quantize_leaf_unfactored():
+  leaf = dense(KEY, 96, 160, name="fc", group="nonrec")
+  q = quantize_leaf(leaf)
+  assert q.name == "fc" and q.group == "nonrec" and not q.is_factored
+  assert q.w_q.dtype == jnp.int8 and q.w_scale.shape == (160,)
+  assert (q.in_dim, q.out_dim) == (96, 160)
+  assert q.num_params == leaf.num_params
+  # dequantized product inside half a per-column step of the original
+  err = jnp.abs(q.product() - leaf.w)
+  assert bool(jnp.all(err <= q.w_scale[None, :] * 0.5 + 1e-6))
+
+
+def test_quantize_leaf_factored():
+  leaf = factored(KEY, 128, 256, r=64, name="lr")
+  q = quantize_leaf(leaf)
+  assert q.is_factored and q.u_q.dtype == jnp.int8
+  assert q.u_scale.shape == (64,) and q.v_scale.shape == (256,)
+  assert q.rank == 64 and q.num_params == leaf.num_params
+  x = rnd(1, (4, 128))
+  rel = jnp.linalg.norm(q.apply(x) - leaf.apply(x)) / \
+      jnp.linalg.norm(leaf.apply(x))
+  assert float(rel) < 0.05
+
+
+def test_all_zero_weight_degenerate():
+  """Plain-test analog of the hypothesis degenerate-case property (runs
+  even without hypothesis installed)."""
+  leaf = FactoredLinear(w=jnp.zeros((32, 48)), u=None, v=None, name="z")
+  q = quantize_leaf(leaf)
+  assert bool(jnp.all(q.w_q == 0)) and bool(jnp.all(q.w_scale > 0))
+  y = q.apply(jnp.ones((2, 32), jnp.float32))
+  assert bool(jnp.all(y == 0.0)) and bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_quantize_params_plan_scoping():
+  params = {
+      "fc": dense(KEY, 128, 128, name="fc"),
+      "out": dense(KEY, 128, 64, name="out"),
+      "emb": dense(KEY, 64, 128, name="tok_embed"),
+  }
+  q = quantize_params(params, FactorizationPlan(
+      include=("*",), exclude=("*embed*",), min_dim=1))
+  assert isinstance(q["fc"], QuantizedLinear)
+  assert isinstance(q["out"], QuantizedLinear)
+  assert isinstance(q["emb"], FactoredLinear)      # excluded, untouched
+  assert is_quantized(q) and not is_quantized(params)
+  # name-keyed traversal still sees every GEMM leaf whole
+  names = {l.name for l in iter_gemm_leaves(q)}
+  assert names == {"fc", "out", "tok_embed"}
+  assert all(is_gemm_leaf(l) for l in iter_gemm_leaves(q))
+  assert count_params(q) == count_params(params)
+
+
+def test_quantize_params_skips_stacked_leaves():
+  stacked = FactoredLinear(w=rnd(3, (2, 64, 64)), u=None, v=None,
+                           name="layers/scan")
+  q = quantize_params({"s": stacked, "fc": dense(KEY, 64, 64, name="fc")})
+  assert isinstance(q["s"], FactoredLinear)        # 3D: left alone
+  assert isinstance(q["fc"], QuantizedLinear)
+
+
+def test_static_activation_scale_calibration():
+  params = {"fc": dense(KEY, 128, 128, name="fc")}
+  x = rnd(7, (4, 128), 2.0)
+  calib = calibrate_activation_ranges(
+      lambda b: gemm(params["fc"], b, dispatch.JNP_ONLY), [x])
+  assert calib.keys() == {"fc"}
+  assert abs(calib["fc"] - float(jnp.max(jnp.abs(x)))) < 1e-6
+  q = quantize_params(params, calib=calib)
+  assert q["fc"].act_scale is not None
+  # the static-scale path stays close to the dynamic one on in-range data
+  y_static = q["fc"].apply(x)
+  y_dynamic = quantize_params(params)["fc"].apply(x)
+  rel = jnp.linalg.norm(y_static - y_dynamic) / jnp.linalg.norm(y_dynamic)
+  assert float(rel) < 0.02
+  # out-of-range activations saturate instead of overflowing
+  y_sat = q["fc"].apply(100.0 * x)
+  assert bool(jnp.all(jnp.isfinite(y_sat)))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch routing.
+# ---------------------------------------------------------------------------
+
+
+def test_quantized_leaf_classifies_int8():
+  pol = dispatch.decode_policy(4)
+  q = quantize_leaf(dense(KEY, 128, 256, name="fc"))
+  x = rnd(2, (2, 128))
+  assert dispatch.classify(q, x, pol) == "int8_gemm"
+  # also above the decode batch bound and for sub-LANE shapes: quantized
+  # storage has no float weight, int8 is the only regime
+  assert dispatch.classify(q, rnd(3, (64, 128)), pol) == "int8_gemm"
+  tiny = quantize_leaf(dense(KEY, 32, 48, name="tiny"))
+  assert dispatch.classify(tiny, rnd(4, (2, 32)), pol) == "int8_gemm"
+  # jnp_only / no policy -> the leaf's own w8a8 oracle (same math)
+  assert dispatch.classify(q, x, dispatch.JNP_ONLY) == "jnp"
+  assert dispatch.classify(q, x, None) == "jnp"
+  # an explicit "jnp" override is honored (reference path)
+  jpol = dispatch.decode_policy(4, overrides=(("fc", "jnp"),))
+  assert dispatch.classify(q, x, jpol) == "jnp"
+
+
+def test_quantized_gemm_policy_invariant():
+  """pallas and jnp paths run the same w8a8 arithmetic bit-for-bit (the
+  interpret-mode kernel IS the oracle's blocking)."""
+  pol = dispatch.decode_policy(4)
+  for leaf in (quantize_leaf(dense(KEY, 128, 256, name="fc")),
+               quantize_leaf(factored(KEY, 128, 256, r=128, name="lr"))):
+    x = rnd(5, (3, 128))
+    np.testing.assert_array_equal(np.asarray(gemm(leaf, x, pol)),
+                                  np.asarray(gemm(leaf, x)))
+  # 3D activations flatten their leading dims through the kernel
+  q = quantize_leaf(dense(KEY, 128, 256, name="fc"))
+  x3 = rnd(6, (2, 2, 128))
+  np.testing.assert_array_equal(np.asarray(gemm(q, x3, pol)),
+                                np.asarray(gemm(q, x3)))
+
+
+# ---------------------------------------------------------------------------
+# Serving (the acceptance criterion).
+# ---------------------------------------------------------------------------
+
+
+def _greedy_tokens(cfg, params, prompts, *, steps, **kw):
+  eng = LMEngine(cfg, params, batch_size=prompts.shape[0], max_len=32,
+                 **kw)
+  return eng.generate(prompts, steps=steps).tokens
+
+
+def test_quantized_serving_parity():
+  """LMEngine under the pallas policy with PTQ'd params matches the f32
+  jnp_only engine token-for-token on greedy decode, and the two policies
+  agree on the PTQ'd tree exactly."""
+  params = get_model(LM_CFG).init(jax.random.PRNGKey(0), LM_CFG)
+  qparams = quantize_params(params)
+  prompts = np.array([[1, 2], [3, 4]])
+  want = _greedy_tokens(LM_CFG, params, prompts, steps=8)
+  with dispatch.record_dispatch() as log:
+    got_pallas = _greedy_tokens(LM_CFG, qparams, prompts, steps=8,
+                                kernel_policy="pallas")
+  assert "int8_gemm" in {r for _, r in log}
+  got_jnp = _greedy_tokens(LM_CFG, qparams, prompts, steps=8)
+  np.testing.assert_array_equal(got_pallas, got_jnp)   # policy-invariant
+  np.testing.assert_array_equal(got_pallas, want)      # f32 parity
+
+
+def test_quantized_logits_close_to_f32():
+  """The quantization error itself stays at the bench tolerance on the
+  engine's comparison surface (prefill logits)."""
+  params = get_model(LM_CFG).init(jax.random.PRNGKey(0), LM_CFG)
+  qparams = quantize_params(params)
+  prompts = np.array([[5, 6, 7], [8, 9, 10]])
+  ref_eng = LMEngine(LM_CFG, params, batch_size=2, max_len=16)
+  q_eng = LMEngine(LM_CFG, qparams, batch_size=2, max_len=16,
+                   kernel_policy="pallas")
+  want = np.asarray(ref_eng.prefill(prompts), np.float32)
+  got = np.asarray(q_eng.prefill(prompts), np.float32)
+  rel = np.linalg.norm(got - want) / np.linalg.norm(want)
+  assert rel < 0.05
+
+
+def test_factored_quantized_serving():
+  """Stage-2-style factored params survive PTQ and serve policy-
+  invariantly (u/v quantized separately, rank intermediate requantized)."""
+  params = get_model(LM_CFG).init(jax.random.PRNGKey(0), LM_CFG)
+  fparams = to_stage1(params, FactorizationPlan(include=("*",),
+                                                min_dim=128))
+  qparams = quantize_params(fparams)
+  assert any(l.is_factored for l in iter_gemm_leaves(qparams)
+             if isinstance(l, QuantizedLinear))
+  prompts = np.array([[11, 12], [13, 14]])
+  got = _greedy_tokens(LM_CFG, qparams, prompts, steps=4,
+                       kernel_policy="pallas")
+  want = _greedy_tokens(LM_CFG, qparams, prompts, steps=4)
+  np.testing.assert_array_equal(got, want)
+
+
+def test_speech_server_accepts_quantized_params():
+  from repro.data.speech import SpeechDataConfig, batch_at
+  from repro.serving import StreamingSpeechServer
+  cfg = ModelConfig(
+      name="quant-ds2", family="deepspeech", num_layers=2, d_model=128,
+      num_heads=1, num_kv_heads=1, d_ff=128, vocab_size=32, feat_dim=80,
+      gru_dims=(128, 128), fc_dim=128, conv_channels=8, time_stride=2,
+      dtype=jnp.float32, remat="none")
+  params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+  qparams = quantize_params(params)
+  dc = SpeechDataConfig(vocab_size=cfg.vocab_size, feat_dim=cfg.feat_dim,
+                        global_batch=2)
+  chunk = batch_at(dc, 0)["feats"][:, :24]
+  srv_jnp = StreamingSpeechServer(cfg, qparams, batch_size=2)
+  want = srv_jnp.process_chunk(chunk)
+  with dispatch.record_dispatch() as log:
+    srv_pal = StreamingSpeechServer(cfg, qparams, batch_size=2,
+                                    kernel_policy="pallas")
+    got = srv_pal.process_chunk(chunk)
+  assert "int8_gemm" in {r for _, r in log}
+  assert got == want

@@ -1,0 +1,102 @@
+"""Property tests for repro.quant's quantize/dequantize (paper §4).
+
+Hypothesis sweeps arbitrary weight matrices through the symmetric
+per-column int8 quantizer and asserts the §4 error model: round-trip
+error bounded by half a quantization step of the per-column max, strictly
+positive scales (the all-zero column hits the 1e-8 amax floor, never a
+zero divide), and the sign / column-permutation equivariances that make
+symmetric quantization composable with the factored W = UV form.
+"""
+import pytest
+
+# hypothesis is not part of the runtime image; CI installs it, local runs
+# skip (plain-test analogs of the critical properties live in test_quant.py)
+hypothesis = pytest.importorskip("hypothesis")
+hnp = pytest.importorskip("hypothesis.extra.numpy")
+st = pytest.importorskip("hypothesis.strategies")
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.factored import FactoredLinear
+from repro.kernels import ref
+from repro.quant import quantize_leaf
+
+matrices = hnp.arrays(
+    np.float64, hnp.array_shapes(min_dims=2, max_dims=2, min_side=1,
+                                 max_side=24),
+    elements=st.floats(-10, 10, allow_nan=False))
+
+
+def _roundtrip(w):
+  q, s = ref.quantize_colwise(jnp.asarray(w, jnp.float32))
+  return np.asarray(q), np.asarray(s)
+
+
+@hypothesis.given(matrices)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_roundtrip_error_bounded_by_column_step(w):
+  """|w - s*q| <= s/2 elementwise — half a quantization step of the
+  per-column max (the §4 error model)."""
+  q, s = _roundtrip(w)
+  deq = q.astype(np.float32) * s[None, :]
+  assert np.all(np.abs(w.astype(np.float32) - deq) <= s[None, :] / 2 + 1e-6)
+
+
+@hypothesis.given(matrices)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_scales_positive_and_match_amax(w):
+  """Scales are strictly positive; nonzero columns get exactly amax/127."""
+  q, s = _roundtrip(w)
+  assert np.all(s > 0)
+  amax = np.max(np.abs(w.astype(np.float32)), axis=0)
+  nz = amax > 1e-6
+  np.testing.assert_allclose(s[nz], amax[nz] / 127.0, rtol=1e-5)
+  assert np.all(np.abs(q) <= 127)
+
+
+@hypothesis.given(matrices)
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_sign_equivariance(w):
+  """quantize(-w) == (-q, s): symmetric quantization has no zero point
+  (jnp.round is half-to-even, which is odd-symmetric)."""
+  q, s = _roundtrip(w)
+  qn, sn = _roundtrip(-w)
+  np.testing.assert_array_equal(qn, -q)
+  np.testing.assert_allclose(sn, s, rtol=1e-7)
+
+
+@hypothesis.given(matrices, st.randoms(use_true_random=False))
+@hypothesis.settings(max_examples=50, deadline=None)
+def test_column_permutation_equivariance(w, rnd):
+  """Per-column quantization commutes with column permutation."""
+  perm = list(range(w.shape[1]))
+  rnd.shuffle(perm)
+  q, s = _roundtrip(w)
+  qp, sp = _roundtrip(w[:, perm])
+  np.testing.assert_array_equal(qp, q[:, perm])
+  np.testing.assert_allclose(sp, s[perm], rtol=1e-7)
+
+
+@hypothesis.given(st.integers(1, 16), st.integers(1, 16))
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_all_zero_column_degenerate(m, n):
+  """An all-zero weight quantizes to q == 0 with the positive floor
+  scale and dequantizes to exactly zero — no NaN/inf anywhere."""
+  q, s = _roundtrip(np.zeros((m, n)))
+  assert np.all(q == 0) and np.all(s > 0) and np.all(np.isfinite(s))
+  leaf = quantize_leaf(FactoredLinear(
+      w=jnp.zeros((m, n)), u=None, v=None, name="z"))
+  y = leaf.apply(jnp.ones((2, m), jnp.float32))
+  assert np.all(np.asarray(y) == 0.0)
+
+
+@hypothesis.given(matrices)
+@hypothesis.settings(max_examples=25, deadline=None)
+def test_quantized_leaf_product_roundtrip(w):
+  """quantize_leaf's dequantized product stays inside the elementwise
+  bound — the leaf-level version of the round-trip property."""
+  wf = jnp.asarray(w, jnp.float32)
+  leaf = quantize_leaf(FactoredLinear(w=wf, u=None, v=None, name="w"))
+  _, s = _roundtrip(w)
+  err = np.abs(np.asarray(leaf.product()) - np.asarray(wf))
+  assert np.all(err <= s[None, :] / 2 + 1e-6)
