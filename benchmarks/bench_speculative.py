@@ -1,0 +1,127 @@
+"""Self-speculative decoding vs vanilla greedy on a mixed-length workload.
+
+The paper's low-rank stage-2 model (§3.2) as a free draft: per spec
+iteration the draft proposes k tokens, the target verifies all of them in
+one fused `ModelApi.decode_window`, and the engine commits the longest
+agreeing prefix + one bonus token — so the target's sequential-step count
+drops by the accept rate while the OUTPUT stays token-for-token vanilla
+greedy (this bench re-checks that parity on every row).
+
+Reports, per (k, draft rank): wall-clock tok/s, measured accept rate, and
+parity against the vanilla baseline; k in {1, 2, 4} over a near-full rank
+(accept -> 1) and a pathologically low one (accept -> 0, the overhead
+floor). Timings are second-pass (first pass warms the jit caches). CPU
+wall-clock is a trajectory signal, not a TPU number: the smoke model is
+dispatch-bound, and the draft's factored GEMMs only pay off once weights
+dominate step time.
+
+Metric honesty: `decode_steps` counts ENGINE ITERATIONS (host round
+trips + accept/rewind overhead amortized per window), which acceptance
+divides by ~(accept*k + 1). It is NOT yet target weight traffic — the
+verify window is a scan of single-token steps, so it still reads the
+weights once per window position; collapsing the window into one batched
+(b x (k+1))-row forward (single weight pass, where the real §4
+bandwidth win appears) is a ROADMAP open item.
+
+`--json` writes BENCH_speculative.json — CI runs this as a smoke step and
+uploads it alongside BENCH_serving.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.models.api import get_model
+from repro.serving import LMEngine, make_draft_params
+
+# the same mixed-length workload as the continuous-batching bench, so
+# BENCH_speculative.json and BENCH_serving.json stay comparable (run as
+# `python -m benchmarks.bench_speculative`, like bench_quantization)
+from benchmarks.bench_serving import make_workload
+
+
+def run_engine(eng: LMEngine, prompts, budgets) -> dict:
+  """Warm pass (jit), then a timed pass after reset()."""
+  for _ in range(2):
+    eng.reset()
+    t0 = time.perf_counter()
+    for p, n in zip(prompts, budgets):
+      eng.submit(p, max_new_tokens=n)
+    finished = eng.run()
+    dt = time.perf_counter() - t0
+  tokens = {f.uid: f.tokens for f in finished}
+  n_tok = sum(len(t) for t in tokens.values())
+  return {"wall_s": dt, "tokens": n_tok, "tok_s": n_tok / dt,
+          "accept_rate": eng.accept_rate, "decode_steps": eng.decode_steps,
+          # engine iterations per emitted token (see module docstring:
+          # iteration != weight pass until the window step is batched)
+          "iters_per_token": eng.decode_steps / max(n_tok, 1),
+          "by_uid": tokens}
+
+
+def run(arch: str, *, batch: int, num_requests: int, max_len: int,
+        kernel_policy, ks=(1, 2, 4), ranks=(128, 8)) -> dict:
+  cfg = configs.get_smoke(arch).with_(vocab_size=128, dtype=jnp.float32)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  prompts, budgets = make_workload(num_requests, cfg.vocab_size)
+  kw = dict(batch_size=batch, max_len=max_len, kernel_policy=kernel_policy)
+
+  base = run_engine(LMEngine(cfg, params, **kw), prompts, budgets)
+  ref = base.pop("by_uid")
+  del base["accept_rate"]
+
+  rows = []
+  for rank in ranks:
+    draft = make_draft_params(params, rank=rank)
+    for k in ks:
+      eng = LMEngine(cfg, params, speculate=k, draft_params=draft, **kw)
+      r = run_engine(eng, prompts, budgets)
+      got = r.pop("by_uid")
+      # losslessness re-checked on every row: uids restart per engine,
+      # so position i of each engine is the same request
+      r["parity"] = all(
+          np.array_equal(got[u2], ref[u1])
+          for u1, u2 in zip(sorted(ref), sorted(got)))
+      r.update(k=k, rank=rank)
+      rows.append(r)
+  return {"arch": cfg.name, "batch": batch, "num_requests": num_requests,
+          "max_len": max_len, "baseline": base, "rows": rows}
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default="qwen3-4b")
+  ap.add_argument("--batch", type=int, default=4)
+  ap.add_argument("--num-requests", type=int, default=8)
+  ap.add_argument("--max-len", type=int, default=64)
+  ap.add_argument("--kernels", choices=["jnp", "pallas"], default="jnp")
+  ap.add_argument("--json", action="store_true",
+                  help="write BENCH_speculative.json")
+  args = ap.parse_args()
+
+  out = run(args.arch, batch=args.batch, num_requests=args.num_requests,
+            max_len=args.max_len, kernel_policy=args.kernels)
+  b = out["baseline"]
+  print(f"  vanilla: {b['tokens']} tok in {b['wall_s']:.2f}s "
+        f"({b['tok_s']:.1f} tok/s, {b['decode_steps']} steps)")
+  for r in out["rows"]:
+    print(f"  k={r['k']} rank={r['rank']:>4}: {r['tok_s']:.1f} tok/s "
+          f"({r['tok_s'] / b['tok_s']:.2f}x), accept {r['accept_rate']:.2f}, "
+          f"{r['decode_steps']} iterations "
+          f"({b['decode_steps'] / r['decode_steps']:.1f}x fewer), "
+          f"parity={r['parity']}")
+  if args.json:
+    with open("BENCH_speculative.json", "w") as f:
+      json.dump(out, f, indent=1)
+    print("wrote BENCH_speculative.json")
+
+
+if __name__ == "__main__":
+  main()

@@ -6,7 +6,9 @@ GEMM call site (`layers.common.gemm`, `FactoredLinear.apply`, the GRU step)
 consults it. The policy classifies each matmul by *regime*:
 
   decode_matvec — unfactored weight, flattened batch <= decode_batch_max
-                  (the paper's §4 low-batch serving regime)
+                  (the paper's §4 low-batch serving regime; a speculative
+                  verify window counts as batch x window rows — see
+                  `decode_policy(window=...)`)
   lowrank_gemm  — factored W = UV leaf -> fused (x @ U) @ V, rank
                   intermediate in VMEM (paper §3)
   int8_gemm     — w8a8. A pre-quantized leaf (repro.quant's
@@ -100,32 +102,42 @@ class KernelPolicy:
 JNP_ONLY = KernelPolicy()
 
 
-def decode_policy(batch_size: Optional[int] = None, *, overrides: tuple = (),
+def decode_policy(batch_size: Optional[int] = None, *, window: int = 1,
+                  overrides: tuple = (),
                   interpret: Optional[bool] = None) -> KernelPolicy:
   """The serving-engine policy: route the decode regime through Pallas.
 
   `batch_size` (the engine's request batch) NARROWS decode_matvec's batch
   bound to min(16, batch_size): a per-step decode GEMM has flattened
   batch == batch_size, so anything wider (e.g. a projection batched
-  across time) is not the decode regime and stays on jnp. The kernel's
-  16-row contract is never widened.
+  across time) is not the decode regime and stays on jnp.
+
+  `window` (speculative verification) widens the bound to cover a fused
+  window step: verifying w = k+1 draft positions may flatten batch x w
+  rows into one GEMM, which is still the paper's low-batch serving
+  regime as long as b*w fits the kernel's contract. The bound therefore
+  becomes min(16, batch_size * window) — the kernel's 16-row contract is
+  never widened, so an oversized b*w window simply stays on jnp. (The
+  current ModelApi.decode_window is a scan — one token per step, batch
+  rows per GEMM — so this entry is the classification contract for the
+  batched window step, a ROADMAP open item, not a live reroute today.)
   """
   bmax = ops.DECODE_BATCH_MAX
   if batch_size is not None:
-    bmax = min(bmax, max(1, batch_size))
+    bmax = min(bmax, max(1, batch_size) * max(1, window))
   return KernelPolicy(mode="decode", decode_batch_max=bmax,
                       overrides=tuple(overrides), interpret=interpret)
 
 
-def resolve_policy(policy, batch_size: Optional[int] = None
-                   ) -> Optional[KernelPolicy]:
+def resolve_policy(policy, batch_size: Optional[int] = None, *,
+                   window: int = 1) -> Optional[KernelPolicy]:
   """Accept a KernelPolicy, a mode string, or None (engine convenience)."""
   if policy is None or isinstance(policy, KernelPolicy):
     return policy
   if policy in ("jnp", "jnp_only"):
     return JNP_ONLY
   if policy in ("pallas", "decode"):
-    return decode_policy(batch_size)
+    return decode_policy(batch_size, window=window)
   raise ValueError(f"unknown kernel policy: {policy!r}")
 
 

@@ -48,12 +48,35 @@ def main() -> None:
                   help="one-shot PTQ (repro.quant) before serving: every "
                        "GEMM leaf becomes int8 + per-column scales and "
                        "decodes through the int8_gemm regime")
+  ap.add_argument("--speculate", type=int, default=0, metavar="K",
+                  help="lossless self-speculative decoding: a low-rank "
+                       "draft of the SAME params proposes K tokens per "
+                       "step, the target verifies them in one fused "
+                       "window (greedy-only; token-for-token identical "
+                       "to vanilla greedy)")
+  ap.add_argument("--draft-rank", type=int, default=None,
+                  help="fixed truncated-SVD rank for the draft's GEMMs "
+                       "(default: explained-variance rule at 0.9)")
   args = ap.parse_args()
 
   cfg = (configs.get_config(args.arch) if args.full
          else configs.get_smoke(args.arch))
   api = get_model(cfg)
   params = api.init(jax.random.PRNGKey(0), cfg)
+  if args.speculate and cfg.family == "deepspeech":
+    # the streaming CTC server is frame-synchronous: there is no token
+    # sequence to draft, so speculation does not apply — say so instead
+    # of silently ignoring the flag
+    print("--speculate applies to the LM engine only; the deepspeech "
+          "family streams frame-synchronously — ignoring")
+    args.speculate = 0
+  draft_params = None
+  if args.speculate and args.quantize:
+    # int8 leaves can't be SVD'd — build the draft from the float
+    # weights BEFORE PTQ (quantization x speculation still composes
+    # losslessly: verification is against whatever the target computes)
+    from repro.serving import make_draft_params
+    draft_params = make_draft_params(params, rank=args.draft_rank)
   if args.quantize:
     from repro.core.factored import iter_gemm_leaves
     from repro.quant import QuantizedLinear, quantize_params
@@ -83,19 +106,34 @@ def main() -> None:
   num_requests = args.num_requests or args.batch
   rng = np.random.RandomState(0)
   lo, hi = max(1, args.prompt_len // 2), 2 * args.prompt_len
+  temperature = args.temperature
+  if args.speculate and temperature > 0:
+    # speculative decoding is greedy-only (rejection sampling for T > 0
+    # is an open item); fall back rather than erroring out of the driver
+    print(f"--speculate is greedy-only: overriding --temperature "
+          f"{temperature} -> 0.0")
+    temperature = 0.0
   engine = LMEngine(cfg, params, batch_size=args.batch,
                     max_len=args.max_len, kernel_policy=args.kernels,
-                    eos_id=args.eos_id)
+                    eos_id=args.eos_id, speculate=args.speculate,
+                    draft_params=draft_params, draft_rank=args.draft_rank)
+  if args.speculate:
+    from repro.core.factored import count_params
+    print(f"speculating {args.speculate} tokens/step with a "
+          f"{count_params(engine.draft_params)}-param low-rank draft "
+          f"(target {count_params(params)})")
   for _ in range(num_requests):
     prompt = rng.randint(1, cfg.vocab_size, size=(rng.randint(lo, hi + 1),))
     engine.submit(prompt, max_new_tokens=int(rng.randint(1, args.steps + 1)))
   t0 = time.perf_counter()
-  finished = engine.run(temperature=args.temperature)
+  finished = engine.run(temperature=temperature)
   dt = time.perf_counter() - t0
   tokens = sum(len(f.tokens) for f in finished)
+  spec = (f", accept rate {engine.accept_rate:.2f}"
+          if args.speculate else "")
   print(f"served {len(finished)} requests ({tokens} tokens) through "
         f"{args.batch} slots in {dt:.2f}s ({tokens / dt:.1f} tok/s, "
-        f"occupancy {engine.occupancy:.2f})")
+        f"occupancy {engine.occupancy:.2f}{spec})")
   for f in finished[:4]:
     print(f"  req {f.uid}: prompt {len(f.prompt)} -> {len(f.tokens)} "
           f"tokens ({f.finish_reason}); sample {f.tokens[:6].tolist()}")

@@ -5,7 +5,10 @@ Every family exposes:
   loss_fn(params, batch, cfg, cs)         -> (scalar loss, metrics dict)
   init_decode_state(cfg, batch, max_len)  -> decode-state pytree (if decodable)
   decode_step(params, state, token/feat, positions, cfg, cs, policy)
-                                          -> (logits, new state)
+                                          -> (logits (b, 1, v), new state)
+  decode_state_carry(cfg)                 -> bool pytree: which decode-state
+                                          leaves are read-modify-write
+                                          carries (speculative rewind)
 
 The training loop, serving engine, dry-run, and benchmarks all go through
 `get_model(cfg)` so an `--arch <id>` flag is the only thing that changes
@@ -100,10 +103,47 @@ class ModelApi:
   # family's slot-surgery contract: caches stack over layer dims, so the
   # batch axis is not uniformly leading.
   decode_state_batch_axes: Optional[Callable] = None
+  # cfg -> pytree of bools, same structure as init_decode_state's output:
+  # True for read-modify-write carries (SSM states, conv tails, xLSTM
+  # accumulators, GRU hiddens) that a speculative rewind must snapshot
+  # before drafting and replay up to the accepted length; False for
+  # leaves whose rewind is free — attention KV rows are written at
+  # absolute positions (rows past the committed position are dead until
+  # overwritten, never read under the causal mask) and step-invariant
+  # leaves (whisper's encoder memory) never change at all.
+  decode_state_carry: Optional[Callable] = None
 
   @property
   def decodable(self) -> bool:
     return self.decode_step is not None
+
+  def decode_window(self, params, state, tokens, positions,
+                    cfg: ModelConfig, cs: Constraint = identity_constraint,
+                    policy=None):
+    """Decode a W-token window in one fused scan of `decode_step`.
+
+    tokens (b, W) ids — or (b, W, f) frames for deepspeech — fed at
+    positions `positions + t`; returns (logits (b, W, v) float32, state
+    after all W steps). The scan body is the family's own decode_step,
+    so each window position computes bit-identically to a lone jitted
+    step — the invariant speculative verification's losslessness rests
+    on (the verify window's argmaxes ARE vanilla greedy's choices).
+
+    Rewind contract: the caller owns undoing the W - accepted rejected
+    suffix. KV-cache leaves need only the position counter moved back
+    (`decode_state_carry` False); carry leaves must be restored from a
+    pre-window snapshot and replayed through the accepted prefix
+    (`decode_state_carry` True) — see serving.engine's speculative path.
+    """
+    if not self.decodable:
+      raise ValueError(f"{self.family} has no decode path")
+    def body(st, t):
+      tok = jax.lax.dynamic_slice_in_dim(tokens, t, 1, axis=1)
+      logits, st1 = self.decode_step(params, st, tok, positions + t, cfg,
+                                     cs, policy)
+      return st1, logits[:, 0].astype(jnp.float32)
+    state, logits = jax.lax.scan(body, state, jnp.arange(tokens.shape[1]))
+    return jnp.moveaxis(logits, 0, 1), state
 
   # -- decode-state slot surgery ------------------------------------------
   # The continuous-batching engine treats each batch row of the decode
@@ -146,32 +186,37 @@ def get_model(cfg: ModelConfig) -> ModelApi:
         forward=transformer.forward,
         init_decode_state=transformer.init_decode_state,
         decode_step=transformer.decode_step,
-        decode_state_batch_axes=transformer.decode_state_batch_axes)
+        decode_state_batch_axes=transformer.decode_state_batch_axes,
+        decode_state_carry=transformer.decode_state_carry)
   if fam == "zamba":
     return ModelApi(
         family=fam, init=zamba.init_lm, loss_fn=zamba.loss_fn,
         forward=zamba.forward, init_decode_state=zamba.init_decode_state,
         decode_step=zamba.decode_step,
-        decode_state_batch_axes=zamba.decode_state_batch_axes)
+        decode_state_batch_axes=zamba.decode_state_batch_axes,
+        decode_state_carry=zamba.decode_state_carry)
   if fam == "xlstm":
     return ModelApi(
         family=fam, init=xlstm_model.init_lm, loss_fn=xlstm_model.loss_fn,
         forward=xlstm_model.forward,
         init_decode_state=xlstm_model.init_decode_state,
         decode_step=xlstm_model.decode_step,
-        decode_state_batch_axes=xlstm_model.decode_state_batch_axes)
+        decode_state_batch_axes=xlstm_model.decode_state_batch_axes,
+        decode_state_carry=xlstm_model.decode_state_carry)
   if fam == "whisper":
     return ModelApi(
         family=fam, init=whisper.init_model, loss_fn=whisper.loss_fn,
         forward=None, init_decode_state=whisper.init_decode_state,
         decode_step=whisper.decode_step, encode=whisper.encode,
-        decode_state_batch_axes=whisper.decode_state_batch_axes)
+        decode_state_batch_axes=whisper.decode_state_batch_axes,
+        decode_state_carry=whisper.decode_state_carry)
   if fam == "deepspeech":
     return ModelApi(
         family=fam, init=deepspeech.init_model, loss_fn=deepspeech.loss_fn,
         forward=deepspeech.forward,
         init_decode_state=lambda cfg, batch, max_len=None:
             deepspeech.init_decode_state(cfg, batch),
-        decode_step=deepspeech.decode_step,
-        decode_state_batch_axes=deepspeech.decode_state_batch_axes)
+        decode_step=deepspeech.api_decode_step,
+        decode_state_batch_axes=deepspeech.decode_state_batch_axes,
+        decode_state_carry=deepspeech.decode_state_carry)
   raise ValueError(f"unknown model family: {fam}")

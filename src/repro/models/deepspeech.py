@@ -118,6 +118,13 @@ def decode_state_batch_axes(cfg: ModelConfig) -> dict:
   return {f"gru{i}": 0 for i in range(len(cfg.gru_dims))}
 
 
+def decode_state_carry(cfg: ModelConfig) -> dict:
+  """Speculative-rewind contract: every GRU hidden state is a read-
+  modify-write carry — rewind requires the pre-draft snapshot replayed
+  through the accepted prefix."""
+  return {f"gru{i}": True for i in range(len(cfg.gru_dims))}
+
+
 def decode_step(params: dict, state: dict, x_t: jax.Array,
                 cfg: ModelConfig, cs: Constraint = _id_cs, policy=None
                 ) -> tuple[jax.Array, dict]:
@@ -140,3 +147,17 @@ def decode_step(params: dict, state: dict, x_t: jax.Array,
       gemm(params["fc"], h, policy).astype(jnp.float32)).astype(h.dtype)
   logits = gemm(params["out"], h, policy)
   return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1), new_state
+
+
+def api_decode_step(params: dict, state: dict, feat: jax.Array,
+                    positions: jax.Array, cfg: ModelConfig,
+                    cs: Constraint = _id_cs, policy=None
+                    ) -> tuple[jax.Array, dict]:
+  """ModelApi-uniform wrapper over the frame step: feat (b, 1, gru_in),
+  logits (b, 1, v). `positions` is accepted and ignored — the streaming
+  state is purely recurrent, there is no positional cache — which gives
+  DS2 the same decode_step/decode_window surface as the LM families."""
+  del positions
+  log_probs, new_state = decode_step(params, state, feat[:, 0], cfg, cs,
+                                     policy)
+  return log_probs[:, None], new_state

@@ -199,6 +199,14 @@ def decode_state_batch_axes(cfg: ModelConfig) -> dict:
   return axes
 
 
+def decode_state_carry(cfg: ModelConfig) -> dict:
+  """Speculative-rewind contract: the whole decode state is attention KV
+  (GQA k/v or MLA c_kv/k_rope) written at absolute positions — rows past
+  the committed position are never read under the causal mask, so a
+  rejected draft suffix rewinds by moving the position counter alone."""
+  return jax.tree.map(lambda _: False, decode_state_batch_axes(cfg))
+
+
 def _decode_stack(x, stack, cache, positions, cfg: ModelConfig,
                   cs: Constraint, *, use_moe: bool, policy=None):
   dec = (mla_lib.mla_decode if cfg.mla is not None

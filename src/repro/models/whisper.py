@@ -218,6 +218,13 @@ def decode_state_batch_axes(cfg: ModelConfig) -> dict:
   return {"kv": {"k": 1, "v": 1}, "mem": 0}
 
 
+def decode_state_carry(cfg: ModelConfig) -> dict:
+  """Speculative-rewind contract: the self-attention KV cache rewinds
+  positionally and the encoder memory is step-invariant (decode_step
+  returns it untouched) — no carry anywhere, rewind is free."""
+  return {"kv": {"k": False, "v": False}, "mem": False}
+
+
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
                 cs: Constraint = _id_cs, policy=None

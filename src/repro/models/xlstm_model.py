@@ -88,6 +88,14 @@ def decode_state_batch_axes(cfg: ModelConfig) -> dict:
   }
 
 
+def decode_state_carry(cfg: ModelConfig) -> dict:
+  """Speculative-rewind contract: every xLSTM state leaf (mLSTM matrix
+  memory / normalizer / stabilizer, sLSTM hidden/cell/normalizer/
+  stabilizer) is a read-modify-write carry — rewind requires the
+  pre-draft snapshot replayed through the accepted prefix."""
+  return jax.tree.map(lambda _: True, decode_state_batch_axes(cfg))
+
+
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
                 cs: Constraint = _id_cs, policy=None

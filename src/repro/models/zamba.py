@@ -140,6 +140,21 @@ def decode_state_batch_axes(cfg: ModelConfig) -> dict:
   return axes
 
 
+def decode_state_carry(cfg: ModelConfig) -> dict:
+  """Speculative-rewind contract: Mamba2 SSM states and conv tails are
+  read-modify-write every step — rewinding a rejected draft suffix needs
+  the pre-draft snapshot replayed through the accepted prefix. The shared
+  attention KV cache rewinds positionally (overwrite, free)."""
+  _, _, tail = _plan(cfg)
+  carry = {
+      "main_ssm": {"ssm": True, "conv": True},
+      "shared_kv": {"k": False, "v": False},
+  }
+  if tail:
+    carry["tail_ssm"] = {"ssm": True, "conv": True}
+  return carry
+
+
 def decode_step(params: dict, state: dict, token: jax.Array,
                 positions: jax.Array, cfg: ModelConfig,
                 cs: Constraint = _id_cs, policy=None

@@ -1,6 +1,10 @@
-"""Serving engines: continuous-batching LM decode + streaming speech."""
+"""Serving engines: continuous-batching LM decode (with lossless
+self-speculative decoding) + streaming speech."""
 from repro.serving.engine import (FinishedRequest, GenerationResult,
                                   LMEngine, Request, StreamingSpeechServer)
+from repro.serving.speculative import (accept_longest_prefix,
+                                       make_draft_params)
 
 __all__ = ["FinishedRequest", "GenerationResult", "LMEngine", "Request",
-           "StreamingSpeechServer"]
+           "StreamingSpeechServer", "accept_longest_prefix",
+           "make_draft_params"]

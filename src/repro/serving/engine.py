@@ -21,6 +21,21 @@ with no slot burning idle once its request finishes.
 a slot whose cache is full retires with reason "max_len" instead of
 wrapping the scatter index and corrupting the cache.
 
+Speculative decoding (`speculate=k`): the engine runs a second, low-rank
+model — the stage-2 truncated-SVD factorization of the *same* params
+(serving.speculative.make_draft_params, no extra training) — against its
+own decode state. Each iteration the draft proposes k tokens
+autoregressively, the target verifies all of them in one fused
+`ModelApi.decode_window`, and `accept_longest_prefix` commits the
+longest agreeing prefix plus one bonus token (1..k+1 tokens per
+iteration instead of exactly 1). Greedy acceptance makes this LOSSLESS:
+speculative greedy is token-for-token vanilla greedy. Rejected suffixes
+rewind both models' states with per-family semantics
+(ModelApi.decode_state_carry): attention KV rows rewind by moving the
+position counter (rows past it are dead until overwritten); SSM /
+recurrent carries restore the pre-draft snapshot and replay the accepted
+prefix through the masked window program prefill already uses.
+
 `cache_dtype` downcasts only the attention KV-cache leaves (see
 `models.api.cast_kv_cache`); SSM / recurrent carries stay full precision.
 
@@ -52,6 +67,8 @@ from repro.kernels.dispatch import resolve_policy
 from repro.layers.common import ModelConfig
 from repro.models import deepspeech
 from repro.models.api import cast_kv_cache, get_model
+from repro.serving.speculative import (accept_longest_prefix,
+                                       make_draft_params, merge_rewind)
 
 _INHERIT = object()   # submit(eos_id=...) sentinel: use the engine's eos_id
 
@@ -61,6 +78,9 @@ class GenerationResult:
   tokens: np.ndarray            # (b, steps); rows past their length are 0
   steps: int
   lengths: Optional[np.ndarray] = None   # (b,) generated tokens per row
+  # speculative decoding only: accepted draft tokens / drafted tokens
+  # over this call (None when the engine decodes vanilla)
+  accept_rate: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -80,10 +100,18 @@ class FinishedRequest:
 
 
 @dataclasses.dataclass
-class _Slot:
-  req: Request
-  tokens: list
-  remaining: Optional[int]
+class _SlotState:
+  """Host-side ownership record for one decode slot: request lifecycle,
+  emitted tokens, and the next token to feed. One object per slot
+  (inactive slots hold a blank record) — the single place per-slot state
+  hangs off now that features run several models against one decode
+  state (the speculative draft here; prefix caches later). Replaces the
+  former parallel lists (`_slots` / `_active` / `_next_tok`)."""
+  req: Optional[Request] = None
+  tokens: list = dataclasses.field(default_factory=list)
+  remaining: Optional[int] = None
+  active: bool = False
+  next_tok: int = 0
 
 
 def _next_pow2(n: int) -> int:
@@ -101,7 +129,8 @@ class LMEngine:
   def __init__(self, model_cfg: ModelConfig, params: Any, *,
                batch_size: int, max_len: int, mesh=None,
                cache_dtype=None, rng=None, kernel_policy=None,
-               eos_id: Optional[int] = None):
+               eos_id: Optional[int] = None, speculate: int = 0,
+               draft_params: Any = None, draft_rank: Optional[int] = None):
     self.cfg = model_cfg
     self.params = params
     self.api = get_model(model_cfg)
@@ -111,27 +140,50 @@ class LMEngine:
     self.max_len = max_len
     self.cache_dtype = cache_dtype
     self.eos_id = eos_id
+    if speculate < 0:
+      raise ValueError(f"speculate must be >= 0, got {speculate}")
+    self.speculate = int(speculate)
     cs = make_constraint(mesh, model_cfg, batch_size, decode=True)
     # the decode-regime KernelPolicy is built HERE, once, like cs: the
     # jitted step closes over it, so "pallas" lowers every eligible GEMM
-    # through kernels.dispatch. None keeps the exact jnp program.
-    policy = resolve_policy(kernel_policy, batch_size)
+    # through kernels.dispatch. None keeps the exact jnp program. A
+    # speculative engine widens the decode_matvec bound to cover a fused
+    # (batch x window)-row verify step (never past the kernel contract).
+    policy = resolve_policy(kernel_policy, batch_size,
+                            window=self.speculate + 1)
     self.kernel_policy = policy
     self._axes = self.api.decode_state_batch_axes(model_cfg)
+    # per-family rewind semantics: carry leaves snapshot/replay, the rest
+    # (attention KV, step-invariant memory) rewind positionally for free
+    self._carry = self.api.decode_state_carry(model_cfg)
+    self._has_carry = any(jax.tree.leaves(self._carry))
     self.state = self._init_state(batch_size)
     self.positions = jnp.zeros((batch_size,), jnp.int32)
-    self.rng = jax.random.PRNGKey(0) if rng is None else rng
+    self._rng0 = jax.random.PRNGKey(0) if rng is None else rng
+    self.rng = self._rng0
+
+    # the self-speculative draft: same params, matching GEMMs factored
+    # at the draft rank, decoding against its own state
+    if self.speculate:
+      if draft_params is None:
+        draft_params = make_draft_params(params, rank=draft_rank)
+      self.draft_params = draft_params
+      self.draft_state = self._init_state(batch_size)
+    else:
+      self.draft_params = None
+      self.draft_state = None
 
     # host-side per-slot lifecycle + the request queue
     self._queue: collections.deque = collections.deque()
-    self._slots: list = [None] * batch_size
-    self._active = np.zeros((batch_size,), bool)
-    self._next_tok = np.zeros((batch_size, 1), np.int32)
+    self._slots: list = [_SlotState() for _ in range(batch_size)]
     self._finished: dict = {}
     self._next_uid = 0
     # occupancy accounting for bench_serving: busy slot-steps / slot-steps
     self.decode_steps = 0
     self.busy_slot_steps = 0
+    # speculative accounting: accept_rate = accepted / drafted
+    self.drafted_tokens = 0
+    self.accepted_tokens = 0
 
     api, cfg = self.api, model_cfg
 
@@ -139,6 +191,17 @@ class LMEngine:
       return api.decode_step(params, state, token, positions, cfg, cs,
                              policy)
     self._step = jax.jit(step, donate_argnums=(1,))
+    # carry families snapshot the draft state before drafting; the FIRST
+    # draft step reads that snapshot, so it must not donate its buffers
+    # (later steps consume disposable intermediates and use _step)
+    self._draft_step0 = jax.jit(step) if self._has_carry else self._step
+
+    def window_step(params, state, tokens, positions):
+      return api.decode_window(params, state, tokens, positions, cfg, cs,
+                               policy)
+    # same donation logic: the pre-window snapshot must survive the call
+    self._window = jax.jit(
+        window_step, donate_argnums=() if self._has_carry else (1,))
 
     def prefill_prog(params, state, prompts, plens, pos0):
       """Fused prefill: scan over prompt positions inside one program.
@@ -172,11 +235,16 @@ class LMEngine:
     # no donation: admission prefills from the cached fresh-slot template,
     # which must survive the call
     self._prefill = jax.jit(prefill_prog)
+    # the same masked-window program re-advances carries after a
+    # speculative rejection (replay of the accepted prefix); its inputs
+    # are disposable (post-window KV + pre-draft snapshot), so donate
+    self._replay = jax.jit(prefill_prog, donate_argnums=(1,))
 
     def insert(state, slot_state, slot):
       return api.insert_slot(cfg, state, slot_state, slot)
     self._insert = jax.jit(insert, donate_argnums=(0,))
     # one fresh single-slot decode state, reused as the admission template
+    # (for the draft too: factoring weights never changes state shapes)
     self._fresh_slot = self._init_state(1)
 
   def _init_state(self, batch: int):
@@ -187,20 +255,35 @@ class LMEngine:
 
   def reset(self) -> None:
     self.state = self._init_state(self.batch)
+    if self.speculate:
+      self.draft_state = self._init_state(self.batch)
     self.positions = jnp.zeros((self.batch,), jnp.int32)
+    self.rng = self._rng0          # seeded sampling restarts with reset
     self._queue.clear()
-    self._slots = [None] * self.batch
-    self._active[:] = False
-    self._next_tok[:] = 0
+    self._slots = [_SlotState() for _ in range(self.batch)]
     self._finished = {}
     self.decode_steps = 0
     self.busy_slot_steps = 0
+    self.drafted_tokens = 0
+    self.accepted_tokens = 0
 
   # -- request lifecycle ----------------------------------------------------
 
+  def _active_mask(self) -> np.ndarray:
+    return np.array([s.active for s in self._slots], bool)
+
+  def _next_tokens(self) -> np.ndarray:
+    return np.array([[s.next_tok] for s in self._slots], np.int32)
+
   @property
   def num_active(self) -> int:
-    return int(self._active.sum())
+    return sum(s.active for s in self._slots)
+
+  @property
+  def accept_rate(self) -> float:
+    """Accepted draft tokens / drafted tokens since init or reset()."""
+    return (self.accepted_tokens / self.drafted_tokens
+            if self.drafted_tokens else 0.0)
 
   @property
   def occupancy(self) -> float:
@@ -232,9 +315,7 @@ class LMEngine:
     self._finished[s.req.uid] = FinishedRequest(
         uid=s.req.uid, prompt=s.req.prompt,
         tokens=np.asarray(s.tokens, np.int32), finish_reason=reason)
-    self._slots[slot] = None
-    self._active[slot] = False
-    self._next_tok[slot] = 0
+    self._slots[slot] = _SlotState()
     # no state scrub here: the slot keeps stepping masked (positions
     # clamped to 0) and the next admit splices a fully fresh prefilled
     # state over every row of the slot
@@ -261,28 +342,40 @@ class LMEngine:
     return True
 
   def _admit(self, req: Request, slot: int, temperature: float) -> None:
-    """Prefill `req` into a fresh batch-1 state and splice it into `slot`."""
+    """Prefill `req` into a fresh batch-1 state and splice it into `slot`.
+    A speculative engine prefills the draft's state alongside: both
+    models must have consumed the prompt before drafting can start."""
     plen = req.prompt.size
     bucket = min(max(self.max_len, 1), _next_pow2(plen))
     padded = np.zeros((1, bucket), np.int32)
     padded[0, :plen] = req.prompt
-    last, slot_state = self._prefill(
-        self.params, self._fresh_slot, jnp.asarray(padded),
-        jnp.asarray([plen], jnp.int32), jnp.zeros((1,), jnp.int32))
-    self.state = self._insert(self.state, slot_state,
-                              jnp.asarray(slot, jnp.int32))
+    toks = jnp.asarray(padded)
+    plens = jnp.asarray([plen], jnp.int32)
+    pos0 = jnp.zeros((1,), jnp.int32)
+    sl = jnp.asarray(slot, jnp.int32)
+    last, slot_state = self._prefill(self.params, self._fresh_slot, toks,
+                                     plens, pos0)
+    self.state = self._insert(self.state, slot_state, sl)
     self.positions = self.positions.at[slot].set(plen)
-    self._slots[slot] = _Slot(req=req, tokens=[],
-                              remaining=req.max_new_tokens)
-    self._active[slot] = True
+    self._slots[slot] = _SlotState(req=req, remaining=req.max_new_tokens,
+                                   active=True)
+    # the first token always comes from the TARGET's prefill logits —
+    # identical to vanilla admission, the draft only ever proposes
     tok = int(np.asarray(self._sample(last, temperature))[0, 0])
     if self._record_token(slot, tok, plen):
-      self._next_tok[slot, 0] = tok
+      self._slots[slot].next_tok = tok
+      if self.speculate:
+        # only slots that survive admission ever draft — a request that
+        # retires here (budget 1, EOS in the prefill logits, full
+        # cache) would waste the whole draft prefill
+        _, draft_slot = self._prefill(self.draft_params, self._fresh_slot,
+                                      toks, plens, pos0)
+        self.draft_state = self._insert(self.draft_state, draft_slot, sl)
 
   def _admit_from_queue(self, temperature: float) -> None:
     slot = 0
     while self._queue and slot < self.batch:
-      if self._active[slot]:
+      if self._slots[slot].active:
         slot += 1
         continue
       # a request may finish during admission (EOS in the prefill logits,
@@ -293,27 +386,146 @@ class LMEngine:
     """One masked decode step for every slot. Inactive slots step with
     positions clamped to 0 and token 0; their state rows are garbage until
     the next admit overwrites them, which keeps the step program fixed."""
-    active = jnp.asarray(self._active)
+    active_np = self._active_mask()
+    active = jnp.asarray(active_np)
     safe_pos = jnp.where(active, self.positions, 0)
     logits, self.state = self._step(self.params, self.state,
-                                    jnp.asarray(self._next_tok), safe_pos)
+                                    jnp.asarray(self._next_tokens()),
+                                    safe_pos)
     self.positions = jnp.where(active, self.positions + 1, self.positions)
     self.decode_steps += 1
-    self.busy_slot_steps += int(self._active.sum())
+    self.busy_slot_steps += int(active_np.sum())
     toks = np.asarray(self._sample(logits, temperature))
     pos = np.asarray(self.positions)        # one host sync per step
     for i in range(self.batch):
-      if self._active[i] and self._record_token(i, int(toks[i, 0]),
-                                                int(pos[i])):
-        self._next_tok[i, 0] = toks[i, 0]
+      if self._slots[i].active and self._record_token(i, int(toks[i, 0]),
+                                                      int(pos[i])):
+        self._slots[i].next_tok = int(toks[i, 0])
 
-  def run(self, *, temperature: float = 0.0) -> list:
+  def _decode_all_speculative(self) -> None:
+    """One speculative iteration for every slot: draft k, verify k+1 in
+    one fused window, commit the accepted prefix + bonus, rewind the
+    rejected suffix. Greedy-only (run() guards temperature).
+
+    Window layout per slot: inputs [t0, d_1..d_k] fed at positions
+    p..p+k (t0 = the committed-but-unfed token) produce target argmaxes
+    g_1..g_{k+1}; after accepting `a` drafts the slot commits d_1..d_a
+    plus the bonus g_{a+1} and its position moves to p+a+1. Writes past
+    max_len fall off the cache (JAX scatter drops out-of-bounds updates)
+    and the commit loop retires the slot at the boundary first, so the
+    hard max_len contract survives speculation."""
+    k = self.speculate
+    active_np = self._active_mask()
+    pos_np = np.asarray(self.positions)
+    active = jnp.asarray(active_np)
+    pos0 = jnp.where(active, self.positions, 0)
+
+    # -- draft: k autoregressive proposals against the draft's own state
+    if self._has_carry:
+      draft_snap = self.draft_state    # pre-draft carry snapshot (refs)
+    cur = jnp.asarray(self._next_tokens())
+    cols = [cur]
+    for j in range(k):
+      # step 0 reads the pre-draft snapshot (must survive — no
+      # donation); later steps consume disposable intermediates
+      step_fn = self._draft_step0 if j == 0 else self._step
+      lg, self.draft_state = step_fn(self.draft_params, self.draft_state,
+                                     cur, pos0 + j)
+      cur = self._sample(lg, 0.0)
+      cols.append(cur)
+    if not self._has_carry:
+      # pure-KV families: one extra draft step consumes d_k so a fully
+      # accepted window leaves the draft cache complete through p+k
+      # (carry families cover this with the replay below instead)
+      _, self.draft_state = self._step(self.draft_params,
+                                       self.draft_state, cur, pos0 + k)
+    window = jnp.concatenate(cols, axis=1)          # (b, k+1)
+
+    # -- verify: all k+1 positions in one fused window step
+    if self._has_carry:
+      snap = self.state                # pre-window carry snapshot (refs)
+    logits_w, self.state = self._window(self.params, self.state, window,
+                                        pos0)
+    target = np.asarray(jnp.argmax(logits_w, axis=-1), np.int32)
+    window_np = np.asarray(window)
+    accept, out_toks, out_len = accept_longest_prefix(window_np[:, 1:],
+                                                      target)
+    self.decode_steps += 1
+    self.busy_slot_steps += int(active_np.sum())
+
+    # -- commit: accepted prefix + bonus, via the vanilla retirement rules
+    commit = np.ones((self.batch,), np.int32)  # window tokens consumed
+    for i in range(self.batch):
+      s = self._slots[i]
+      if not s.active:
+        continue
+      self.drafted_tokens += k
+      alive = True
+      for j in range(int(out_len[i])):
+        commit[i] = j + 1
+        alive = self._record_token(i, int(out_toks[i, j]),
+                                   int(pos_np[i]) + j + 1)
+        if not alive:
+          break                      # EOS / budget / max_len mid-window
+      if alive:
+        s.next_tok = int(out_toks[i, int(out_len[i]) - 1])   # the bonus
+      # realized acceptance only: drafts the window agreed on but a
+      # mid-window retirement never emitted don't inflate the rate
+      self.accepted_tokens += min(int(accept[i]), int(commit[i]))
+    commit_j = jnp.asarray(commit)
+    self.positions = jnp.where(active, self.positions + commit_j,
+                               self.positions)
+
+    # -- rewind the rejected suffix (per-family, see decode_state_carry):
+    # KV rows past the new position are dead until overwritten; carries
+    # restore the snapshot and replay the accepted prefix masked. Slots
+    # retired above tolerate garbage (the next admit splices a fully
+    # fresh state), so only surviving slots constrain the rewind. The
+    # path choice below depends on the accept pattern; that is sound
+    # because every path computes the same committed state bit-for-bit
+    # (window scan == masked replay scan == lone steps — the same
+    # cross-program invariant losslessness rests on).
+    if self._has_carry:
+      live = [i for i in range(self.batch) if self._slots[i].active]
+      if live and any(commit[i] != k + 1 for i in live):
+        # a surviving slot rejected part of its window: carries come
+        # from the snapshots, replayed through the accepted prefix
+        restored = merge_rewind(self.state, snap, self._carry)
+        _, self.state = self._replay(self.params, restored, window,
+                                     commit_j, pos0)
+        restored = merge_rewind(self.draft_state, draft_snap, self._carry)
+        _, self.draft_state = self._replay(self.draft_params, restored,
+                                           window, commit_j, pos0)
+      elif live:
+        # every surviving slot accepted its whole window: the target's
+        # post-window carries already ARE the committed carries, and
+        # the draft (one token behind — it never consumed d_k) catches
+        # up with a single step instead of a (k+1)-position replay
+        _, self.draft_state = self._step(self.draft_params,
+                                         self.draft_state, cur, pos0 + k)
+
+  def _check_greedy_only(self, temperature: float) -> None:
+    if temperature > 0.0 and self.speculate:
+      raise NotImplementedError(
+          "speculative decoding is greedy-only: temperature > 0 needs "
+          "rejection sampling against the draft distribution, which is "
+          "not implemented — decode with temperature=0.0 or speculate=0")
+
+  def run(self, *, temperature: float = 0.0, rng=None) -> list:
     """Drain the queue: admit, decode, retire, refill until idle. Returns
-    the requests finished since the last call, in submission order."""
-    while self._queue or self._active.any():
+    the requests finished since the last call, in submission order.
+    `rng` seeds sampled (temperature > 0) decoding for this call — pass
+    the same key to reproduce a run exactly."""
+    self._check_greedy_only(temperature)
+    if rng is not None:
+      self.rng = rng
+    while self._queue or self.num_active:
       self._admit_from_queue(temperature)
-      if self._active.any():
-        self._decode_all(temperature)
+      if self.num_active:
+        if self.speculate:
+          self._decode_all_speculative()
+        else:
+          self._decode_all(temperature)
     out = [self._finished[uid] for uid in sorted(self._finished)]
     self._finished = {}
     return out
@@ -344,22 +556,31 @@ class LMEngine:
     return logits
 
   def generate(self, prompts: np.ndarray, *, steps: int,
-               temperature: float = 0.0) -> GenerationResult:
+               temperature: float = 0.0, rng=None) -> GenerationResult:
     """Static-batch wrapper over the continuous engine: every row becomes
     a request with a `steps` token budget and no EOS exit (legacy
     semantics). Rows retired early at the max_len boundary come back
-    shorter; see `lengths`. Accepts more rows than slots — extras queue."""
+    shorter; see `lengths`. Accepts more rows than slots — extras queue.
+    A speculative engine reports the measured accept rate of the call."""
+    # validate BEFORE enqueueing: raising from run() after the submits
+    # would leave stale requests polluting the caller's next call
+    self._check_greedy_only(temperature)
     prompts = np.asarray(prompts)
+    drafted0, accepted0 = self.drafted_tokens, self.accepted_tokens
     uids = [self.submit(row, max_new_tokens=steps, eos_id=None)
             for row in prompts]
-    by_uid = {f.uid: f for f in self.run(temperature=temperature)}
+    by_uid = {f.uid: f for f in self.run(temperature=temperature, rng=rng)}
     tokens = np.zeros((len(uids), steps), np.int32)
     lengths = np.zeros((len(uids),), np.int32)
     for r, uid in enumerate(uids):
       t = by_uid[uid].tokens
       tokens[r, :t.size] = t
       lengths[r] = t.size
-    return GenerationResult(tokens=tokens, steps=steps, lengths=lengths)
+    drafted = self.drafted_tokens - drafted0
+    rate = ((self.accepted_tokens - accepted0) / drafted
+            if self.speculate and drafted else None)
+    return GenerationResult(tokens=tokens, steps=steps, lengths=lengths,
+                            accept_rate=rate)
 
   def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
     lg = logits[:, -1].astype(jnp.float32)

@@ -1,0 +1,117 @@
+"""Self-speculative decoding: the paper's low-rank model as a free draft.
+
+The paper trains truncated-SVD low-rank versions of every large GEMM
+because they are cheap to evaluate at small batch (§3.2, §4). That same
+compressed model can accelerate the *full* model with zero quality loss:
+a draft built by `make_draft_params` — the stage-2 truncated-SVD
+factorization of the very params being served, no extra training —
+proposes `k` tokens autoregressively; the target verifies all of them in
+one fused `ModelApi.decode_window`; and because greedy verification
+accepts exactly the tokens vanilla greedy would have produced,
+speculative greedy decode is token-for-token identical to vanilla greedy
+(the parity tests pin this bit-for-bit).
+
+This module holds the pure, engine-independent pieces:
+
+  make_draft_params      — params -> low-rank draft params (same tree,
+                           matching GEMM leaves factored at the draft
+                           rank; everything else shared by reference)
+  accept_longest_prefix  — the acceptance rule: longest agreeing draft
+                           prefix + exactly one bonus token per slot
+  merge_rewind           — KV leaves from the post-window state, carry
+                           leaves from the pre-draft snapshot (the
+                           per-family rewind split, see
+                           ModelApi.decode_state_carry)
+
+The engine-side loop (draft steps, verify window, masked replay of the
+accepted prefix) lives in `serving.engine.LMEngine`.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core.compress import FactorizationPlan, to_stage2
+from repro.core.factored import iter_factored_leaves
+from repro.core.svd import TruncationSpec
+
+__all__ = ["accept_longest_prefix", "make_draft_params", "merge_rewind"]
+
+
+def make_draft_params(params: Any, *, rank: Optional[int] = None,
+                      variance: Optional[float] = None,
+                      plan: Optional[FactorizationPlan] = None) -> Any:
+  """Build the self-speculative draft: a stage-2 truncated-SVD copy.
+
+  `rank` pins every matching GEMM to one rank (the `--draft-rank` knob);
+  otherwise `variance` (default 0.9) picks each rank by explained
+  variance, the paper's truncation rule. A custom `plan` overrides both.
+  Leaves the plan does not match — embeddings, tiny GEMMs, non-GEMM
+  arrays — are shared with the target by reference, so the draft costs
+  only the factored copies. Raises if nothing matched: a "draft" that is
+  the target itself would silently claim a perfect accept rate.
+  """
+  if plan is None:
+    spec = TruncationSpec(
+        fixed_rank=rank,
+        variance_threshold=0.9 if variance is None else variance)
+    plan = FactorizationPlan(truncation=spec)
+  draft = to_stage2(params, plan)
+  before = {id(l) for l in iter_factored_leaves(params)}
+  if all(id(l) in before for l in iter_factored_leaves(draft)):
+    raise ValueError(
+        "draft plan matched no GEMM leaf — the draft would be the target "
+        "itself (params may be quantized, or min_dim too high; pass an "
+        "explicit plan or build the draft from the float params)")
+  return draft
+
+
+def accept_longest_prefix(draft_toks, target_argmax
+                          ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+  """Greedy speculative acceptance: longest agreeing prefix + one bonus.
+
+  draft_toks (b, k): the draft's proposals d_1..d_k.
+  target_argmax (b, k+1): the target's greedy choices g_1..g_{k+1} from
+    the verify window over [t_0, d_1..d_k].
+
+  Returns (accept_len (b,), tokens (b, k+1), out_len (b,)):
+    accept_len[i] in [0, k] — longest prefix with d_j == g_j;
+    tokens[i, :out_len[i]] — the accepted drafts followed by exactly one
+      bonus token g_{accept+1} (the target's own next choice), so
+      out_len = accept_len + 1 in [1, k+1]. Entries past out_len are 0.
+
+  Pure numpy, no engine state: every emitted token is, by construction,
+  exactly what vanilla greedy decode would have emitted — acceptance
+  can change only *how many* tokens a step yields, never their values.
+  """
+  draft = np.asarray(draft_toks)
+  tgt = np.asarray(target_argmax)
+  if draft.ndim != 2 or tgt.shape != (draft.shape[0], draft.shape[1] + 1):
+    raise ValueError(
+        f"draft (b, k) and target (b, k+1) required, got {draft.shape} "
+        f"and {tgt.shape}")
+  b, k = draft.shape
+  rows = np.arange(b)
+  if k:
+    match = draft == tgt[:, :k]
+    # np.argmin finds the first False; all-True rows accept everything
+    accept = np.where(match.all(axis=1), k, np.argmin(match, axis=1))
+  else:
+    accept = np.zeros((b,), np.int64)
+  out = np.zeros((b, k + 1), tgt.dtype)
+  if k:
+    keep = np.arange(k)[None, :] < accept[:, None]
+    out[:, :k] = np.where(keep, draft, 0)
+  out[rows, accept] = tgt[rows, accept]
+  return accept.astype(np.int64), out, (accept + 1).astype(np.int64)
+
+
+def merge_rewind(window_state: Any, snapshot: Any, carry: Any) -> Any:
+  """Per-leaf rewind split: carry leaves (`carry` True) restore from the
+  pre-draft `snapshot`; KV / step-invariant leaves keep the post-window
+  value (their rewind is the position counter alone). The result is the
+  state a masked replay of the accepted prefix starts from."""
+  return jax.tree.map(lambda w, s, c: s if c else w,
+                      window_state, snapshot, carry)

@@ -137,6 +137,27 @@ def test_decode_matvec_batch_boundary():
                              atol=2e-4, rtol=2e-4)
 
 
+def test_decode_policy_window_widens_to_contract():
+  """The speculative regime-table extension: a fused verify window
+  presents batch x window rows to one GEMM, so decode_policy(window=w)
+  widens the decode_matvec bound to min(16, b * w) — covering the window
+  rows while never widening past the kernel's 16-row contract."""
+  assert dispatch.decode_policy(2, window=3).decode_batch_max == 6
+  assert dispatch.decode_policy(4, window=4).decode_batch_max == 16
+  assert dispatch.decode_policy(8, window=4).decode_batch_max == 16  # cap
+  assert dispatch.decode_policy(4).decode_batch_max == 4   # default w=1
+  # resolve_policy threads the window through the engine's string form
+  assert dispatch.resolve_policy("pallas", 2,
+                                 window=3).decode_batch_max == 6
+
+  # classification at the widened boundary: b*w rows stay decode_matvec,
+  # one row more is outside the regime
+  w = dense(KEY, 192, 256, name="fc")
+  pol = dispatch.decode_policy(2, window=3)
+  assert dispatch.classify(w, rnd(1, (6, 192)), pol) == "decode_matvec"
+  assert dispatch.classify(w, rnd(2, (7, 192)), pol) == "jnp"
+
+
 def test_quantized_matmul_is_jitted():
   assert hasattr(ops.quantized_matmul, "lower")  # jax.jit wrapper
   x = rnd(11, (4, 128))

@@ -6,6 +6,7 @@ must agree on a PTQ'd tree exactly (same w8a8 arithmetic)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.core.compress import FactorizationPlan, to_stage1
 from repro.core.factored import (FactoredLinear, count_params, dense,
@@ -212,6 +213,48 @@ def test_factored_quantized_serving():
                        kernel_policy="pallas")
   want = _greedy_tokens(LM_CFG, qparams, prompts, steps=4)
   np.testing.assert_array_equal(got, want)
+
+
+def test_quantized_target_with_lowrank_draft():
+  """Quantization x speculation composes token-for-token: a PTQ'd int8
+  target verified against a float low-rank draft (built from the float
+  weights BEFORE PTQ — int8 leaves can't be SVD'd) under the pallas
+  policy emits exactly the vanilla quantized engine's greedy tokens,
+  with both the int8 and lowrank kernels on the hot path."""
+  from repro.serving import make_draft_params
+  params = get_model(LM_CFG).init(jax.random.PRNGKey(0), LM_CFG)
+  qparams = quantize_params(params)
+  draft = make_draft_params(params, rank=128)
+  prompts = np.array([[1, 2], [3, 4], [5, 6]])
+
+  want = _greedy_tokens(LM_CFG, qparams, prompts, steps=8,
+                        kernel_policy="pallas")
+  with dispatch.record_dispatch() as log:
+    eng = LMEngine(LM_CFG, qparams, batch_size=3, max_len=32,
+                   kernel_policy="pallas", speculate=2,
+                   draft_params=draft)
+    out = eng.generate(prompts, steps=8)
+  regimes = {r for _, r in log}
+  assert "int8_gemm" in regimes         # quantized target
+  assert "lowrank_gemm" in regimes      # factored draft
+  np.testing.assert_array_equal(out.tokens, want)
+  # the draft never saw the quantization error, so acceptance is NOT
+  # trivially 1 here — losslessness must hold regardless
+  assert out.accept_rate is not None
+
+
+def test_quantized_params_cannot_seed_a_draft():
+  """Auto-building a draft from a fully-quantized tree must fail loudly
+  instead of silently speculating with the target itself (int8 leaves
+  can't be SVD'd; the LM tree above only dodges this because its stacked
+  scan leaves stay float)."""
+  from repro.serving import make_draft_params
+  params = {"fc": dense(KEY, 128, 128, name="fc"),
+            "out": dense(KEY, 128, 256, name="out")}
+  q = quantize_params(params)
+  assert all(isinstance(l, QuantizedLinear) for l in iter_gemm_leaves(q))
+  with pytest.raises(ValueError, match="matched no GEMM leaf"):
+    make_draft_params(q)
 
 
 def test_speech_server_accepts_quantized_params():

@@ -1,0 +1,287 @@
+"""Lossless self-speculative decoding.
+
+The whole feature is pinned by parity: greedy speculative decode must be
+token-for-token IDENTICAL to vanilla greedy — acceptance only changes how
+many tokens an iteration yields, never their values. The grid covers an
+attention family (qwen3: positional overwrite-rewind) and an SSM hybrid
+(zamba: carry snapshot/replay), both kernel policies, and draft ranks
+from near-full (accept -> 1) to pathologically low (accept -> 0), under
+continuous batching with mixed lengths and slot refill.
+
+Plus: the decode_window == sequential-steps bit-exactness the parity
+rests on, the decode_state_carry contract per family, accept-rate
+accounting (the acceptance criterion), retirement boundaries (EOS /
+budget / max_len) inside a speculative window, draft GEMM kernel
+routing, and the greedy-only guard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels import dispatch
+from repro.models.api import get_model
+from repro.serving import LMEngine, make_draft_params
+
+# mixed prompt lengths + budgets, 2x the slots -> refill mid-run
+PROMPT_LENS = (3, 7, 2, 5, 8, 4)
+BUDGETS = (4, 8, 3, 6, 2, 5)
+
+SANE_RANK = 128        # ~full rank on the 128-dim smoke GEMMs: accept -> 1
+PATHOLOGICAL_RANK = 8  # random-init spectra are flat: accept -> 0
+
+
+def _params_for(arch, **with_kw):
+  cfg = configs.get_smoke(arch).with_(dtype=jnp.float32, **with_kw)
+  api = get_model(cfg)
+  return cfg, api, api.init(jax.random.PRNGKey(0), cfg)
+
+
+def _mixed_requests(vocab):
+  rng = np.random.RandomState(7)
+  return [rng.randint(1, vocab, size=(l,)) for l in PROMPT_LENS]
+
+
+def _run_requests(eng, prompts, budgets):
+  uids = [eng.submit(p, max_new_tokens=n)
+          for p, n in zip(prompts, budgets)]
+  return uids, {f.uid: f for f in eng.run()}
+
+
+def _assert_parity(ref_uids, ref, got_uids, got):
+  for ru, gu in zip(ref_uids, got_uids):
+    np.testing.assert_array_equal(got[gu].tokens, ref[ru].tokens)
+    assert got[gu].finish_reason == ref[ru].finish_reason
+
+
+# ---------------------------------------------------------------------------
+# The foundation: a fused window computes exactly the sequential steps.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "zamba2-7b", "xlstm-350m"])
+def test_decode_window_matches_sequential_steps(arch):
+  """decode_window's scan body is the family's own decode_step, so every
+  window position must be BIT-identical to a lone jitted step — the
+  invariant greedy verification's losslessness rests on."""
+  cfg, api, params = _params_for(arch, vocab_size=64)
+  b, W = 3, 4
+  state = api.init_decode_state(cfg, b, 16)
+  toks = jnp.asarray(np.random.RandomState(0).randint(1, 64, size=(b, W)),
+                     jnp.int32)
+  pos = jnp.zeros((b,), jnp.int32)
+
+  step = jax.jit(lambda p, s, t, q: api.decode_step(p, s, t, q, cfg))
+  st, seq = state, []
+  for t in range(W):
+    lg, st = step(params, st, toks[:, t:t + 1], pos + t)
+    seq.append(np.asarray(lg[:, 0], np.float32))
+
+  lgw, stw = jax.jit(
+      lambda p, s, t, q: api.decode_window(p, s, t, q, cfg))(
+          params, state, toks, pos)
+  np.testing.assert_array_equal(np.stack(seq, 1), np.asarray(lgw))
+  for a, b_ in zip(jax.tree.leaves(st), jax.tree.leaves(stw)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-lite",
+                                  "zamba2-7b", "xlstm-350m",
+                                  "whisper-small", "deepspeech2-wsj"])
+def test_decode_state_carry_contract(arch):
+  """decode_state_carry mirrors the decode-state structure (like the
+  batch-axes contract) and classifies every attention-KV leaf as
+  positionally rewindable."""
+  cfg = configs.get_smoke(arch)
+  api = get_model(cfg)
+  axes = api.decode_state_batch_axes(cfg)
+  carry = api.decode_state_carry(cfg)
+  assert jax.tree.structure(axes) == jax.tree.structure(carry)
+  assert all(isinstance(x, bool) for x in jax.tree.leaves(carry))
+  flat, _ = jax.tree_util.tree_flatten_with_path(carry)
+  for path, is_carry in flat:
+    leaf_name = path[-1].key if path else ""
+    if leaf_name in ("k", "v", "c_kv", "k_rope", "mem"):
+      assert not is_carry, (arch, path)
+
+
+# ---------------------------------------------------------------------------
+# The acceptance grid: speculative greedy == vanilla greedy.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy", [None, "pallas"])
+@pytest.mark.parametrize("rank", [SANE_RANK, PATHOLOGICAL_RANK])
+@pytest.mark.parametrize("arch", ["qwen3-4b", "zamba2-7b"])
+def test_speculative_matches_vanilla_greedy(arch, rank, policy):
+  """Token-for-token parity across family x kernel policy x draft rank,
+  6 mixed-length requests through 3 slots (refill mid-run)."""
+  cfg, _, params = _params_for(arch, vocab_size=64)
+  prompts = _mixed_requests(cfg.vocab_size)
+  kw = dict(batch_size=3, max_len=32, kernel_policy=policy)
+
+  van = LMEngine(cfg, params, **kw)
+  ref_uids, ref = _run_requests(van, prompts, BUDGETS)
+  assert van.decode_steps * 3 > van.busy_slot_steps > 0   # refill happened
+
+  spec = LMEngine(cfg, params, speculate=2,
+                  draft_params=make_draft_params(params, rank=rank), **kw)
+  got_uids, got = _run_requests(spec, prompts, BUDGETS)
+  _assert_parity(ref_uids, ref, got_uids, got)
+  if rank == SANE_RANK:
+    assert spec.accept_rate > 0.5       # the acceptance criterion
+  else:
+    assert spec.accept_rate < 0.5       # ...and parity held regardless
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("k", [1, 3, 4])
+def test_speculative_k_sweep(k):
+  """Parity is independent of the window length."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  prompts = _mixed_requests(cfg.vocab_size)
+  draft = make_draft_params(params, rank=SANE_RANK)
+  van = LMEngine(cfg, params, batch_size=3, max_len=32)
+  ref_uids, ref = _run_requests(van, prompts, BUDGETS)
+  spec = LMEngine(cfg, params, batch_size=3, max_len=32, speculate=k,
+                  draft_params=draft)
+  got_uids, got = _run_requests(spec, prompts, BUDGETS)
+  _assert_parity(ref_uids, ref, got_uids, got)
+  # high acceptance must actually shrink the target's weight passes
+  assert spec.decode_steps < van.decode_steps
+
+
+def test_speculative_xlstm_family():
+  """Fast-tier coverage of the all-carry family (every state leaf
+  snapshot/replayed)."""
+  cfg, _, params = _params_for("xlstm-350m", vocab_size=64)
+  prompts = _mixed_requests(cfg.vocab_size)[:4]
+  budgets = BUDGETS[:4]
+  van = LMEngine(cfg, params, batch_size=2, max_len=32)
+  ref_uids, ref = _run_requests(van, prompts, budgets)
+  spec = LMEngine(cfg, params, batch_size=2, max_len=32, speculate=2,
+                  draft_params=make_draft_params(params, rank=SANE_RANK))
+  got_uids, got = _run_requests(spec, prompts, budgets)
+  _assert_parity(ref_uids, ref, got_uids, got)
+
+
+# ---------------------------------------------------------------------------
+# Retirement boundaries inside a speculative window.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_speculative_eos_mid_window():
+  """EOS inside an accepted window retires at exactly the vanilla step."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  prompts = _mixed_requests(cfg.vocab_size)
+  draft = make_draft_params(params, rank=SANE_RANK)
+
+  probe = LMEngine(cfg, params, batch_size=1, max_len=32)
+  probe.submit(prompts[1], max_new_tokens=8)
+  eos_id = int(probe.run()[0].tokens[2])
+
+  van = LMEngine(cfg, params, batch_size=2, max_len=32, eos_id=eos_id)
+  ref_uids, ref = _run_requests(van, prompts, BUDGETS)
+  spec = LMEngine(cfg, params, batch_size=2, max_len=32, eos_id=eos_id,
+                  speculate=3, draft_params=draft)
+  got_uids, got = _run_requests(spec, prompts, BUDGETS)
+  _assert_parity(ref_uids, ref, got_uids, got)
+  assert "eos" in {ref[u].finish_reason for u in ref_uids}
+
+
+def test_speculative_max_len_boundary():
+  """A window overrunning the cache must not corrupt it: out-of-bounds
+  draft writes fall off (JAX scatter drops them) and the slot retires at
+  the same "max_len" step as vanilla, with identical tokens."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  draft = make_draft_params(params, rank=SANE_RANK)
+  prompt = np.array([1, 2, 3, 4])
+
+  van = LMEngine(cfg, params, batch_size=1, max_len=8)
+  van.submit(prompt, max_new_tokens=100)
+  want = van.run()[0]
+  assert want.finish_reason == "max_len"
+
+  spec = LMEngine(cfg, params, batch_size=1, max_len=8, speculate=4,
+                  draft_params=draft)
+  spec.submit(prompt, max_new_tokens=100)
+  got = spec.run()[0]
+  assert got.finish_reason == "max_len"
+  np.testing.assert_array_equal(got.tokens, want.tokens)
+
+
+# ---------------------------------------------------------------------------
+# Accounting, routing, guards, construction.
+# ---------------------------------------------------------------------------
+
+
+def test_generation_result_accept_rate():
+  """generate() reports the measured accept rate; near-full-rank drafts
+  clear the > 0.5 acceptance criterion, vanilla engines report None."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  prompts = np.array([[1, 2, 3], [4, 5, 6]])
+  spec = LMEngine(cfg, params, batch_size=2, max_len=32, speculate=2,
+                  draft_params=make_draft_params(params, rank=SANE_RANK))
+  out = spec.generate(prompts, steps=8)
+  assert out.accept_rate is not None and out.accept_rate > 0.5
+  assert spec.accept_rate == out.accept_rate
+  assert spec.accepted_tokens <= spec.drafted_tokens
+
+  van = LMEngine(cfg, params, batch_size=2, max_len=32)
+  assert van.generate(prompts, steps=4).accept_rate is None
+  assert van.accept_rate == 0.0
+
+
+def test_draft_gemms_route_through_lowrank_kernel():
+  """Under the pallas policy the draft's factored GEMMs classify as
+  lowrank_gemm while the target's dense steps stay decode_matvec."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  draft = make_draft_params(params, rank=SANE_RANK)
+  with dispatch.record_dispatch() as log:
+    spec = LMEngine(cfg, params, batch_size=2, max_len=32,
+                    kernel_policy="pallas", speculate=2,
+                    draft_params=draft)
+    spec.generate(np.array([[1, 2], [3, 4]]), steps=6)
+  regimes = {r for _, r in log}
+  assert "lowrank_gemm" in regimes      # draft
+  assert "decode_matvec" in regimes     # target window + steps
+
+
+def test_speculative_rejects_temperature():
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  eng = LMEngine(cfg, params, batch_size=1, max_len=16, speculate=2,
+                 draft_params=make_draft_params(params, rank=SANE_RANK))
+  eng.submit(np.array([1, 2]), max_new_tokens=4)
+  with pytest.raises(NotImplementedError, match="greedy-only"):
+    eng.run(temperature=0.5)
+  # generate() validates BEFORE enqueueing: a failed sampled call must
+  # not leave stale copies of its prompts polluting the next run
+  eng.reset()
+  with pytest.raises(NotImplementedError, match="greedy-only"):
+    eng.generate(np.array([[1, 2]]), steps=4, temperature=0.5)
+  assert len(eng._queue) == 0
+  got = eng.generate(np.array([[1, 2]]), steps=4)
+  assert got.tokens.shape == (1, 4)      # only the retried request ran
+
+
+def test_make_draft_params_requires_a_match():
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  from repro.core.compress import FactorizationPlan
+  with pytest.raises(ValueError, match="matched no GEMM leaf"):
+    make_draft_params(params,
+                      plan=FactorizationPlan(include=("no-such-gemm",)))
+
+
+def test_speculative_engine_reset_reproduces():
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  eng = LMEngine(cfg, params, batch_size=2, max_len=32, speculate=2,
+                 draft_params=make_draft_params(params, rank=SANE_RANK))
+  prompts = np.array([[1, 2, 3], [4, 5, 6]])
+  a = eng.generate(prompts, steps=6)
+  eng.reset()
+  b = eng.generate(prompts, steps=6)
+  np.testing.assert_array_equal(a.tokens, b.tokens)
+  assert a.accept_rate == b.accept_rate

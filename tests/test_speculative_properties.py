@@ -1,0 +1,143 @@
+"""Property tests for the speculative-decoding core (hypothesis-gated,
+mirroring test_quant_properties):
+
+  * accept_longest_prefix against a per-row python oracle — accepted
+    prefix + exactly one bonus token, never more than k+1, acceptance
+    maximal;
+  * rewind-then-redecode == never-having-drafted — for ARBITRARY accept
+    lengths 0..k, a state assembled from post-window KV + pre-window
+    carries and re-fed the accepted prefix continues bit-identically to
+    a state that never saw the rejected suffix (both model classes:
+    positional KV and SSM/recurrent carries).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.models.api import get_model
+from repro.serving.speculative import accept_longest_prefix, merge_rewind
+
+VOCAB = 32
+
+
+def _oracle(draft_row, target_row):
+  """Per-row reference: walk the window, accept while agreeing."""
+  accept = 0
+  for d, g in zip(draft_row, target_row):
+    if d != g:
+      break
+    accept += 1
+  out = list(draft_row[:accept]) + [target_row[accept]]
+  return accept, out
+
+
+@settings(deadline=None, max_examples=200)
+@given(st.data())
+def test_accept_longest_prefix_matches_oracle(data):
+  b = data.draw(st.integers(1, 5), label="b")
+  k = data.draw(st.integers(1, 6), label="k")
+  # small alphabet so agreements actually happen
+  toks = st.integers(0, 3)
+  draft = np.array(data.draw(
+      st.lists(st.lists(toks, min_size=k, max_size=k),
+               min_size=b, max_size=b), label="draft"), np.int32)
+  target = np.array(data.draw(
+      st.lists(st.lists(toks, min_size=k + 1, max_size=k + 1),
+               min_size=b, max_size=b), label="target"), np.int32)
+
+  accept, out, out_len = accept_longest_prefix(draft, target)
+  assert accept.shape == out_len.shape == (b,)
+  assert out.shape == (b, k + 1)
+  for i in range(b):
+    want_accept, want_out = _oracle(draft[i], target[i])
+    assert accept[i] == want_accept
+    assert out_len[i] == want_accept + 1 <= k + 1
+    assert list(out[i, :out_len[i]]) == want_out
+    assert (out[i, out_len[i]:] == 0).all()
+    # maximality: everything accepted agrees; the first rejection (if
+    # any) disagrees — the bonus token is the target's own choice there
+    assert (draft[i, :accept[i]] == target[i, :accept[i]]).all()
+    if accept[i] < k:
+      assert draft[i, accept[i]] != target[i, accept[i]]
+    assert out[i, accept[i]] == target[i, accept[i]]
+
+
+def test_accept_longest_prefix_validates_shapes():
+  with pytest.raises(ValueError, match="b, k"):
+    accept_longest_prefix(np.zeros((2, 3)), np.zeros((2, 3)))
+  with pytest.raises(ValueError, match="b, k"):
+    accept_longest_prefix(np.zeros((3,)), np.zeros((3, 4)))
+
+
+# ---------------------------------------------------------------------------
+# Rewind-then-redecode == never-having-drafted.
+# ---------------------------------------------------------------------------
+
+
+def _family_fixture(arch):
+  cfg = configs.get_smoke(arch).with_(dtype=jnp.float32, vocab_size=VOCAB)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  step = jax.jit(lambda p, s, t, q: api.decode_step(p, s, t, q, cfg))
+  window = jax.jit(lambda p, s, t, q: api.decode_window(p, s, t, q, cfg))
+  return cfg, api, params, step, window
+
+
+_FIXTURES = {}
+
+
+def _fixture(arch):
+  if arch not in _FIXTURES:
+    _FIXTURES[arch] = _family_fixture(arch)
+  return _FIXTURES[arch]
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "zamba2-7b"])
+@settings(deadline=None, max_examples=8)
+@given(accept_len=st.integers(0, 3), seed=st.integers(0, 2 ** 16))
+def test_rewind_then_redecode_equals_never_drafted(arch, accept_len, seed):
+  """Window k = 3: decode a 4-token window, rewind to an arbitrary
+  accepted length, re-feed the accepted prefix, then decode 2 probe
+  tokens — logits and state must be BIT-identical to a run that fed only
+  the accepted prefix sequentially (no window, no rejected suffix)."""
+  cfg, api, params, step, window = _fixture(arch)
+  b, k = 2, 3
+  rng = np.random.RandomState(seed)
+  state0 = api.init_decode_state(cfg, b, 16)
+  pos = jnp.zeros((b,), jnp.int32)
+
+  # consume a short committed history first (positions 0..1)
+  for t in range(2):
+    hist = jnp.asarray(rng.randint(1, VOCAB, size=(b, 1)), jnp.int32)
+    _, state0 = step(params, state0, hist, pos + t)
+  pos = pos + 2
+  lens = accept_len + 1                 # window tokens consumed on commit
+
+  toks = jnp.asarray(rng.randint(1, VOCAB, size=(b, k + 1)), jnp.int32)
+  probes = jnp.asarray(rng.randint(1, VOCAB, size=(b, 2)), jnp.int32)
+
+  # speculative path: full window, then rewind (post-window KV +
+  # pre-window carries) and re-feed the accepted prefix sequentially
+  _, state_w = window(params, state0, toks, pos)
+  carry = api.decode_state_carry(cfg)
+  st_spec = merge_rewind(state_w, state0, carry)
+  for t in range(lens):
+    lg_spec, st_spec = step(params, st_spec, toks[:, t:t + 1], pos + t)
+
+  # reference path: only ever feeds the accepted prefix
+  st_ref = state0
+  for t in range(lens):
+    lg_ref, st_ref = step(params, st_ref, toks[:, t:t + 1], pos + t)
+  np.testing.assert_array_equal(np.asarray(lg_spec), np.asarray(lg_ref))
+
+  # both continue identically: the rejected suffix left no trace
+  p2 = pos + lens
+  for t in range(2):
+    lg_spec, st_spec = step(params, st_spec, probes[:, t:t + 1], p2 + t)
+    lg_ref, st_ref = step(params, st_ref, probes[:, t:t + 1], p2 + t)
+    np.testing.assert_array_equal(np.asarray(lg_spec), np.asarray(lg_ref))
