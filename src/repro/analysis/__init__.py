@@ -1,0 +1,83 @@
+"""repro.analysis: static auditor for the serving hot path.
+
+`run_audit` traces the canonical jitted programs of every requested
+(config x policy x quant x program) coordinate — without executing them
+— and checks the invariant registry (`report.CHECKS`) against the jaxpr
+and optimized HLO:
+
+  dispatch_coverage   every weight GEMM routed through kernels.dispatch
+  quant_integrity     no int8 weight dequantized in a PTQ'd trace
+  retrace_stability   engine compiles each signature exactly once
+  transfer_lint       no host round-trips; donation actually aliases
+  sharding_coverage   every production param leaf has a sharding rule
+
+Findings diff against the committed allowlist (`baseline.json`); any
+ident not in it is a regression. CLI: `python -m repro.analysis audit`.
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+import jax
+
+from repro import configs
+from repro.analysis import checks, lifecycle
+from repro.analysis.report import (AuditReport, CHECKS, Finding,
+                                   default_baseline_path, load_baseline,
+                                   stable_key, write_baseline)
+from repro.analysis.targets import (DEFAULT_CONFIGS, POLICIES, PROGRAMS,
+                                    QUANTS, iter_targets, normalize_config)
+from repro.configs import specs
+from repro.quant.ptq import quantize_params
+
+__all__ = [
+    "AuditReport", "CHECKS", "Finding", "run_audit", "iter_targets",
+    "load_baseline", "write_baseline", "default_baseline_path",
+    "stable_key", "DEFAULT_CONFIGS", "POLICIES", "QUANTS", "PROGRAMS",
+]
+
+
+def _sharding_findings(config_names, report: AuditReport) -> None:
+  """sharding_coverage runs at PRODUCTION scale (configs.get_config):
+  rule gaps hide at smoke dims, where nothing is divisible anyway."""
+  for name in config_names:
+    name = normalize_config(name)
+    cfg = configs.get_config(name)
+    params = specs.param_specs(cfg)
+    report.extend(checks.check_sharding_coverage(name, params, "float"))
+    qparams = jax.eval_shape(quantize_params, params)
+    quants = ["float"]
+    if any(str(l.dtype) == "int8" for l in jax.tree.leaves(qparams)):
+      report.extend(checks.check_sharding_coverage(name, qparams, "int8"))
+      quants.append("int8")
+    for q in quants:
+      report.targets.append(dict(
+          config=name, policy="-", quant=q, program="params",
+          n_param_leaves=len(jax.tree.leaves(params))))
+
+
+def run_audit(config_names: Iterable[str] = DEFAULT_CONFIGS,
+              policies: Iterable[str] = POLICIES,
+              quants: Iterable[str] = QUANTS,
+              programs: Iterable[str] = PROGRAMS,
+              *, deep: bool = False, run_lifecycle: bool = True,
+              run_sharding: bool = True) -> AuditReport:
+  """Trace + check the requested grid; baseline NOT applied (caller's
+  job, so tests can assert on raw findings)."""
+  config_names = [normalize_config(n) for n in config_names]
+  report = AuditReport(meta=dict(
+      configs=list(config_names), policies=list(policies),
+      quants=list(quants), programs=list(programs), deep=deep,
+      jax_version=jax.__version__, checks=list(CHECKS)))
+  for target in iter_targets(config_names, policies, quants, programs,
+                             deep=deep):
+    findings, info = checks.run_target_checks(target)
+    report.extend(findings)
+    report.targets.append(info)
+  if run_lifecycle:
+    lf, infos = lifecycle.check_retrace_stability(config_names, policies)
+    report.extend(lf)
+    report.targets.extend(infos)
+  if run_sharding:
+    _sharding_findings(config_names, report)
+  return report

@@ -1,0 +1,71 @@
+"""CLI: `python -m repro.analysis audit [...]`.
+
+Exit status is the CI contract: 0 when every finding is allowlisted in
+the baseline, 1 when any NEW finding appears (a hot-path regression).
+
+  # fast CI gate (two families, both kernel policies)
+  python -m repro.analysis audit --configs qwen3_4b,zamba2_7b
+
+  # full grid + report artifact
+  python -m repro.analysis audit --report audit.json
+
+  # accept current findings as known debt (then review + commit)
+  python -m repro.analysis audit --write-baseline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import (DEFAULT_CONFIGS, POLICIES, PROGRAMS, QUANTS,
+                            load_baseline, run_audit, write_baseline)
+from repro.analysis.report import default_baseline_path
+
+
+def _csv(text: str) -> list:
+  return [t.strip() for t in text.split(",") if t.strip()]
+
+
+def main(argv=None) -> int:
+  parser = argparse.ArgumentParser(prog="python -m repro.analysis")
+  sub = parser.add_subparsers(dest="cmd", required=True)
+  audit = sub.add_parser("audit", help="trace + check the serving grid")
+  audit.add_argument("--configs", type=_csv,
+                     default=list(DEFAULT_CONFIGS),
+                     help="comma list (underscores ok): qwen3_4b,...")
+  audit.add_argument("--policies", type=_csv, default=list(POLICIES))
+  audit.add_argument("--quants", type=_csv, default=list(QUANTS))
+  audit.add_argument("--programs", type=_csv, default=list(PROGRAMS))
+  audit.add_argument("--baseline", default=None,
+                     help=f"allowlist path (default: "
+                          f"{default_baseline_path()})")
+  audit.add_argument("--report", default=None,
+                     help="write the full JSON report here")
+  audit.add_argument("--write-baseline", action="store_true",
+                     help="accept all current findings as known debt")
+  audit.add_argument("--deep", action="store_true",
+                     help="lower+compile window/prefill/train too")
+  audit.add_argument("--no-lifecycle", action="store_true",
+                     help="skip the (executing) retrace-stability check")
+  audit.add_argument("--no-sharding", action="store_true",
+                     help="skip production-scale sharding coverage")
+  args = parser.parse_args(argv)
+
+  report = run_audit(args.configs, args.policies, args.quants,
+                     args.programs, deep=args.deep,
+                     run_lifecycle=not args.no_lifecycle,
+                     run_sharding=not args.no_sharding)
+  if args.write_baseline:
+    path = args.baseline or default_baseline_path()
+    base = write_baseline(report, path)
+    print(f"wrote {len(base['allow'])} allowlist entries to {path}")
+    return 0
+  report.apply_baseline(load_baseline(args.baseline))
+  if args.report:
+    report.save(args.report)
+  print(report.summary())
+  return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+  sys.exit(main())

@@ -1,0 +1,212 @@
+"""The invariant registry: per-target jaxpr/HLO checks + param coverage.
+
+Each checker takes a TraceTarget (plus its WalkResult where relevant)
+and returns Findings. `run_target_checks` is the per-trace entry point;
+`check_sharding_coverage` runs once per config over the *production*
+param specs (divisibility against a real topology is where rule gaps
+show — smoke dims divide everything or nothing).
+
+Check semantics:
+
+dispatch_coverage — every dot_general in a serving trace must sit under
+  a `dispatch:{regime}:c{id}` scope whose id correlates to a
+  DispatchRecord of the same regime captured while tracing. A dot with
+  no scope is only clean if neither operand is parameter-derived
+  (activation x activation / activation x cache contractions — attention
+  scores, SSM scans — are intrinsic math, not weight GEMMs).
+
+quant_integrity — in a PTQ'd trace, no value derived from an int8
+  weight leaf may be converted to a floating dtype: that is a
+  dequantize, and one of them silently reverts the paper's w8a8 win to
+  float math with extra traffic. int8 -> int32 accumulation is legal.
+
+transfer_lint — (a) no host-callback/transfer primitive in the traced
+  program; (b) donated buffers actually donate: the StableHLO must carry
+  one `tf.aliasing_output` attribute per donated state leaf (XLA drops
+  mismatched aliases silently, turning an in-place cache update into a
+  full copy per step); (c) the optimized HLO contains no
+  infeed/outfeed/send/recv or host-callback custom-calls; (d) any
+  `CostReport.unknown_ops` the hlo_cost parser reports are surfaced.
+
+sharding_coverage — every param leaf must resolve to an explicit
+  PARAM_RULES kind (or the embedding-table path rule) that actually
+  shards it on the audit mesh. Big replicated weights are findings:
+  either the rule table has a gap (unruled raw leaf — QuantizedLinear
+  fields land here today) or divisibility gated the split off on a
+  production topology (e.g. an odd vocab).
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis import jaxpr_walk
+from repro.analysis.report import Finding, stable_key
+from repro.analysis.targets import TraceTarget
+from repro.dist import hlo_cost
+from repro.dist.sharding import rule_coverage
+
+#: replicated param leaves at or above this many elements are findings
+BIG_PARAM_ELEMS = 1 << 16
+
+#: HLO opcodes / custom-call markers that imply a host round-trip
+_HLO_HOST_OPS = ("infeed", "outfeed", "send", "recv", "send-done",
+                 "recv-done")
+_HLO_HOST_CALL_MARKERS = ("callback", "xla_ffi_python", "CallbackCustom")
+
+
+def _f(target: TraceTarget, check: str, key: str, detail: str) -> Finding:
+  return Finding(check=check, config=target.config, policy=target.policy,
+                 quant=target.quant, program=target.program,
+                 key=stable_key(key), detail=detail)
+
+
+def check_dispatch_coverage(target: TraceTarget,
+                            walk: jaxpr_walk.WalkResult) -> List[Finding]:
+  if target.policy == "-":
+    return []        # train traces thread no policy: nothing to correlate
+  by_id = {r.call_id: r for r in target.dispatch_log}
+  out = []
+  for dot in walk.dots:
+    scope = dot.dispatch_scope()
+    if scope is not None:
+      regime, cid = scope
+      rec = by_id.get(cid)
+      if rec is None:
+        out.append(_f(
+            target, "dispatch_coverage",
+            f"uncorrelated:{dot.name_stack}:{dot.shapes}",
+            f"dot under dispatch scope c{cid} but no DispatchRecord with "
+            f"that id was captured while tracing (stale jit cache?)"))
+      elif rec.regime != regime:
+        out.append(_f(
+            target, "dispatch_coverage",
+            f"regime-mismatch:{dot.name_stack}:{dot.shapes}",
+            f"scope says {regime!r} but the recorded decision for "
+            f"{rec.name!r} (c{cid}) was {rec.regime!r}"))
+    elif any(dot.param_operands):
+      out.append(_f(
+          target, "dispatch_coverage",
+          f"unrouted:{dot.name_stack}:{dot.shapes}",
+          f"parameter-consuming dot_general {dot.shapes} outside any "
+          f"dispatch scope: this GEMM bypasses kernels.dispatch.gemm and "
+          f"can never route to the paper's serving kernels"))
+  return out
+
+
+def check_quant_integrity(target: TraceTarget,
+                          walk: jaxpr_walk.WalkResult) -> List[Finding]:
+  if target.quant != "int8":
+    return []
+  return [
+      _f(target, "quant_integrity",
+         f"dequantize:{c.name_stack}:{c.shape}->{c.dst_dtype}",
+         f"int8 weight leaf widened to {c.dst_dtype} (shape {c.shape}): "
+         f"a dequantize in the PTQ'd hot path — the stored-scale w8a8 "
+         f"contract requires weights to stay int8 until accumulation")
+      for c in walk.int8_converts
+  ]
+
+
+def check_transfer_lint(target: TraceTarget,
+                        walk: jaxpr_walk.WalkResult) -> List[Finding]:
+  out = [
+      _f(target, "transfer_lint",
+         f"host-prim:{p.prim}:{p.name_stack}",
+         f"host/transfer primitive {p.prim!r} traced into the program — "
+         f"a device<->host round-trip inside the hot loop")
+      for p in walk.host_prims
+  ]
+  if target.n_donated and target.lowered_text is not None:
+    aliased = target.lowered_text.count("tf.aliasing_output")
+    if aliased < target.n_donated:
+      out.append(_f(
+          target, "transfer_lint",
+          f"donation-dropped:{aliased}/{target.n_donated}",
+          f"only {aliased} of {target.n_donated} donated state leaves "
+          f"carry tf.aliasing_output in the lowered module: the rest "
+          f"copy instead of updating in place (dtype/shape mismatch "
+          f"between a state input and its output?)"))
+  if target.compiled_text is not None:
+    out.extend(_hlo_findings(target))
+  return out
+
+
+def _hlo_findings(target: TraceTarget) -> List[Finding]:
+  out = []
+  comps, _ = hlo_cost._parse_computations(target.compiled_text)
+  for name, instrs in comps.items():
+    for ins in instrs:
+      if ins.opcode in _HLO_HOST_OPS:
+        out.append(_f(
+            target, "transfer_lint", f"hlo-host-op:{ins.opcode}:{name}",
+            f"optimized HLO contains {ins.opcode!r} in computation "
+            f"{name!r}: a host transfer survived compilation"))
+      elif ins.opcode == "custom-call" and any(
+          m in ins.attrs or m in ins.operands
+          for m in _HLO_HOST_CALL_MARKERS):
+        out.append(_f(
+            target, "transfer_lint", f"hlo-callback:{name}",
+            f"optimized HLO custom-call in {name!r} targets a host "
+            f"callback"))
+  rep = hlo_cost.analyze_module(target.compiled_text)
+  for token, count in sorted(rep.unknown_ops.items()):
+    out.append(_f(
+        target, "transfer_lint", f"hlo-unknown:{token}",
+        f"hlo_cost could not fully account {count} instruction(s) "
+        f"({token}): cost figures for this program under-count"))
+  return out
+
+
+def check_sharding_coverage(config: str, params,
+                            quant: str = "float") -> List[Finding]:
+  """Rule coverage over one config's (production-scale) param tree."""
+  out = []
+  for e in rule_coverage(params):
+    big = e["size"] >= BIG_PARAM_ELEMS and len(e["shape"]) >= 2
+    if e["name"] is not None:
+      if big and not e["sharded"]:
+        out.append(Finding(
+            check="sharding_coverage", config=config, quant=quant,
+            program="params",
+            key=f"unsharded:{e['name']}:{e['field']}:{e['shape']}",
+            detail=(f"GEMM leaf {e['name']!r} ({e['field']}, shape "
+                    f"{e['shape']}, rule {e['rule']!r}) replicates on the "
+                    f"audit mesh: its split was divisibility-gated off")))
+    elif e["rule"] is None and big:
+      out.append(Finding(
+          check="sharding_coverage", config=config, quant=quant,
+          program="params",
+          key=f"unruled:{e['path']}:{e['shape']}",
+          detail=(f"raw param leaf {e['path']!r} (shape {e['shape']}, "
+                  f"{e['size']} elems) matches no PARAM_RULES glob or "
+                  f"path rule and replicates everywhere")))
+    elif e["rule"] is not None and big and not e["sharded"]:
+      out.append(Finding(
+          check="sharding_coverage", config=config, quant=quant,
+          program="params",
+          key=f"unsharded:{e['path']}:{e['shape']}",
+          detail=(f"path-ruled leaf {e['path']!r} ({e['rule']}) "
+                  f"replicates on the audit mesh (divisibility)")))
+  return out
+
+
+def run_target_checks(target: TraceTarget) -> tuple:
+  """All per-trace checks for one target. Returns (findings, info) where
+  info is the target's report metadata (coverage counts, unknown ops)."""
+  walk = jaxpr_walk.walk(target.jaxpr, target.n_params,
+                         target.int8_param_idx)
+  findings: List[Finding] = []
+  findings.extend(check_dispatch_coverage(target, walk))
+  findings.extend(check_quant_integrity(target, walk))
+  findings.extend(check_transfer_lint(target, walk))
+  scoped = sum(1 for d in walk.dots if d.dispatch_scope() is not None)
+  info = dict(target.coord)
+  info.update(
+      n_eqns=walk.n_eqns, n_dots=len(walk.dots), n_dots_scoped=scoped,
+      n_dispatch_records=len(target.dispatch_log),
+      regimes=sorted({r.regime for r in target.dispatch_log}),
+      n_findings=len(findings))
+  if target.compiled_text is not None:
+    info["hlo_unknown_ops"] = dict(
+        hlo_cost.analyze_module(target.compiled_text).unknown_ops)
+  return findings, info

@@ -1,0 +1,110 @@
+"""Retrace-stability: the engine's jit caches after a real serve cycle.
+
+Unlike the other checks this one must *execute* (tiny, smoke-scale,
+batch 2, a handful of tokens): jit cache sizes only exist after calls.
+The scenario is chosen to exercise every lifecycle edge that could
+silently re-trace:
+
+  * two prompt lengths in different pow2 buckets (admission prefill
+    compiles per bucket — that is the contract, counted not flagged),
+  * more requests than slots with tiny budgets, forcing retire ->
+    refill-from-queue (insert_slot + a second admission prefill), and
+  * enough decode steps that any shape drift in the donated state
+    signature would show up as step cache > 1.
+
+Invariants, per `LMEngine.compile_stats`:
+
+  step == 1                                  one decode signature, ever
+  prefill == len(prefill_buckets)            bucketed, nothing beyond
+  replay, window, insert each <= 1           auxiliary programs stable
+
+A -1 from compile_stats means the runtime does not expose jit cache
+sizes; the check is skipped (reported in target info), never failed.
+
+Families: the three token-driven LMs (qwen3, zamba2, xlstm). Whisper
+decodes against encoder memory the engine does not synthesize and
+deepspeech serves frame-synchronously through StreamingServer — neither
+runs the engine lifecycle under audit here.
+"""
+from __future__ import annotations
+
+from typing import Iterable, List, Tuple
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.analysis.report import Finding
+from repro.analysis.targets import normalize_config
+from repro.models.api import get_model
+from repro.serving.engine import LMEngine
+
+#: configs whose family runs the full LMEngine lifecycle
+LIFECYCLE_CONFIGS = ("qwen3-4b", "zamba2-7b", "xlstm-350m")
+
+_VOCAB = 64
+_BATCH = 2
+_MAX_LEN = 16
+#: lengths 3 and 6 pad into distinct pow2 buckets (4 and 8)
+_PROMPT_LENS = (3, 6, 3)
+_BUDGET = 3
+
+
+def _serve_cycle(cfg, params, policy: str) -> dict:
+  eng = LMEngine(cfg, params, batch_size=_BATCH, max_len=_MAX_LEN,
+                 kernel_policy=None if policy == "jnp" else policy)
+  rs = np.random.RandomState(0)
+  for n in _PROMPT_LENS:      # 3 requests, 2 slots -> retire + refill
+    eng.submit(rs.randint(1, _VOCAB, size=(n,)), max_new_tokens=_BUDGET)
+  done = eng.run()
+  assert len(done) == len(_PROMPT_LENS)
+  return eng.compile_stats()
+
+
+def check_retrace_stability(
+    config_names: Iterable[str],
+    policies: Iterable[str]) -> Tuple[List[Finding], List[dict]]:
+  """Run the serve cycle for every requested lifecycle-capable config x
+  policy; return (findings, per-run info rows)."""
+  findings: List[Finding] = []
+  infos: List[dict] = []
+  for name in config_names:
+    name = normalize_config(name)
+    if name not in LIFECYCLE_CONFIGS:
+      continue
+    cfg = configs.get_smoke(name).with_(vocab_size=_VOCAB)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+
+    for policy in policies:
+      stats = _serve_cycle(cfg, params, policy)
+      info = dict(config=name, policy=policy, quant="-",
+                  program="lifecycle", compile_stats=stats)
+      infos.append(info)
+
+      def fail(key: str, detail: str) -> None:
+        findings.append(Finding(
+            check="retrace_stability", config=name, policy=policy,
+            program="lifecycle", key=key, detail=detail))
+
+      if stats["step"] < 0:
+        info["skipped"] = "jit cache sizes unavailable on this runtime"
+        continue
+      if stats["step"] != 1:
+        fail(f"step-cache:{stats['step']}",
+             f"decode step compiled {stats['step']} signatures across a "
+             f"serve cycle (admit/decode/retire/refill) — the donated "
+             f"state shape is not stable")
+      n_buckets = len(stats["prefill_buckets"])
+      if stats["prefill"] != n_buckets:
+        fail(f"prefill-cache:{stats['prefill']}/buckets:{n_buckets}",
+             f"prefill compiled {stats['prefill']} signatures but only "
+             f"{n_buckets} (batch, bucket) shapes were admitted "
+             f"({stats['prefill_buckets']}): a prompt shape escaped "
+             f"bucketing")
+      for prog in ("replay", "window", "insert", "draft_step0"):
+        n = stats.get(prog, 0)
+        if n > 1:
+          fail(f"{prog}-cache:{n}",
+               f"auxiliary program {prog!r} compiled {n} signatures in "
+               f"one serve cycle")
+  return findings, infos

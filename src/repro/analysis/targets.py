@@ -1,0 +1,200 @@
+"""Trace harness: the canonical jitted programs, traced — never executed.
+
+One TraceTarget = one (config, policy, quant, program) coordinate:
+
+  program   built from                         traced as
+  decode    ModelApi.decode_step               jaxpr + StableHLO +
+            (donated state, the engine's step) optimized HLO
+  window    ModelApi.decode_window             jaxpr
+  prefill   serving.engine.make_prefill_program jaxpr
+            (the engine's real fused prefill)
+  train     ModelApi.loss_fn                   jaxpr (float/jnp only —
+                                               loss_fn takes no policy)
+
+Everything is abstract: params come from `configs.param_specs` (an
+eval_shape over init), decode state from an eval_shape over
+`init_decode_state`, quantized trees from an eval_shape over
+`quant.quantize_params` — zero FLOPs, zero device allocation. Tracing
+happens inside `dispatch.record_dispatch()`, so each target carries the
+DispatchRecords whose call ids the jaxpr's `dispatch:...` scopes refer
+to. `.lower()` / `.compile()` run OUTSIDE the recorder (they re-trace
+with fresh ids); only the jaxpr from `make_jaxpr` is id-correlated.
+
+Smoke configs (`configs.get_smoke`) keep tracing/compiling CPU-cheap;
+the program *structure* under audit — dispatch routing, dtype flow,
+donation — is identical to the production configs by construction (same
+model code, same policy objects).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Iterable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import specs
+from repro.kernels import dispatch
+from repro.layers.common import ShapeConfig, identity_constraint
+from repro.models.api import get_model
+from repro.quant.ptq import quantize_params
+from repro.serving.engine import make_prefill_program
+
+#: the five model families, one production config each
+DEFAULT_CONFIGS = ("qwen3-4b", "zamba2-7b", "xlstm-350m", "whisper-small",
+                   "deepspeech2-wsj")
+POLICIES = ("jnp", "pallas")
+QUANTS = ("float", "int8")
+PROGRAMS = ("decode", "window", "prefill", "train")
+
+#: audit trace geometry — small, pow2, CPU-trivial
+BATCH = 2
+MAX_LEN = 16
+WINDOW = 3
+PROMPT_LEN = 8
+TRAIN_SEQ = 64
+
+
+def normalize_config(name: str) -> str:
+  """CLI convenience: qwen3_4b -> qwen3-4b."""
+  hyphen = name.replace("_", "-")
+  if hyphen in configs._MODULES:
+    return hyphen
+  return name
+
+
+@dataclasses.dataclass
+class TraceTarget:
+  config: str
+  family: str
+  policy: str                    # "jnp" | "pallas" | "-"
+  quant: str                     # "float" | "int8" | "-"
+  program: str
+  jaxpr: Any                     # ClosedJaxpr
+  dispatch_log: list             # DispatchRecords captured while tracing
+  n_params: int                  # flattened param-leaf count (leading invars)
+  int8_param_idx: frozenset      # positions of int8 leaves within those
+  n_donated: int                 # donated-arg leaf count (0: no donation)
+  lowered_text: Optional[str]    # StableHLO (donation check)
+  compiled_text: Optional[str]   # optimized HLO (HLO checks)
+
+  @property
+  def coord(self) -> dict:
+    return dict(config=self.config, policy=self.policy, quant=self.quant,
+                program=self.program)
+
+
+def _flat_with_int8(tree) -> tuple:
+  leaves = jax.tree.leaves(tree)
+  idx = frozenset(i for i, l in enumerate(leaves)
+                  if jnp.dtype(l.dtype) == jnp.int8)
+  return leaves, idx
+
+
+def _trace(fn, args, *, donate=(), lower=False, compile_=False):
+  with dispatch.record_dispatch() as log:
+    closed = jax.make_jaxpr(fn)(*args)
+  lowered_text = compiled_text = None
+  if lower or compile_:
+    lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+    lowered_text = lowered.as_text()
+    if compile_:
+      compiled_text = lowered.compile().as_text()
+  return closed, list(log), lowered_text, compiled_text
+
+
+def iter_targets(config_names: Iterable[str] = DEFAULT_CONFIGS,
+                 policies: Iterable[str] = POLICIES,
+                 quants: Iterable[str] = QUANTS,
+                 programs: Iterable[str] = PROGRAMS,
+                 *, deep: bool = False) -> Iterator[TraceTarget]:
+  """Yield every TraceTarget of the requested grid.
+
+  `deep` extends lowering+compilation (default: decode only — the hot
+  path) to the window/prefill/train programs too."""
+  for name in config_names:
+    name = normalize_config(name)
+    cfg = configs.get_smoke(name)
+    api = get_model(cfg)
+    cs = identity_constraint
+    # fresh traces for every inner module-level jit (ops wrappers): a warm
+    # cache would splice stale name stacks into this audit's jaxprs
+    dispatch.clear_jit_caches()
+
+    params_by_quant = {"float": specs.param_specs(cfg)}
+    state_sds = jax.eval_shape(
+        lambda: api.init_decode_state(cfg, BATCH, MAX_LEN))
+    n_state = len(jax.tree.leaves(state_sds))
+    decode_in = specs.input_specs(
+        cfg, ShapeConfig("audit_decode", "decode", MAX_LEN, BATCH))
+    if cfg.family == "deepspeech":
+      x = decode_in["x_t"]
+      tok = jax.ShapeDtypeStruct((BATCH, 1) + x.shape[1:], x.dtype)
+      win_tok = jax.ShapeDtypeStruct((BATCH, WINDOW) + x.shape[1:], x.dtype)
+    else:
+      tok = decode_in["token"]
+      win_tok = jax.ShapeDtypeStruct((BATCH, WINDOW), jnp.int32)
+    pos = jax.ShapeDtypeStruct((BATCH,), jnp.int32)
+
+    for quant in quants:
+      if quant == "int8" and quant not in params_by_quant:
+        params_by_quant["int8"] = jax.eval_shape(
+            functools.partial(quantize_params), params_by_quant["float"])
+      params = params_by_quant[quant]
+      flat, int8_idx = _flat_with_int8(params)
+      n_params = len(flat)
+      if quant == "int8" and not int8_idx:
+        continue    # nothing quantized at this scale: target is vacuous
+
+      for policy in policies:
+        pol = (dispatch.JNP_ONLY if policy == "jnp"
+               else dispatch.decode_policy(BATCH))
+
+        if "decode" in programs:
+          def decode(p, s, t, ps):
+            return api.decode_step(p, s, t, ps, cfg, cs, pol)
+          closed, log, low, comp = _trace(
+              decode, (params, state_sds, tok, pos), donate=(1,),
+              lower=True, compile_=True)
+          yield TraceTarget(name, cfg.family, policy, quant, "decode",
+                            closed, log, n_params, int8_idx, n_state,
+                            low, comp)
+
+        if "window" in programs:
+          def window(p, s, t, ps):
+            return api.decode_window(p, s, t, ps, cfg, cs, pol)
+          closed, log, low, comp = _trace(
+              window, (params, state_sds, win_tok, pos), donate=(1,),
+              lower=deep, compile_=deep)
+          yield TraceTarget(name, cfg.family, policy, quant, "window",
+                            closed, log, n_params, int8_idx,
+                            n_state if deep else 0, low, comp)
+
+        if "prefill" in programs and cfg.family != "deepspeech":
+          # token-driven only: DS2 prefills frame-synchronously through
+          # the streaming server, not the engine's fused prompt scan
+          prefill = make_prefill_program(
+              api, cfg, cs, pol, api.decode_state_batch_axes(cfg))
+          prompts = jax.ShapeDtypeStruct((BATCH, PROMPT_LEN), jnp.int32)
+          plens = jax.ShapeDtypeStruct((BATCH,), jnp.int32)
+          closed, log, low, comp = _trace(
+              prefill, (params, state_sds, prompts, plens, pos),
+              lower=deep, compile_=deep)
+          yield TraceTarget(name, cfg.family, policy, quant, "prefill",
+                            closed, log, n_params, int8_idx, 0, low, comp)
+
+    if "train" in programs:
+      # loss_fn threads no KernelPolicy (training is the always-jnp
+      # surface), so the train trace has one coordinate: float x jnp
+      params = params_by_quant["float"]
+      flat, int8_idx = _flat_with_int8(params)
+      batch_sds = specs.input_specs(
+          cfg, ShapeConfig("audit_train", "train", TRAIN_SEQ, BATCH))
+      def train(p, b):
+        return api.loss_fn(p, b, cfg, cs)
+      closed, log, low, comp = _trace(
+          train, (params, batch_sds), lower=deep, compile_=deep)
+      yield TraceTarget(name, cfg.family, "-", "float", "train",
+                        closed, log, len(flat), int8_idx, 0, low, comp)

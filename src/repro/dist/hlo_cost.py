@@ -36,6 +36,8 @@ _DTYPE_BYTES = {
     "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
     "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
     "f8e5m2fnuz": 1,
+    # zero-byte marker types (control-flow plumbing, not data)
+    "token": 0, "opaque": 0,
 }
 
 _SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
@@ -117,6 +119,14 @@ class CostReport:
   n_collectives: int = 0
   collective_by_kind: dict = dataclasses.field(default_factory=dict)
   hbm_by_shape: dict = dataclasses.field(default_factory=dict)
+  #: {token: count} of things the parser could not fully account —
+  #: "<unparsed>" for instruction lines _split_instr rejected (their
+  #: bytes are still counted, as generic traffic from every shape token
+  #: on the line) and "dtype:<name>" for dtypes missing from
+  #: _DTYPE_BYTES (whose arrays contribute zero bytes). Audit tooling
+  #: (repro.analysis) surfaces this so parser gaps are visible instead
+  #: of silently under-counting.
+  unknown_ops: dict = dataclasses.field(default_factory=dict)
 
   def add(self, other: "CostReport", mult: float = 1.0) -> None:
     self.flops += other.flops * mult
@@ -130,6 +140,8 @@ class CostReport:
                                     + v * mult)
     for k, v in other.hbm_by_shape.items():
       self.hbm_by_shape[k] = self.hbm_by_shape.get(k, 0.0) + v * mult
+    for k, v in other.unknown_ops.items():
+      self.unknown_ops[k] = self.unknown_ops.get(k, 0) + int(v * mult)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -177,6 +189,9 @@ class _Instr:
   attrs: str                       # text after the closing paren
   line: str
 
+
+#: sentinel opcode for instruction lines `_split_instr` could not parse
+_UNPARSED = "<unparsed>"
 
 _HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\{\s*$")
 _CALLED_RE = {
@@ -241,6 +256,12 @@ def _parse_computations(text: str) -> tuple[dict, Optional[str]]:
       current = None
     else:
       ins = _split_instr(line)
+      if ins is None and " = " in line:
+        # An instruction line the splitter rejected. Keep it as a sentinel
+        # so the cost walk can count its shape tokens as generic traffic
+        # (and report it) instead of dropping it on the floor.
+        ins = _Instr(opcode=_UNPARSED, shape=line, operands="", attrs="",
+                     line=line)
       if ins is not None:
         current.append(ins)
   if entry is None and comps:
@@ -304,6 +325,14 @@ def analyze_module(hlo_text: str, n_devices: int = 1) -> CostReport:
     rep = CostReport()
     for ins in comps.get(name, ()):
       op = ins.opcode
+      for d, _ in _SHAPE_RE.findall(ins.shape):
+        if d not in _DTYPE_BYTES:
+          key = f"dtype:{d}"
+          rep.unknown_ops[key] = rep.unknown_ops.get(key, 0) + 1
+      if op == _UNPARSED:
+        rep.unknown_ops[_UNPARSED] = rep.unknown_ops.get(_UNPARSED, 0) + 1
+        rep.hbm_bytes += _shape_bytes(ins.line)
+        continue
       if op == "while":
         m = _TRIP_RE.search(ins.attrs)
         trip = float(m.group(1)) if m else 1.0

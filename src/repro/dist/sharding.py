@@ -49,7 +49,8 @@ from repro.layers.common import Constraint, identity_constraint
 # dry-run's sharding-override hook keys on it) despite the underscore name.
 __all__ = ["Constraint", "identity_constraint", "make_constraint",
            "param_shardings", "state_shardings", "batch_shardings",
-           "replicated", "_path_tokens", "ACTIVATION_RULES", "PARAM_RULES"]
+           "replicated", "_path_tokens", "ACTIVATION_RULES", "PARAM_RULES",
+           "RuleMesh", "rule_coverage"]
 
 
 # ---------------------------------------------------------------------------
@@ -266,6 +267,92 @@ def state_shardings(state: Any, mesh, shape) -> Any:
 
 def replicated(mesh) -> NamedSharding:
   return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Coverage introspection (repro.analysis check 5).
+# ---------------------------------------------------------------------------
+
+class RuleMesh:
+  """Axis-names/sizes-only stand-in for a jax Mesh.
+
+  The rule logic (`_expand` / `_gate` / `dp_axes`) reads only
+  `.axis_names` and `.shape`, so this is enough to answer "how WOULD
+  this tree shard on a (data=2, model=4) mesh" on hosts that don't have
+  the devices to build a real one — which is exactly what rule-coverage
+  auditing needs. Not usable where a real Mesh is required
+  (NamedSharding construction)."""
+
+  def __init__(self, **axes: int):
+    self.shape = dict(axes)
+
+  @property
+  def axis_names(self) -> tuple:
+    return tuple(self.shape)
+
+
+def rule_coverage(params: Any, mesh=None) -> list:
+  """Per-array-leaf rule attribution over a params tree (arrays or
+  ShapeDtypeStructs) — the introspection half of `param_shardings`.
+
+  Walks the tree exactly the way `param_shardings` does (FactoredLinear
+  nodes matched by logical name against PARAM_RULES; every other leaf —
+  including the int8/scale fields of QuantizedLinear nodes, which are
+  NOT name-matched today — by tree path) and reports, per leaf:
+
+    name     logical GEMM name, or None for path-matched leaves
+    field    FactoredLinear field ("w"/"u"/"v") or last path token
+    path     "/"-joined tree path
+    rule     PARAM_RULES kind, "embedding_table", or None (replicated)
+    matches  how many PARAM_RULES globs match the name (first wins;
+             includes the catchall — 0 for path-matched leaves)
+    shape / size / spec / sharded   the gated outcome on `mesh`
+
+  `mesh` defaults to RuleMesh(data=2, model=4), a canonical small
+  production topology where every intended split is representable."""
+  mesh = RuleMesh(data=2, model=4) if mesh is None else mesh
+  entries: list = []
+
+  def n_matches(name: str) -> int:
+    return sum(1 for pat, _ in PARAM_RULES if fnmatch.fnmatch(name, pat))
+
+  def describe(spec: P) -> tuple[str, bool]:
+    return str(spec), any(e is not None for e in tuple(spec))
+
+  def on_node(path, leaf):
+    toks = _path_tokens(path)
+    if isinstance(leaf, FactoredLinear):
+      kind = _param_rule(leaf.name)
+      for field in ("w", "u", "v"):
+        arr = getattr(leaf, field)
+        if arr is None:
+          continue
+        shape = tuple(arr.shape)
+        spec = _gate(_weight_template(kind, len(shape), field),
+                     shape, mesh) or P()
+        spec_s, sharded = describe(spec)
+        entries.append(dict(
+            name=leaf.name, field=field, path="/".join(toks), rule=kind,
+            matches=n_matches(leaf.name), shape=shape,
+            size=int(math.prod(shape)), spec=spec_s, sharded=sharded))
+      return leaf
+    shape = tuple(leaf.shape)
+    rule = None
+    if toks and toks[-1] == "table" and len(shape) == 2:
+      rule = "embedding_table"
+      spec = _gate(("model", None), shape, mesh) or P()
+    else:
+      spec = P()
+    spec_s, sharded = describe(spec)
+    entries.append(dict(
+        name=None, field=toks[-1] if toks else "", path="/".join(toks),
+        rule=rule, matches=0, shape=shape, size=int(math.prod(shape)),
+        spec=spec_s, sharded=sharded))
+    return leaf
+
+  jax.tree_util.tree_map_with_path(
+      on_node, params, is_leaf=lambda x: isinstance(x, FactoredLinear))
+  return entries
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import fnmatch
+import itertools
 import math
 from typing import Optional
 
@@ -145,26 +146,61 @@ def resolve_policy(policy, batch_size: Optional[int] = None, *,
 # Trace-time instrumentation.
 # ---------------------------------------------------------------------------
 
+class DispatchRecord(tuple):
+  """A recorded dispatch decision. Equals (and unpacks as) the historical
+  `(logical_name, regime)` pair, with one extra attribute: `call_id`, the
+  serial of the `dispatch:{regime}:c{call_id}` named scope that `gemm()`
+  wrapped the routed computation in. The analysis auditor joins traced
+  `dot_general` name stacks back to these records through that id."""
+
+  def __new__(cls, name: str, regime: str, call_id: int):
+    self = tuple.__new__(cls, (name, regime))
+    self.call_id = call_id
+    return self
+
+  @property
+  def name(self) -> str:
+    return self[0]
+
+  @property
+  def regime(self) -> str:
+    return self[1]
+
+
 _RECORDERS: list = []
+_CALL_IDS = itertools.count()
+
+
+def _remove_by_identity(stack: list, item) -> None:
+  # list.remove compares by ==; two independent empty logs are equal, so a
+  # nested context could pop its *parent's* log. Scan for identity instead.
+  for i in range(len(stack) - 1, -1, -1):
+    if stack[i] is item:
+      del stack[i]
+      return
 
 
 @contextlib.contextmanager
 def record_dispatch():
-  """Capture (logical_name, regime) for every dispatch decision traced
-  inside the context. Decisions happen at trace time, so build/trace the
-  jitted step *inside* the context (jit caches skip re-tracing)."""
+  """Capture a DispatchRecord — `(logical_name, regime)` plus a
+  `.call_id` correlating it to the `dispatch:...` named scope in the
+  traced program — for every dispatch decision traced inside the context.
+  Decisions happen at trace time, so build/trace the jitted step *inside*
+  the context (jit caches skip re-tracing; see `clear_jit_caches`).
+  Reentrant: contexts nest and unwind correctly under exceptions."""
   log: list = []
   _RECORDERS.append(log)
   try:
     yield log
   finally:
-    _RECORDERS.remove(log)
+    _remove_by_identity(_RECORDERS, log)
 
 
-def _record(name: Optional[str], regime: str) -> None:
-  if _RECORDERS:
-    for log in _RECORDERS:
-      log.append((name or "<unnamed>", regime))
+def _record(name: Optional[str], regime: str) -> int:
+  cid = next(_CALL_IDS)
+  for log in _RECORDERS:
+    log.append(DispatchRecord(name or "<unnamed>", regime, cid))
+  return cid
 
 
 _OBSERVERS: list = []
@@ -182,7 +218,17 @@ def observe_gemm_inputs():
   try:
     yield log
   finally:
-    _OBSERVERS.remove(log)
+    _remove_by_identity(_OBSERVERS, log)
+
+
+def clear_jit_caches() -> None:
+  """Drop every cached jit compilation/trace so the next call re-traces.
+
+  Dispatch decisions (and their correlation scopes) are only emitted when
+  a program actually traces; a warm jit cache silently replays the old
+  program. Auditors call this before tracing so `record_dispatch` sees
+  the program as it lowers *now*, not as it lowered earlier."""
+  jax.clear_caches()
 
 
 def _observe(name: Optional[str], x: jax.Array) -> None:
@@ -275,29 +321,35 @@ def gemm(leaf, x: jax.Array, policy: Optional[KernelPolicy],
   policy is passed; with policy None / jnp_only this IS the historical jnp
   path (same code object), so default numerics are unchanged."""
   regime = classify(leaf, x, policy, name)
-  _record(name or getattr(leaf, "name", None), regime)
+  cid = _record(name or getattr(leaf, "name", None), regime)
   _observe(name or getattr(leaf, "name", None), x)
-  if regime == "jnp":
-    return _jnp_gemm(leaf, x)
-  lead = x.shape[:-1]
-  x2 = x.reshape(-1, x.shape[-1])
-  if regime == "lowrank_gemm":
-    y = ops.lowrank_gemm(x2, leaf.u, leaf.v, interpret=policy.interpret)
-  elif regime == "decode_matvec":
-    w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
-    y = ops.decode_matvec(x2, w, interpret=policy.interpret)
-  elif regime == "int8_gemm":
-    if _is_quantized(leaf):
-      # pre-quantized storage: stored int8 weights + scales consumed
-      # directly (the serving win); only activations quantize per call
-      from repro.quant.leaf import kernel_apply
-      y = kernel_apply(leaf, x2, interpret=policy.interpret)
-    else:
+  # The named scope is the trace-side half of the correlation: every op
+  # lowered for this routed GEMM carries "dispatch:{regime}:c{cid}" in its
+  # name stack, and the DispatchRecord with the same cid carries the
+  # logical name + regime. repro.analysis joins the two to prove no
+  # dot_general in a decode trace bypassed this function.
+  with jax.named_scope(f"dispatch:{regime}:c{cid}"):
+    if regime == "jnp":
+      return _jnp_gemm(leaf, x)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    if regime == "lowrank_gemm":
+      y = ops.lowrank_gemm(x2, leaf.u, leaf.v, interpret=policy.interpret)
+    elif regime == "decode_matvec":
       w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
-      y = ops.quantized_matmul(x2, w, interpret=policy.interpret)
-  else:  # pragma: no cover — REGIMES is closed above
-    raise ValueError(f"unroutable regime {regime!r}")
-  return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
+      y = ops.decode_matvec(x2, w, interpret=policy.interpret)
+    elif regime == "int8_gemm":
+      if _is_quantized(leaf):
+        # pre-quantized storage: stored int8 weights + scales consumed
+        # directly (the serving win); only activations quantize per call
+        from repro.quant.leaf import kernel_apply
+        y = kernel_apply(leaf, x2, interpret=policy.interpret)
+      else:
+        w = leaf.w if isinstance(leaf, FactoredLinear) else leaf
+        y = ops.quantized_matmul(x2, w, interpret=policy.interpret)
+    else:  # pragma: no cover — REGIMES is closed above
+      raise ValueError(f"unroutable regime {regime!r}")
+    return y.reshape(lead + (y.shape[-1],)).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -321,5 +373,6 @@ def maybe_gru_cell(xw: jax.Array, h: jax.Array, rec, bias: jax.Array,
     # no _record here: the caller's fallback routes the recurrent GEMM
     # through gemm(), which records the real decision for this name
     return None
-  _record(name, "gru_cell")
-  return ops.gru_cell(xw, h, rec.w, bias, interpret=policy.interpret)
+  cid = _record(name, "gru_cell")
+  with jax.named_scope(f"dispatch:gru_cell:c{cid}"):
+    return ops.gru_cell(xw, h, rec.w, bias, interpret=policy.interpret)

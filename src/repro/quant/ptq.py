@@ -106,7 +106,20 @@ def calibrate_activation_ranges(apply_fn, batches: Iterable[Any]
   Returns {logical GEMM name: max |x| seen across all batches}.
   """
   from repro.kernels import dispatch
+  ran = False
   with dispatch.observe_gemm_inputs() as log:
     for batch in batches:
+      ran = True
       apply_fn(batch)
+  if ran and not log:
+    # The observer saw every GEMM skip it — that happens exactly when the
+    # activations were tracers, i.e. apply_fn ran under jit (or with no
+    # policy threaded, so no GEMM routed through dispatch.gemm at all).
+    # Returning {} here used to silently produce an uncalibrated model.
+    raise RuntimeError(
+        "calibrate_activation_ranges observed zero GEMM activations. "
+        "apply_fn must run the model EAGERLY (not under jax.jit) with a "
+        "KernelPolicy threaded (dispatch.JNP_ONLY works) so activations "
+        "are concrete when dispatch.gemm observes them; under jit every "
+        "activation is a tracer and calibration is silently empty.")
   return dict(log)

@@ -118,6 +118,61 @@ def _next_pow2(n: int) -> int:
   return 1 << max(0, int(n - 1).bit_length())
 
 
+def _jit_cache_size(fn) -> int:
+  """Compiled-signature count of one jit wrapper (-1 if the runtime does
+  not expose it). Each entry is one traced+compiled input signature, so
+  a shape-stable serving loop holds this at 1 per program."""
+  try:
+    return int(fn._cache_size())
+  except AttributeError:
+    return -1
+
+
+def make_prefill_program(api, cfg: ModelConfig, cs, policy, axes):
+  """Build the fused masked-prefill program (un-jitted).
+
+  Module-level (rather than a closure inside LMEngine.__init__) so the
+  engine's two jit variants (`_prefill`, donating `_replay`) and the
+  repro.analysis trace harness all audit the SAME program the engine
+  serves with, not a lookalike.
+
+  `axes` is `api.decode_state_batch_axes(cfg)` — the per-leaf batch axis
+  tree the masked state-select broadcasts over.
+  """
+
+  def prefill_prog(params, state, prompts, plens, pos0):
+    """Fused prefill: scan over prompt positions inside one program.
+
+    prompts (b, P) padded to the bucket length; plens (b,) true lengths
+    (>= 1); pos0 (b,) starting positions. Rows keep stepping past their
+    own length with the state select masked back, so one program serves
+    every mix of prompt lengths at a bucket size. Returns (last live
+    logits per row (b, 1, v) float32, state after plens tokens)."""
+    b, P = prompts.shape
+    def masked(live, new, old):
+      return jax.tree.map(
+          lambda n, o, ax: jnp.where(_bcast_mask(live, n.ndim, ax), n, o),
+          new, old, axes)
+    logits0, state1 = api.decode_step(params, state, prompts[:, 0:1],
+                                      pos0, cfg, cs, policy)
+    last0 = logits0.astype(jnp.float32)
+    def body(carry, t):
+      st, last = carry
+      tok = jax.lax.dynamic_slice_in_dim(prompts, t, 1, axis=1)
+      logits, new_st = api.decode_step(params, st, tok, pos0 + t, cfg,
+                                       cs, policy)
+      live = t < plens
+      st = masked(live, new_st, st)
+      last = jnp.where(live[:, None, None], logits.astype(jnp.float32),
+                       last)
+      return (st, last), None
+    (state2, last), _ = jax.lax.scan(body, (state1, last0),
+                                     jnp.arange(1, P))
+    return last, state2
+
+  return prefill_prog
+
+
 def _bcast_mask(mask: jax.Array, ndim: int, axis: int) -> jax.Array:
   shape = [1] * ndim
   shape[axis] = mask.shape[0]
@@ -203,35 +258,7 @@ class LMEngine:
     self._window = jax.jit(
         window_step, donate_argnums=() if self._has_carry else (1,))
 
-    def prefill_prog(params, state, prompts, plens, pos0):
-      """Fused prefill: scan over prompt positions inside one program.
-
-      prompts (b, P) padded to the bucket length; plens (b,) true lengths
-      (>= 1); pos0 (b,) starting positions. Rows keep stepping past their
-      own length with the state select masked back, so one program serves
-      every mix of prompt lengths at a bucket size. Returns (last live
-      logits per row (b, 1, v) float32, state after plens tokens)."""
-      b, P = prompts.shape
-      def masked(live, new, old):
-        return jax.tree.map(
-            lambda n, o, ax: jnp.where(_bcast_mask(live, n.ndim, ax), n, o),
-            new, old, self._axes)
-      logits0, state1 = api.decode_step(params, state, prompts[:, 0:1],
-                                        pos0, cfg, cs, policy)
-      last0 = logits0.astype(jnp.float32)
-      def body(carry, t):
-        st, last = carry
-        tok = jax.lax.dynamic_slice_in_dim(prompts, t, 1, axis=1)
-        logits, new_st = api.decode_step(params, st, tok, pos0 + t, cfg,
-                                         cs, policy)
-        live = t < plens
-        st = masked(live, new_st, st)
-        last = jnp.where(live[:, None, None], logits.astype(jnp.float32),
-                         last)
-        return (st, last), None
-      (state2, last), _ = jax.lax.scan(body, (state1, last0),
-                                       jnp.arange(1, P))
-      return last, state2
+    prefill_prog = make_prefill_program(api, cfg, cs, policy, self._axes)
     # no donation: admission prefills from the cached fresh-slot template,
     # which must survive the call
     self._prefill = jax.jit(prefill_prog)
@@ -246,6 +273,35 @@ class LMEngine:
     # one fresh single-slot decode state, reused as the admission template
     # (for the draft too: factoring weights never changes state shapes)
     self._fresh_slot = self._init_state(1)
+    # every (batch, padded prompt length) bucket prefill has compiled
+    # for (admission runs at batch 1, the static-batch surface at the
+    # engine batch); the retrace-stability audit pins _prefill's cache
+    # size to this count
+    self._prefill_buckets: set = set()
+
+  def compile_stats(self) -> dict:
+    """Compiled-signature counts for every jitted program the engine owns.
+
+    The engine's shape-stability contract — a fixed decode step, bucketed
+    prefill — is observable here: after any admit/decode/retire/refill
+    sequence, "step" must sit at exactly 1, "prefill" at exactly
+    len(prefill_buckets), and the auxiliary programs at <= 1 each. A
+    higher count means a signature silently re-traced (and recompiled)
+    mid-serve. `repro.analysis`'s retrace-stability check asserts this;
+    values of -1 mean the runtime does not expose jit cache sizes."""
+    stats = {
+        "step": _jit_cache_size(self._step),
+        "prefill": _jit_cache_size(self._prefill),
+        "replay": _jit_cache_size(self._replay),
+        "window": _jit_cache_size(self._window),
+        "insert": _jit_cache_size(self._insert),
+        "prefill_buckets": sorted(self._prefill_buckets),
+    }
+    # for carry families the draft's first step is a distinct (non-
+    # donating) program; otherwise it IS _step and needs no extra key
+    if self._draft_step0 is not self._step:
+      stats["draft_step0"] = _jit_cache_size(self._draft_step0)
+    return stats
 
   def _init_state(self, batch: int):
     state = self.api.init_decode_state(self.cfg, batch, self.max_len)
@@ -347,6 +403,7 @@ class LMEngine:
     models must have consumed the prompt before drafting can start."""
     plen = req.prompt.size
     bucket = min(max(self.max_len, 1), _next_pow2(plen))
+    self._prefill_buckets.add((1, int(bucket)))
     padded = np.zeros((1, bucket), np.int32)
     padded[0, :plen] = req.prompt
     toks = jnp.asarray(padded)
@@ -547,6 +604,7 @@ class LMEngine:
           f"prefill would pass max_len={self.max_len} "
           f"(start {int(start.max())} + prompt {p})")
     bucket = min(max(self.max_len, 1), _next_pow2(p))
+    self._prefill_buckets.add((b, int(bucket)))
     padded = np.zeros((b, bucket), np.int32)
     padded[:, :p] = prompts
     logits, self.state = self._prefill(
