@@ -16,6 +16,14 @@ occupancy (busy slot-steps / total slot-steps). Timings are second-pass
 (first pass warms the jit caches). CPU wall-clock: a trajectory signal,
 not a TPU number.
 
+A third section benchmarks the radix-trie prefix cache on fleet-shaped
+traffic: `--shared-prefix-frac` of requests open with one long shared
+template (a system prompt), the rest are unrelated. Cold serving
+re-prefills the template per request; cached serving splices the cached
+snapshot and prefills only the unique suffix, so time-to-first-token
+drops by roughly the template/suffix prefill ratio while greedy output
+stays token-for-token identical (asserted, reported as `parity`).
+
 `--json` writes BENCH_serving.json — CI runs this as a smoke step and
 uploads it alongside BENCH_kernels.json.
 """
@@ -31,7 +39,7 @@ import numpy as np
 
 from repro import configs
 from repro.models.api import get_model
-from repro.serving import LMEngine
+from repro.serving import LMEngine, PrefixCache
 
 
 def make_workload(num_requests: int, vocab: int, seed: int = 0):
@@ -41,6 +49,27 @@ def make_workload(num_requests: int, vocab: int, seed: int = 0):
   prompts = [rng.randint(1, vocab, size=(int(rng.randint(2, 9)),))
              for _ in range(num_requests)]
   budgets = [int(rng.randint(2, 21)) for _ in range(num_requests)]
+  return prompts, budgets
+
+
+def make_shared_workload(num_requests: int, vocab: int,
+                         shared_frac: float, seed: int = 0,
+                         shared_len: int = 22):
+  """Fleet-shaped traffic: `shared_frac` of requests open with one long
+  template (a system prompt) plus a short unique suffix; the rest are
+  unrelated mid-length prompts. The template dominates prefill cost, so
+  this is the workload where prefix caching pays."""
+  rng = np.random.RandomState(seed)
+  shared = rng.randint(1, vocab, size=(shared_len,))
+  prompts, budgets = [], []
+  for _ in range(num_requests):
+    if rng.rand() < shared_frac:
+      sfx = rng.randint(1, vocab, size=(int(rng.randint(4, 7)),))
+      prompts.append(np.concatenate([shared, sfx]))
+    else:
+      prompts.append(rng.randint(1, vocab,
+                                 size=(int(rng.randint(6, 13)),)))
+    budgets.append(int(rng.randint(2, 9)))
   return prompts, budgets
 
 
@@ -83,8 +112,51 @@ def run_static(cfg, params, prompts, budgets, *, batch, max_len,
           "occupancy": busy / total, "decode_steps": steps}
 
 
+def _ttft_ms(finished, q: float) -> float:
+  ts = sorted(f.ttft_s for f in finished if f.ttft_s is not None)
+  return ts[min(len(ts) - 1, int(q * len(ts)))] * 1e3
+
+
+def run_prefix_cache(cfg, params, *, batch, max_len, kernel_policy,
+                     num_requests, shared_frac, capacity_mb) -> dict:
+  """Cold vs cached serving on the shared-template workload. The cache
+  starts empty each pass and warms in-flight: the first template sighting
+  is a cold prefill, the second materializes the fork, the third onward
+  splice it — so reported hit rate and TTFT include the warmup misses."""
+  prompts, budgets = make_shared_workload(num_requests, cfg.vocab_size,
+                                          shared_frac)
+
+  def serve(cache):
+    eng = LMEngine(cfg, params, batch_size=batch, max_len=max_len,
+                   kernel_policy=kernel_policy, prefix_cache=cache)
+    for p, n in zip(prompts, budgets):
+      eng.submit(p, max_new_tokens=n)
+    t0 = time.perf_counter()
+    finished = eng.run()
+    dt = time.perf_counter() - t0
+    tokens = sum(len(f.tokens) for f in finished)
+    stats = {"wall_s": dt, "tokens": tokens, "tok_s": tokens / dt,
+             "ttft_p50_ms": _ttft_ms(finished, 0.50),
+             "ttft_p95_ms": _ttft_ms(finished, 0.95),
+             "hit_rate": eng.cache_stats()["hit_rate"]}
+    return stats, {f.uid: tuple(int(t) for t in f.tokens)
+                   for f in finished}
+
+  serve(PrefixCache(capacity_mb=capacity_mb))   # jit warmup, both paths
+  serve(None)
+  cold, cold_toks = serve(None)
+  warm, warm_toks = serve(PrefixCache(capacity_mb=capacity_mb))
+  return {
+      "shared_prefix_frac": shared_frac, "num_requests": num_requests,
+      "capacity_mb": capacity_mb, "cold": cold, "warm": warm,
+      "ttft_speedup": cold["ttft_p50_ms"] / warm["ttft_p50_ms"],
+      "parity": cold_toks == warm_toks,
+  }
+
+
 def run(arch: str, *, batch: int, num_requests: int, max_len: int,
-        kernel_policy) -> dict:
+        kernel_policy, shared_prefix_frac: float = 0.8,
+        prefix_cache_mb: float = 64.0) -> dict:
   cfg = configs.get_smoke(arch).with_(vocab_size=128, dtype=jnp.float32)
   api = get_model(cfg)
   params = api.init(jax.random.PRNGKey(0), cfg)
@@ -100,6 +172,10 @@ def run(arch: str, *, batch: int, num_requests: int, max_len: int,
       "prompt_lens": [int(p.size) for p in prompts], "budgets": budgets,
       "continuous": cont, "static": stat,
       "speedup": cont["tok_s"] / stat["tok_s"],
+      "prefix_cache": run_prefix_cache(
+          cfg, params, num_requests=num_requests,
+          shared_frac=shared_prefix_frac,
+          capacity_mb=prefix_cache_mb, **kw),
   }
 
 
@@ -110,12 +186,18 @@ def main() -> None:
   ap.add_argument("--num-requests", type=int, default=12)
   ap.add_argument("--max-len", type=int, default=64)
   ap.add_argument("--kernels", choices=["jnp", "pallas"], default="jnp")
+  ap.add_argument("--shared-prefix-frac", type=float, default=0.8,
+                  help="fraction of requests opening with the shared "
+                       "template in the prefix-cache section")
+  ap.add_argument("--prefix-cache-mb", type=float, default=64.0)
   ap.add_argument("--json", action="store_true",
                   help="write BENCH_serving.json")
   args = ap.parse_args()
 
   out = run(args.arch, batch=args.batch, num_requests=args.num_requests,
-            max_len=args.max_len, kernel_policy=args.kernels)
+            max_len=args.max_len, kernel_policy=args.kernels,
+            shared_prefix_frac=args.shared_prefix_frac,
+            prefix_cache_mb=args.prefix_cache_mb)
   for mode in ("continuous", "static"):
     r = out[mode]
     print(f"{mode:>10}: {r['tokens']} tok in {r['wall_s']:.2f}s "
@@ -123,6 +205,15 @@ def main() -> None:
           f"{r['decode_steps']} decode steps")
   print(f"   speedup: {out['speedup']:.2f}x "
         f"({args.num_requests} requests, {args.batch} slots)")
+  pc = out["prefix_cache"]
+  for mode in ("cold", "warm"):
+    r = pc[mode]
+    print(f"{mode:>10}: TTFT p50 {r['ttft_p50_ms']:.1f} ms / p95 "
+          f"{r['ttft_p95_ms']:.1f} ms, {r['tok_s']:.1f} tok/s, "
+          f"hit rate {r['hit_rate']:.2f}")
+  print(f"   prefix cache: TTFT speedup {pc['ttft_speedup']:.2f}x at "
+        f"{pc['shared_prefix_frac']:.0%} shared "
+        f"(parity {'OK' if pc['parity'] else 'BROKEN'})")
   if args.json:
     with open("BENCH_serving.json", "w") as f:
       json.dump(out, f, indent=1)

@@ -8,6 +8,8 @@ and optimized HLO:
   dispatch_coverage   every weight GEMM routed through kernels.dispatch
   quant_integrity     no int8 weight dequantized in a PTQ'd trace
   retrace_stability   engine compiles each signature exactly once
+  prefix_splice_stability  cached-splice serving keeps the cold path's
+                      prefill signatures and token-for-token output
   transfer_lint       no host round-trips; donation actually aliases
   sharding_coverage   every production param leaf has a sharding rule
 
@@ -78,6 +80,10 @@ def run_audit(config_names: Iterable[str] = DEFAULT_CONFIGS,
     lf, infos = lifecycle.check_retrace_stability(config_names, policies)
     report.extend(lf)
     report.targets.extend(infos)
+    sf, sinfos = lifecycle.check_prefix_splice_stability(config_names,
+                                                         policies)
+    report.extend(sf)
+    report.targets.extend(sinfos)
   if run_sharding:
     _sharding_findings(config_names, report)
   return report

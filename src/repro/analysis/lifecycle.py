@@ -1,4 +1,11 @@
-"""Retrace-stability: the engine's jit caches after a real serve cycle.
+"""Executing lifecycle checks: jit caches after real serve cycles.
+
+Two checks live here — `retrace_stability` (the vanilla engine
+lifecycle) and `prefix_splice_stability` (the prefix-cache splice path
+must not add prefill signatures beyond the cold path's, and spliced
+greedy output must match cold token-for-token).
+
+Retrace-stability: the engine's jit caches after a real serve cycle.
 
 Unlike the other checks this one must *execute* (tiny, smoke-scale,
 batch 2, a handful of tokens): jit cache sizes only exist after calls.
@@ -38,6 +45,7 @@ from repro.analysis.report import Finding
 from repro.analysis.targets import normalize_config
 from repro.models.api import get_model
 from repro.serving.engine import LMEngine
+from repro.serving.prefix_cache import PrefixCache
 
 #: configs whose family runs the full LMEngine lifecycle
 LIFECYCLE_CONFIGS = ("qwen3-4b", "zamba2-7b", "xlstm-350m")
@@ -107,4 +115,118 @@ def check_retrace_stability(
           fail(f"{prog}-cache:{n}",
                f"auxiliary program {prog!r} compiled {n} signatures in "
                f"one serve cycle")
+  return findings, infos
+
+
+# ---------------------------------------------------------------------------
+# prefix_splice_stability
+# ---------------------------------------------------------------------------
+
+#: two shared-prefix buckets + an unrelated prompt, chosen so the warm
+#: path's pieces land in exactly the cold path's buckets:
+#:   A   full len 8            -> bucket 8 (cold and warm both)
+#:   B   A[:4] + new suffix    -> cold bucket 8; warm fork-splits into
+#:                                4 (template, published) + 4 (suffix)
+#:   C   A[:4] + other suffix  -> cold bucket 8; warm splices B's fork
+#:                                entry and prefills only bucket 4
+#:   D   unrelated len 4       -> bucket 4 (cold and warm both)
+#: so cold and warm prefill signature sets are both {(1,4), (1,8)} and
+#: any extra warm signature is the splice path leaking a new jit shape.
+#: Tokens are pinned (not drawn) so the prompts provably diverge right
+#: at the fork and D shares no first token with A-C.
+_SPLICE_PROMPTS = (
+    (1, 2, 3, 4, 5, 6, 7, 8),
+    (1, 2, 3, 4, 9, 10, 11, 12),
+    (1, 2, 3, 4, 13, 14, 15, 16),
+    (20, 21, 22, 23),
+)
+
+
+def _splice_cycle(cfg, params, policy: str, cache) -> Tuple[dict, dict]:
+  """Serve the splice scenario; returns (uid -> tokens, compile_stats)."""
+  eng = LMEngine(cfg, params, batch_size=_BATCH, max_len=_MAX_LEN,
+                 kernel_policy=None if policy == "jnp" else policy,
+                 prefix_cache=cache)
+  for p in _SPLICE_PROMPTS:   # 4 requests, 2 slots -> retire + refill
+    eng.submit(np.asarray(p, np.int32), max_new_tokens=_BUDGET)
+  done = eng.run()
+  assert len(done) == len(_SPLICE_PROMPTS)
+  return ({f.uid: tuple(int(t) for t in f.tokens) for f in done},
+          eng.compile_stats())
+
+
+def check_prefix_splice_stability(
+    config_names: Iterable[str],
+    policies: Iterable[str]) -> Tuple[List[Finding], List[dict]]:
+  """Cold vs cached-splice serve cycles over shared-prefix traffic.
+
+  Invariants: the warm engine keeps the cold engine's compile contract
+  (step == 1, prefill == len(prefill_buckets), aux programs <= 1), its
+  prefill bucket SET equals the cold set (the splice path introduces no
+  new jit signatures — the acceptance bar from ISSUE 7), the cache
+  actually hit (otherwise the splice path silently never ran and the
+  equality is vacuous), and warm greedy tokens equal cold greedy tokens
+  for every request (splice is bit-exact, not just shape-stable).
+  """
+  findings: List[Finding] = []
+  infos: List[dict] = []
+  for name in config_names:
+    name = normalize_config(name)
+    if name not in LIFECYCLE_CONFIGS:
+      continue
+    cfg = configs.get_smoke(name).with_(vocab_size=_VOCAB)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+
+    for policy in policies:
+      cache = PrefixCache(capacity_mb=64)
+      cold_toks, cold = _splice_cycle(cfg, params, policy, None)
+      warm_toks, warm = _splice_cycle(cfg, params, policy, cache)
+      cs = cache.stats()
+      info = dict(config=name, policy=policy, quant="-",
+                  program="lifecycle", check="prefix_splice_stability",
+                  compile_stats=warm, cache_stats=cs)
+      infos.append(info)
+
+      def fail(key: str, detail: str) -> None:
+        findings.append(Finding(
+            check="prefix_splice_stability", config=name, policy=policy,
+            program="lifecycle", key=key, detail=detail))
+
+      if warm_toks != cold_toks:
+        fail("token-parity",
+             f"cached-splice greedy tokens diverged from cold serving "
+             f"(cold {cold_toks} vs warm {warm_toks}) — the spliced "
+             f"state is not bit-identical to the cold prefill state")
+      if cs["hits"] < 1:
+        fail("no-hits",
+             f"the shared-prefix scenario produced no cache hits "
+             f"({cs}) — the splice path never ran, so its stability "
+             f"was not exercised")
+      if warm["step"] < 0:
+        info["skipped"] = "jit cache sizes unavailable on this runtime"
+        continue
+      if set(warm["prefill_buckets"]) != set(cold["prefill_buckets"]):
+        fail(f"prefill-signatures:{sorted(warm['prefill_buckets'])}",
+             f"splice path changed the prefill signature set: cold "
+             f"{sorted(cold['prefill_buckets'])} vs warm "
+             f"{sorted(warm['prefill_buckets'])} — suffix/fork prefill "
+             f"escaped the cold path's buckets")
+      if warm["step"] != 1:
+        fail(f"step-cache:{warm['step']}",
+             f"decode step compiled {warm['step']} signatures in the "
+             f"cached-splice cycle — splice surgery destabilized the "
+             f"donated state shape")
+      n_buckets = len(warm["prefill_buckets"])
+      if warm["prefill"] != n_buckets:
+        fail(f"prefill-cache:{warm['prefill']}/buckets:{n_buckets}",
+             f"prefill compiled {warm['prefill']} signatures but only "
+             f"{n_buckets} (batch, bucket) shapes were admitted "
+             f"({warm['prefill_buckets']}): a spliced suffix escaped "
+             f"bucketing")
+      for prog in ("replay", "window", "insert", "draft_step0"):
+        n = warm.get(prog, 0)
+        if n > 1:
+          fail(f"{prog}-cache:{n}",
+               f"auxiliary program {prog!r} compiled {n} signatures in "
+               f"the cached-splice cycle")
   return findings, infos

@@ -28,6 +28,8 @@ CHECKS = (
     "dispatch_coverage",   # every decode dot_general attributable to a regime
     "quant_integrity",     # no int8 weight dequantized in a PTQ'd trace
     "retrace_stability",   # engine lifecycle compiles each signature once
+    "prefix_splice_stability",  # cached-splice serving: same prefill
+                                # signatures as cold + token parity
     "transfer_lint",       # no host callbacks/transfers; donation holds;
                            # HLO parser gaps (unknown ops) surfaced
     "sharding_coverage",   # every param leaf resolves to a sharding rule

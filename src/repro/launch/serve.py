@@ -57,6 +57,13 @@ def main() -> None:
   ap.add_argument("--draft-rank", type=int, default=None,
                   help="fixed truncated-SVD rank for the draft's GEMMs "
                        "(default: explained-variance rule at 0.9)")
+  ap.add_argument("--prefix-cache", action="store_true",
+                  help="radix-trie prefix cache: shared prompt prefixes "
+                       "splice from cached decode-state snapshots and "
+                       "only the uncached suffix is prefilled (greedy "
+                       "output stays bit-identical to cold serving)")
+  ap.add_argument("--prefix-cache-mb", type=float, default=256.0,
+                  help="byte-accounted LRU capacity for --prefix-cache")
   args = ap.parse_args()
 
   cfg = (configs.get_config(args.arch) if args.full
@@ -113,17 +120,27 @@ def main() -> None:
     print(f"--speculate is greedy-only: overriding --temperature "
           f"{temperature} -> 0.0")
     temperature = 0.0
+  cache = None
+  if args.prefix_cache:
+    from repro.serving import PrefixCache
+    cache = PrefixCache(capacity_mb=args.prefix_cache_mb)
   engine = LMEngine(cfg, params, batch_size=args.batch,
                     max_len=args.max_len, kernel_policy=args.kernels,
                     eos_id=args.eos_id, speculate=args.speculate,
-                    draft_params=draft_params, draft_rank=args.draft_rank)
+                    draft_params=draft_params, draft_rank=args.draft_rank,
+                    prefix_cache=cache)
   if args.speculate:
     from repro.core.factored import count_params
     print(f"speculating {args.speculate} tokens/step with a "
           f"{count_params(engine.draft_params)}-param low-rank draft "
           f"(target {count_params(params)})")
+  # with a prefix cache, model fleet traffic: most requests open with a
+  # shared system-prompt template, so the cache has prefixes to hit
+  shared = rng.randint(1, cfg.vocab_size, size=(max(2, args.prompt_len),))
   for _ in range(num_requests):
     prompt = rng.randint(1, cfg.vocab_size, size=(rng.randint(lo, hi + 1),))
+    if cache is not None and rng.rand() < 0.8:
+      prompt = np.concatenate([shared, prompt])
     engine.submit(prompt, max_new_tokens=int(rng.randint(1, args.steps + 1)))
   t0 = time.perf_counter()
   finished = engine.run(temperature=temperature)
@@ -131,9 +148,18 @@ def main() -> None:
   tokens = sum(len(f.tokens) for f in finished)
   spec = (f", accept rate {engine.accept_rate:.2f}"
           if args.speculate else "")
+  ttfts = sorted(f.ttft_s for f in finished if f.ttft_s is not None)
+  ttft_p50 = ttfts[len(ttfts) // 2] * 1e3 if ttfts else float("nan")
+  cachestr = ""
+  if cache is not None:
+    cs = engine.cache_stats()
+    cachestr = (f", cache hit rate {cs['hit_rate']:.2f} "
+                f"({cs['entries']} entries, "
+                f"{cs['bytes'] / (1 << 20):.1f} MB)")
   print(f"served {len(finished)} requests ({tokens} tokens) through "
         f"{args.batch} slots in {dt:.2f}s ({tokens / dt:.1f} tok/s, "
-        f"occupancy {engine.occupancy:.2f}{spec})")
+        f"TTFT p50 {ttft_p50:.1f} ms, "
+        f"occupancy {engine.occupancy:.2f}{spec}{cachestr})")
   for f in finished[:4]:
     print(f"  req {f.uid}: prompt {len(f.prompt)} -> {len(f.tokens)} "
           f"tokens ({f.finish_reason}); sample {f.tokens[:6].tolist()}")

@@ -8,7 +8,13 @@ Every family exposes:
                                           -> (logits (b, 1, v), new state)
   decode_state_carry(cfg)                 -> bool pytree: which decode-state
                                           leaves are read-modify-write
-                                          carries (speculative rewind)
+                                          carries (speculative rewind AND
+                                          the prefix-cache snapshot split)
+
+`ModelApi` derives the prefix-snapshot surface from those contracts:
+`decode_state_length_axes` / `prefix_view` / `slot_snapshot` /
+`splice_prefix` turn "the decode state after m tokens" into a bounded,
+cacheable snapshot and back (serving.prefix_cache stores these).
 
 The training loop, serving engine, dry-run, and benchmarks all go through
 `get_model(cfg)` so an `--arch <id>` flag is the only thing that changes
@@ -176,6 +182,58 @@ class ModelApi:
     KV rows / SSM carries), leaving every other slot untouched."""
     fresh = self.init_decode_state(cfg, 1, max_len)
     return self.insert_slot(cfg, state, fresh, slot)
+
+  # -- prefix snapshots (the prefix-cache contract) -------------------------
+  # A decode state after m tokens splits into three leaf kinds:
+  #   * positional KV (attention k/v, MLA c_kv/k_rope): only rows [0, m)
+  #     on the length axis are ever read under the causal mask — a prefix
+  #     snapshot keeps exactly those rows and nothing else;
+  #   * read-modify-write carries (SSM states, conv tails, xLSTM
+  #     accumulators, GRU hiddens): fixed-size, copied whole, and valid
+  #     at EXACTLY m — they cannot be sliced to a shorter prefix, which
+  #     is why the prefix cache only ever replays whole inserted entries;
+  #   * step-invariant leaves (whisper's encoder memory): copied whole.
+  # This formalizes what the speculative rewind (PR 5) does ad hoc: the
+  # same positional-vs-carry split `decode_state_carry` names, plus the
+  # length axis that makes the positional half a bounded snapshot.
+
+  def decode_state_length_axes(self, cfg: ModelConfig):
+    """Per-leaf decode-position axis: the axis indexed by the write
+    position for attention-KV leaves (always the axis after the batch
+    axis — the cache layout every family shares), -1 for carry and
+    step-invariant leaves, which have no positional extent."""
+    def f(path, ax):
+      return ax + 1 if _leaf_key(path) in KV_CACHE_KEYS else -1
+    return jax.tree_util.tree_map_with_path(f, self._slot_axes(cfg))
+
+  def prefix_view(self, cfg: ModelConfig, slot_state, length: int):
+    """Fixed-size snapshot of a batch-1 decode state after exactly
+    `length` tokens: KV leaves sliced to rows [0, length), carries and
+    step-invariant leaves copied whole. `slot_state` must actually BE
+    the state after `length` tokens — carries are only valid there."""
+    return jax.tree.map(
+        lambda x, ax: x if ax < 0 else jax.lax.slice_in_dim(
+            x, 0, length, axis=ax),
+        slot_state, self.decode_state_length_axes(cfg))
+
+  def slot_snapshot(self, cfg: ModelConfig, state, slot, length: int):
+    """`extract_slot` + `prefix_view`: the cacheable snapshot of one
+    live slot's first `length` positions."""
+    return self.prefix_view(cfg, self.extract_slot(cfg, state, slot),
+                            length)
+
+  def splice_prefix(self, cfg: ModelConfig, fresh, snapshot):
+    """Inverse of `prefix_view`: write `snapshot` into a fresh batch-1
+    state. KV rows land at [0, m) with zeros beyond — bit-identical to
+    what a cold prefill of those m tokens leaves behind, so decoding
+    from the spliced state is indistinguishable from never having
+    evicted the request. Eager-safe: plain slice-update ops, no new jit
+    program (the engine's no-new-signatures contract)."""
+    return jax.tree.map(
+        lambda f, s, ax: (s.astype(f.dtype) if ax < 0
+                          else jax.lax.dynamic_update_slice_in_dim(
+                              f, s.astype(f.dtype), 0, axis=ax)),
+        fresh, snapshot, self.decode_state_length_axes(cfg))
 
 
 def get_model(cfg: ModelConfig) -> ModelApi:

@@ -121,7 +121,12 @@ def decode_state_batch_axes(cfg: ModelConfig) -> dict:
 def decode_state_carry(cfg: ModelConfig) -> dict:
   """Speculative-rewind contract: every GRU hidden state is a read-
   modify-write carry — rewind requires the pre-draft snapshot replayed
-  through the accepted prefix."""
+  through the accepted prefix.
+
+  Prefix-snapshot contract (serving.prefix_cache): all-carry, like
+  xLSTM — a cached prefix is the fixed-size hidden states copied whole,
+  valid at exactly the number of frames fed; no positional slicing
+  exists in this family."""
   return {f"gru{i}": True for i in range(len(cfg.gru_dims))}
 
 

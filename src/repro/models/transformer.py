@@ -203,7 +203,12 @@ def decode_state_carry(cfg: ModelConfig) -> dict:
   """Speculative-rewind contract: the whole decode state is attention KV
   (GQA k/v or MLA c_kv/k_rope) written at absolute positions — rows past
   the committed position are never read under the causal mask, so a
-  rejected draft suffix rewinds by moving the position counter alone."""
+  rejected draft suffix rewinds by moving the position counter alone.
+
+  Prefix-snapshot contract (serving.prefix_cache): the same positional
+  property makes a cached prefix a row slice — `prefix_view(state, m)`
+  keeps KV rows [0, m) and splicing them into a fresh state reproduces
+  the cold prefill state at m bit-for-bit, at ANY m <= the fed length."""
   return jax.tree.map(lambda _: False, decode_state_batch_axes(cfg))
 
 

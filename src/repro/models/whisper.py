@@ -221,7 +221,12 @@ def decode_state_batch_axes(cfg: ModelConfig) -> dict:
 def decode_state_carry(cfg: ModelConfig) -> dict:
   """Speculative-rewind contract: the self-attention KV cache rewinds
   positionally and the encoder memory is step-invariant (decode_step
-  returns it untouched) — no carry anywhere, rewind is free."""
+  returns it untouched) — no carry anywhere, rewind is free.
+
+  Prefix-snapshot contract (serving.prefix_cache): KV rows [0, m) slice
+  positionally; the step-invariant encoder memory is copied whole into
+  the snapshot (it has no length axis to slice) and spliced back
+  verbatim — a cached prefix is only reusable against the same memory."""
   return {"kv": {"k": False, "v": False}, "mem": False}
 
 

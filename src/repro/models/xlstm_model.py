@@ -92,7 +92,12 @@ def decode_state_carry(cfg: ModelConfig) -> dict:
   """Speculative-rewind contract: every xLSTM state leaf (mLSTM matrix
   memory / normalizer / stabilizer, sLSTM hidden/cell/normalizer/
   stabilizer) is a read-modify-write carry — rewind requires the
-  pre-draft snapshot replayed through the accepted prefix."""
+  pre-draft snapshot replayed through the accepted prefix.
+
+  Prefix-snapshot contract (serving.prefix_cache): all-carry means a
+  cached prefix is the whole (fixed-size) state copied verbatim, valid
+  at EXACTLY the snapshot length — cheap to cache, impossible to
+  truncate; entries exist only at lengths a prefill stopped at."""
   return jax.tree.map(lambda _: True, decode_state_batch_axes(cfg))
 
 

@@ -144,7 +144,13 @@ def decode_state_carry(cfg: ModelConfig) -> dict:
   """Speculative-rewind contract: Mamba2 SSM states and conv tails are
   read-modify-write every step — rewinding a rejected draft suffix needs
   the pre-draft snapshot replayed through the accepted prefix. The shared
-  attention KV cache rewinds positionally (overwrite, free)."""
+  attention KV cache rewinds positionally (overwrite, free).
+
+  Prefix-snapshot contract (serving.prefix_cache): the carry leaves are
+  fixed-size and valid at EXACTLY the length they were fed to — a cached
+  prefix copies them whole (KV rows slice positionally as usual), and a
+  snapshot can only be taken at a length the prefill actually stopped
+  at, never truncated to a shorter prefix after the fact."""
   _, _, tail = _plan(cfg)
   carry = {
       "main_ssm": {"ssm": True, "conv": True},

@@ -1,10 +1,12 @@
 """Serving engines: continuous-batching LM decode (with lossless
-self-speculative decoding) + streaming speech."""
+self-speculative decoding and radix-trie prefix caching) + streaming
+speech."""
 from repro.serving.engine import (FinishedRequest, GenerationResult,
                                   LMEngine, Request, StreamingSpeechServer)
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.speculative import (accept_longest_prefix,
                                        make_draft_params)
 
-__all__ = ["FinishedRequest", "GenerationResult", "LMEngine", "Request",
-           "StreamingSpeechServer", "accept_longest_prefix",
-           "make_draft_params"]
+__all__ = ["FinishedRequest", "GenerationResult", "LMEngine",
+           "PrefixCache", "Request", "StreamingSpeechServer",
+           "accept_longest_prefix", "make_draft_params"]

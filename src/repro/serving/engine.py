@@ -36,6 +36,18 @@ position counter (rows past it are dead until overwritten); SSM /
 recurrent carries restore the pre-draft snapshot and replay the accepted
 prefix through the masked window program prefill already uses.
 
+Prefix caching (`prefix_cache=PrefixCache(...)`): admission consults a
+radix-trie cache of decode-state snapshots (serving.prefix_cache) keyed
+by token prefixes. On a hit the cached snapshot is spliced into a fresh
+batch-1 state (`ModelApi.splice_prefix` — eager slot surgery, no new jit
+program) and the SAME bucketed fused prefill runs over only the uncached
+suffix starting at the cached position; admission then publishes the
+full prompt's snapshot back (`publish_on_retire=True` additionally
+publishes prompt+generated prefixes at retirement, the multi-turn win).
+The spliced state is bit-identical to the cold prefill's state at that
+position, so cached-splice greedy serving is token-for-token cold
+serving — pinned by tests and the `prefix_splice_stability` audit check.
+
 `cache_dtype` downcasts only the attention KV-cache leaves (see
 `models.api.cast_kv_cache`); SSM / recurrent carries stay full precision.
 
@@ -56,6 +68,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -67,6 +80,7 @@ from repro.kernels.dispatch import resolve_policy
 from repro.layers.common import ModelConfig
 from repro.models import deepspeech
 from repro.models.api import cast_kv_cache, get_model
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.speculative import (accept_longest_prefix,
                                        make_draft_params, merge_rewind)
 
@@ -97,6 +111,9 @@ class FinishedRequest:
   prompt: np.ndarray
   tokens: np.ndarray            # generated tokens, prompt excluded
   finish_reason: str            # "eos" | "length" | "max_len"
+  # admission-to-first-token wall seconds (prefill latency; queue wait
+  # excluded) — the number the prefix cache exists to shrink
+  ttft_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -112,6 +129,7 @@ class _SlotState:
   remaining: Optional[int] = None
   active: bool = False
   next_tok: int = 0
+  ttft_s: Optional[float] = None
 
 
 def _next_pow2(n: int) -> int:
@@ -185,7 +203,9 @@ class LMEngine:
                batch_size: int, max_len: int, mesh=None,
                cache_dtype=None, rng=None, kernel_policy=None,
                eos_id: Optional[int] = None, speculate: int = 0,
-               draft_params: Any = None, draft_rank: Optional[int] = None):
+               draft_params: Any = None, draft_rank: Optional[int] = None,
+               prefix_cache: Optional[PrefixCache] = None,
+               publish_on_retire: bool = False):
     self.cfg = model_cfg
     self.params = params
     self.api = get_model(model_cfg)
@@ -227,6 +247,12 @@ class LMEngine:
     else:
       self.draft_params = None
       self.draft_state = None
+
+    # the (optional, shareable) prefix cache: admission splices hits,
+    # publishes full prompts, and — opted in — retired prefixes too
+    self._cache = prefix_cache
+    self.publish_on_retire = publish_on_retire
+    self._pending_publish: list = []   # (slot, key tokens, fed length)
 
     # host-side per-slot lifecycle + the request queue
     self._queue: collections.deque = collections.deque()
@@ -276,19 +302,34 @@ class LMEngine:
     # every (batch, padded prompt length) bucket prefill has compiled
     # for (admission runs at batch 1, the static-batch surface at the
     # engine batch); the retrace-stability audit pins _prefill's cache
-    # size to this count
+    # size to this count. _prefill_calls counts INVOCATIONS per bucket
+    # (resets with the other counters) — the splice path shows up here
+    # as calls landing in smaller suffix buckets, never as new ones.
     self._prefill_buckets: set = set()
+    self._prefill_calls: dict = {}
+
+  def _count_prefill(self, b: int, bucket: int) -> None:
+    key = (int(b), int(bucket))
+    self._prefill_buckets.add(key)
+    self._prefill_calls[key] = self._prefill_calls.get(key, 0) + 1
 
   def compile_stats(self) -> dict:
-    """Compiled-signature counts for every jitted program the engine owns.
+    """Compiled-signature counts for every jitted program the engine owns,
+    plus per-bucket prefill invocation counts.
 
     The engine's shape-stability contract — a fixed decode step, bucketed
     prefill — is observable here: after any admit/decode/retire/refill
-    sequence, "step" must sit at exactly 1, "prefill" at exactly
-    len(prefill_buckets), and the auxiliary programs at <= 1 each. A
-    higher count means a signature silently re-traced (and recompiled)
-    mid-serve. `repro.analysis`'s retrace-stability check asserts this;
-    values of -1 mean the runtime does not expose jit cache sizes."""
+    sequence (prefix-cache splices included), "step" must sit at exactly
+    1, "prefill" at exactly len(prefill_buckets), and the auxiliary
+    programs at <= 1 each. A higher count means a signature silently
+    re-traced (and recompiled) mid-serve. `repro.analysis`'s
+    retrace-stability and prefix-splice-stability checks assert this;
+    values of -1 mean the runtime does not expose jit cache sizes.
+
+    "prefill_calls" maps "BxL" bucket names to invocation counts since
+    init/reset() — benches and the auditor read cache effectiveness
+    (splices shift calls into smaller suffix buckets) from this one
+    surface next to `cache_stats()`."""
     stats = {
         "step": _jit_cache_size(self._step),
         "prefill": _jit_cache_size(self._prefill),
@@ -296,12 +337,25 @@ class LMEngine:
         "window": _jit_cache_size(self._window),
         "insert": _jit_cache_size(self._insert),
         "prefill_buckets": sorted(self._prefill_buckets),
+        "prefill_calls": {f"{b}x{p}": n for (b, p), n
+                          in sorted(self._prefill_calls.items())},
     }
     # for carry families the draft's first step is a distinct (non-
     # donating) program; otherwise it IS _step and needs no extra key
     if self._draft_step0 is not self._step:
       stats["draft_step0"] = _jit_cache_size(self._draft_step0)
     return stats
+
+  def cache_stats(self) -> dict:
+    """Prefix-cache counters (hits / misses / evictions / inserts /
+    bytes / hit_rate) — the `PrefixCache.stats()` surface re-exported so
+    benches, the serve driver, and the auditor read one place. A
+    cacheless engine returns the same shape, zeroed."""
+    if self._cache is None:
+      return {"hits": 0, "misses": 0, "evictions": 0, "inserts": 0,
+              "rejected_oversize": 0, "entries": 0, "bytes": 0,
+              "capacity_bytes": 0, "hit_rate": 0.0}
+    return self._cache.stats()
 
   def _init_state(self, batch: int):
     state = self.api.init_decode_state(self.cfg, batch, self.max_len)
@@ -322,6 +376,10 @@ class LMEngine:
     self.busy_slot_steps = 0
     self.drafted_tokens = 0
     self.accepted_tokens = 0
+    self._prefill_calls = {}
+    self._pending_publish = []
+    # the prefix cache itself is NOT cleared: it may be shared across
+    # engines, and its entries stay valid (snapshots are self-contained)
 
   # -- request lifecycle ----------------------------------------------------
 
@@ -343,7 +401,14 @@ class LMEngine:
 
   @property
   def occupancy(self) -> float:
-    """Mean fraction of slots doing useful work per decode step."""
+    """Mean fraction of slots doing useful work per engine iteration:
+    busy_slot_steps / (decode_steps * batch_size) since init or reset().
+
+    `decode_steps` counts engine ITERATIONS — one masked decode step in
+    the vanilla path, one whole draft+verify+commit round in the
+    speculative path (which may emit up to k+1 tokens) — and admission
+    prefill work is excluded entirely, so this measures slot liveness,
+    not tokens/step. 0.0 before any decoding has happened."""
     total = self.decode_steps * self.batch
     return self.busy_slot_steps / total if total else 0.0
 
@@ -370,11 +435,35 @@ class LMEngine:
     s = self._slots[slot]
     self._finished[s.req.uid] = FinishedRequest(
         uid=s.req.uid, prompt=s.req.prompt,
-        tokens=np.asarray(s.tokens, np.int32), finish_reason=reason)
+        tokens=np.asarray(s.tokens, np.int32), finish_reason=reason,
+        ttft_s=s.ttft_s)
+    if self._cache is not None and self.publish_on_retire:
+      # the retired conversation's fed prefix (prompt + every generated
+      # token except the final, never-fed one) is a cacheable entry —
+      # the multi-turn continuation hit. Deferred: the batch state may
+      # still be mid-update here (speculative rewind pending), so the
+      # snapshot is taken at the caller's flush point.
+      fed = s.req.prompt.size + len(s.tokens) - 1
+      if fed > 0:
+        key = np.concatenate(
+            [s.req.prompt, np.asarray(s.tokens[:-1], np.int32)])
+        self._pending_publish.append((slot, key, fed))
     self._slots[slot] = _SlotState()
     # no state scrub here: the slot keeps stepping masked (positions
     # clamped to 0) and the next admit splices a fully fresh prefilled
     # state over every row of the slot
+
+  def _flush_retire_publish(self, *, valid: bool = True) -> None:
+    """Publish (or drop) the prefixes queued by `_retire`. Callers pass
+    `valid=False` when retired slots' carries are not the committed
+    values (the speculative full-accept branch skips the masked replay,
+    so partially-accepted retired slots hold post-window garbage)."""
+    if valid:
+      for slot, key, fed in self._pending_publish:
+        snap = self.api.slot_snapshot(self.cfg, self.state, slot, fed)
+        # retire publishes target-only: the draft re-prefills on a hit
+        self._cache.insert(key, (snap, None))
+    self._pending_publish.clear()
 
   def _record_token(self, slot: int, tok: int, pos: int) -> bool:
     """Append a sampled token; retire the slot if the request is done.
@@ -397,21 +486,76 @@ class LMEngine:
       return False
     return True
 
+  def _pad_prefill(self, tokens: np.ndarray, start: int):
+    """Bucket-pad a token run fed at positions [start, start+len) into
+    the fused-prefill operand triple (toks, lens, pos0)."""
+    n = tokens.size
+    bucket = min(max(self.max_len, 1), _next_pow2(n))
+    self._count_prefill(1, bucket)
+    padded = np.zeros((1, bucket), np.int32)
+    padded[0, :n] = tokens
+    return (jnp.asarray(padded), jnp.asarray([n], jnp.int32),
+            jnp.full((1,), start, jnp.int32))
+
   def _admit(self, req: Request, slot: int, temperature: float) -> None:
     """Prefill `req` into a fresh batch-1 state and splice it into `slot`.
+
+    With a prefix cache, admission first looks up the longest cached
+    prefix (capped at plen - 1: the suffix prefill must feed at least
+    one token so there are fresh last-position logits to sample from),
+    splices its snapshot into the fresh-slot template — eager slot
+    surgery, bit-identical to the cold state at that position — and runs
+    the SAME bucketed fused prefill over only the suffix, starting at
+    the cached position. When the trie has observed a deeper shared
+    prefix than any entry covers (a fork between sibling prompts), the
+    suffix prefill is split at the fork and the intermediate state
+    published, so the next sibling splices from the fork instead of
+    re-prefilling the shared template. The full prompt's snapshot is
+    then published too, so every admission deepens the cache.
+
     A speculative engine prefills the draft's state alongside: both
-    models must have consumed the prompt before drafting can start."""
+    models must have consumed the prompt before drafting can start. The
+    draft splices too when the hit carries a draft snapshot; otherwise
+    it cold-prefills the whole prompt (states are independent — a
+    draft-side cold start costs accept-rate nothing).
+    """
+    t_admit = time.perf_counter()
     plen = req.prompt.size
-    bucket = min(max(self.max_len, 1), _next_pow2(plen))
-    self._prefill_buckets.add((1, int(bucket)))
-    padded = np.zeros((1, bucket), np.int32)
-    padded[0, :plen] = req.prompt
-    toks = jnp.asarray(padded)
-    plens = jnp.asarray([plen], jnp.int32)
-    pos0 = jnp.zeros((1,), jnp.int32)
+    cached, draft_snap = 0, None
+    start = self._fresh_slot
+    publish_fork = 0
+    if self._cache is not None and plen > 1:
+      cached, payload = self._cache.lookup(req.prompt[:plen - 1])
+      if cached:
+        target_snap, draft_snap = payload
+        start = self.api.splice_prefix(self.cfg, self._fresh_slot,
+                                       target_snap)
+      # fork materialization: entries live at whole inserted prompts, so
+      # two prompts sharing a prefix but diverging before any entry end
+      # would never hit each other. The trie has *observed* their common
+      # prefix even without an entry there — when that uncovered depth is
+      # deep enough to be a real template (fork_min_tokens), split the
+      # prefill at the fork and publish the intermediate state, so the
+      # third sibling onward splices it. Carries are only valid at exact
+      # lengths, which is why the fork state must come from a prefill
+      # that stops there rather than a post-hoc slice.
+      fork = self._cache.common_prefix_len(req.prompt[:plen - 1])
+      if fork - cached >= self._cache.fork_min_tokens:
+        publish_fork = fork
+    # the draft snapshot (if any) is valid at the pre-fork depth only
+    draft_from = cached
+    if publish_fork:
+      ftoks, fplens, fpos0 = self._pad_prefill(
+          req.prompt[cached:publish_fork], cached)
+      _, start = self._prefill(self.params, start, ftoks, fplens, fpos0)
+      self._cache.insert(
+          req.prompt[:publish_fork],
+          (self.api.prefix_view(self.cfg, start, publish_fork), None))
+      cached = publish_fork
+    toks, plens, pos0 = self._pad_prefill(req.prompt[cached:], cached)
     sl = jnp.asarray(slot, jnp.int32)
-    last, slot_state = self._prefill(self.params, self._fresh_slot, toks,
-                                     plens, pos0)
+    last, slot_state = self._prefill(self.params, start, toks, plens,
+                                     pos0)
     self.state = self._insert(self.state, slot_state, sl)
     self.positions = self.positions.at[slot].set(plen)
     self._slots[slot] = _SlotState(req=req, remaining=req.max_new_tokens,
@@ -419,15 +563,37 @@ class LMEngine:
     # the first token always comes from the TARGET's prefill logits —
     # identical to vanilla admission, the draft only ever proposes
     tok = int(np.asarray(self._sample(last, temperature))[0, 0])
+    self._slots[slot].ttft_s = time.perf_counter() - t_admit
+    draft_slot = None
     if self._record_token(slot, tok, plen):
       self._slots[slot].next_tok = tok
       if self.speculate:
         # only slots that survive admission ever draft — a request that
         # retires here (budget 1, EOS in the prefill logits, full
         # cache) would waste the whole draft prefill
-        _, draft_slot = self._prefill(self.draft_params, self._fresh_slot,
-                                      toks, plens, pos0)
+        if draft_snap is not None:
+          dstart = self.api.splice_prefix(self.cfg, self._fresh_slot,
+                                          draft_snap)
+          dtoks, dplens, dpos0 = self._pad_prefill(
+              req.prompt[draft_from:], draft_from)
+          _, draft_slot = self._prefill(self.draft_params, dstart, dtoks,
+                                        dplens, dpos0)
+        else:
+          ftoks, fplens, fpos0 = self._pad_prefill(req.prompt, 0)
+          _, draft_slot = self._prefill(self.draft_params,
+                                        self._fresh_slot, ftoks, fplens,
+                                        fpos0)
         self.draft_state = self._insert(self.draft_state, draft_slot, sl)
+    if self._cache is not None:
+      # publish the full prompt (admission cost already sunk); carries
+      # in slot_state are exactly at plen, so the snapshot is valid
+      snap = self.api.prefix_view(self.cfg, slot_state, plen)
+      dsnap = (self.api.prefix_view(self.cfg, draft_slot, plen)
+               if draft_slot is not None else None)
+      self._cache.insert(req.prompt, (snap, dsnap))
+    # a request that retired during admission queued its publish; the
+    # batch state already holds this slot's rows, so flush is safe here
+    self._flush_retire_publish()
 
   def _admit_from_queue(self, temperature: float) -> None:
     slot = 0
@@ -458,6 +624,8 @@ class LMEngine:
       if self._slots[i].active and self._record_token(i, int(toks[i, 0]),
                                                       int(pos[i])):
         self._slots[i].next_tok = int(toks[i, 0])
+    # vanilla path: the stepped state is final — retired prefixes publish
+    self._flush_retire_publish()
 
   def _decode_all_speculative(self) -> None:
     """One speculative iteration for every slot: draft k, verify k+1 in
@@ -542,9 +710,11 @@ class LMEngine:
     # because every path computes the same committed state bit-for-bit
     # (window scan == masked replay scan == lone steps — the same
     # cross-program invariant losslessness rests on).
+    replayed = False
     if self._has_carry:
       live = [i for i in range(self.batch) if self._slots[i].active]
       if live and any(commit[i] != k + 1 for i in live):
+        replayed = True
         # a surviving slot rejected part of its window: carries come
         # from the snapshots, replayed through the accepted prefix
         restored = merge_rewind(self.state, snap, self._carry)
@@ -560,6 +730,12 @@ class LMEngine:
         # up with a single step instead of a (k+1)-position replay
         _, self.draft_state = self._step(self.draft_params,
                                          self.draft_state, cur, pos0 + k)
+    # retired prefixes: carries are committed values only if this family
+    # has none (KV rows [0, fed) are always exact) or the masked replay
+    # above re-advanced every row to its own commit count — the full-
+    # accept fast path leaves partially-accepted retired slots with
+    # post-window carry garbage, so their publishes are dropped
+    self._flush_retire_publish(valid=not self._has_carry or replayed)
 
   def _check_greedy_only(self, temperature: float) -> None:
     if temperature > 0.0 and self.speculate:
@@ -604,7 +780,7 @@ class LMEngine:
           f"prefill would pass max_len={self.max_len} "
           f"(start {int(start.max())} + prompt {p})")
     bucket = min(max(self.max_len, 1), _next_pow2(p))
-    self._prefill_buckets.add((b, int(bucket)))
+    self._count_prefill(b, bucket)
     padded = np.zeros((b, bucket), np.int32)
     padded[:, :p] = prompts
     logits, self.state = self._prefill(

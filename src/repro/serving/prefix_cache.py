@@ -1,0 +1,318 @@
+"""Radix-trie prefix cache: shared-prompt serving without re-prefill.
+
+Fleet traffic is dominated by prompt overlap — system prompts, few-shot
+templates, multi-turn histories — and the paper's whole §4 economics are
+about weight traffic at small batch, so recomputing an identical prefill
+for every request is pure waste. This module caches *decode-state
+snapshots* keyed by token prefixes so `LMEngine._admit` can splice a
+cached prefix into a slot and run the bucketed fused prefill only over
+the uncached suffix (same `make_prefill_program`, same bucket
+signatures — the splice itself is eager slot surgery, never a new jit
+program).
+
+What a snapshot is (the per-family contract, `ModelApi.prefix_view`):
+
+  attention KV / MLA latents   rows [0, m) sliced on the length axis —
+                               the only rows a causal decode ever reads;
+                               splicing writes them back into a fresh
+                               max_len-shaped state (zeros elsewhere,
+                               exactly what a cold prefill leaves there)
+  SSM / GRU / xLSTM carries    the fixed-size carry tensor, copied whole
+                               — valid at EXACTLY the snapshot length m
+                               (read-modify-write state cannot be sliced
+                               to a shorter prefix)
+  step-invariant leaves        (whisper's encoder memory) copied whole
+
+Because carries are only valid at their exact length, entries are never
+truncated at lookup: `match_longest_prefix` returns the longest *whole
+inserted entry* that prefixes the query, not an arbitrary trie position.
+Splicing a hit is then bit-exact: the reconstructed batch-1 state equals
+the cold prefill's state after m tokens bit-for-bit, so cached-splice
+greedy serving is token-for-token identical to cold serving (pinned by
+tests/test_prefix_cache.py and the `prefix_splice_stability` check in
+repro.analysis).
+
+Eviction is byte-accounted LRU: every entry's snapshot bytes (summed
+over array leaves) count against `capacity_mb`; inserting past capacity
+evicts least-recently-used entries first (lookup hits refresh recency).
+An entry bigger than the whole capacity is rejected, not admitted.
+Counters (hits / misses / evictions / inserts / bytes) surface through
+`stats()` — `LMEngine.cache_stats()` re-exports them so benches, the
+serve driver, and the auditor read one surface.
+
+Deeper entries currently duplicate the KV rows of their shallower
+ancestors (each snapshot is self-contained); block-sharing those rows
+and host-memory offload are the disaggregated-serving follow-on
+(ROADMAP item 3).
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Iterable, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["PrefixCache", "snapshot_bytes"]
+
+#: host bookkeeping charged per cached token (trie edges + key tuples)
+_TOKEN_OVERHEAD_BYTES = 8
+
+
+def _as_key(tokens: Iterable) -> tuple:
+  """Normalize a prompt (list / tuple / np array) to a hashable key."""
+  arr = np.asarray(tokens)
+  if arr.ndim != 1:
+    raise ValueError(f"token key must be 1-D, got shape {arr.shape}")
+  return tuple(int(t) for t in arr)
+
+
+def snapshot_bytes(payload: Any) -> int:
+  """Accounted size of a snapshot payload: array bytes over all leaves."""
+  total = 0
+  for leaf in jax.tree.leaves(payload):
+    size = getattr(leaf, "size", None)
+    itemsize = getattr(getattr(leaf, "dtype", None), "itemsize", None)
+    if size is not None and itemsize is not None:
+      total += int(size) * int(itemsize)
+  return total
+
+
+class _Node:
+  """One radix-trie node: a compressed edge from its parent, children
+  keyed by their edge's first token, and (optionally) the key of the
+  entry that terminates exactly here."""
+  __slots__ = ("edge", "children", "key", "parent")
+
+  def __init__(self, edge: tuple = (), parent: Optional["_Node"] = None):
+    self.edge = edge
+    self.children: dict = {}
+    self.key: Optional[tuple] = None
+    self.parent = parent
+
+
+class _Entry:
+  __slots__ = ("payload", "nbytes", "node")
+
+  def __init__(self, payload: Any, nbytes: int, node: _Node):
+    self.payload = payload
+    self.nbytes = nbytes
+    self.node = node
+
+
+class PrefixCache:
+  """Byte-accounted LRU cache of decode-state snapshots keyed by token
+  prefixes, with radix-trie longest-prefix matching.
+
+  The payload is opaque to the cache (the engine stores a
+  `(target_snapshot, draft_snapshot_or_None)` pair); only its array
+  leaves are byte-accounted. `match_longest_prefix` is pure (no counter
+  or recency mutation) — `lookup` is the serving entry point that also
+  counts hits/misses and refreshes LRU recency.
+  """
+
+  def __init__(self, capacity_mb: float = 256.0, *,
+               fork_min_tokens: int = 2):
+    if capacity_mb <= 0:
+      raise ValueError(f"capacity_mb must be > 0, got {capacity_mb}")
+    if fork_min_tokens < 1:
+      raise ValueError(
+          f"fork_min_tokens must be >= 1, got {fork_min_tokens}")
+    self.capacity_bytes = int(capacity_mb * (1 << 20))
+    #: minimum uncovered shared-prefix depth worth materializing a fork
+    #: snapshot for (guards against chance 1-token prompt collisions)
+    self.fork_min_tokens = fork_min_tokens
+    self._root = _Node()
+    #: key -> _Entry, ordered oldest-recency first (LRU eviction order)
+    self._entries: "OrderedDict[tuple, _Entry]" = OrderedDict()
+    self.bytes = 0
+    self.hits = 0
+    self.misses = 0
+    self.evictions = 0
+    self.inserts = 0
+    self.rejected_oversize = 0
+
+  def __len__(self) -> int:
+    return len(self._entries)
+
+  def __contains__(self, tokens) -> bool:
+    return _as_key(tokens) in self._entries
+
+  # -- lookup ---------------------------------------------------------------
+
+  def match_longest_prefix(self, tokens) -> Tuple[int, Any]:
+    """Longest inserted entry that is a prefix of `tokens`.
+
+    Returns `(m, payload)` with `m` the entry's length (0 and None when
+    nothing matches). Maximality: no inserted entry longer than `m`
+    prefixes `tokens`. Pure — counters and recency are untouched (that
+    is `lookup`'s job), so property tests can drive it as a function.
+    """
+    key = _as_key(tokens)
+    node, depth = self._root, 0
+    best_key: Optional[tuple] = None
+    while True:
+      if node.key is not None:
+        best_key = node.key
+      if depth >= len(key):
+        break
+      child = node.children.get(key[depth])
+      if child is None:
+        break
+      edge = child.edge
+      if (len(key) - depth < len(edge)
+          or key[depth:depth + len(edge)] != edge):
+        # entries live only at node boundaries; a partial edge match
+        # cannot host one
+        break
+      depth += len(edge)
+      node = child
+    if best_key is None:
+      return 0, None
+    return len(best_key), self._entries[best_key].payload
+
+  def common_prefix_len(self, tokens) -> int:
+    """Longest common prefix between `tokens` and ANY inserted key —
+    the trie walk depth, partial edge matches included.
+
+    Always >= the `match_longest_prefix` length; the gap between the
+    two is an *observed fork*: two prompts provably share that prefix
+    but no snapshot exists at it (entries sit at full inserted keys).
+    `LMEngine._admit` closes the gap by splitting its prefill at the
+    fork and publishing the intermediate state — carries are only valid
+    at exact lengths, so the fork snapshot must be materialized by a
+    prefill that actually stops there, never sliced after the fact.
+    Pure, like `match_longest_prefix`.
+    """
+    key = _as_key(tokens)
+    node, depth = self._root, 0
+    while depth < len(key):
+      child = node.children.get(key[depth])
+      if child is None:
+        return depth
+      edge = child.edge
+      limit = min(len(edge), len(key) - depth)
+      i = 0
+      while i < limit and edge[i] == key[depth + i]:
+        i += 1
+      depth += i
+      if i < len(edge):
+        return depth
+      node = child
+    return depth
+
+  def lookup(self, tokens) -> Tuple[int, Any]:
+    """`match_longest_prefix` + hit/miss accounting + LRU touch."""
+    m, payload = self.match_longest_prefix(tokens)
+    if m:
+      self.hits += 1
+      self._entries.move_to_end(_as_key(tokens)[:m])
+    else:
+      self.misses += 1
+    return m, payload
+
+  # -- insert / evict -------------------------------------------------------
+
+  def insert(self, tokens, payload: Any) -> bool:
+    """Admit `(tokens -> payload)`; returns False when rejected.
+
+    Re-inserting an existing key replaces its payload (and refreshes
+    recency). Admission evicts LRU entries until the new entry fits; a
+    payload larger than the whole capacity is rejected outright.
+    """
+    key = _as_key(tokens)
+    if not key:
+      raise ValueError("cannot cache an empty prefix")
+    nbytes = snapshot_bytes(payload) + _TOKEN_OVERHEAD_BYTES * len(key)
+    if nbytes > self.capacity_bytes:
+      self.rejected_oversize += 1
+      return False
+    old = self._entries.get(key)
+    if old is not None:
+      self.bytes -= old.nbytes
+      old.payload, old.nbytes = payload, nbytes
+      self.bytes += nbytes
+      self._entries.move_to_end(key)
+      self._evict_to_fit()
+      return True
+    while self.bytes + nbytes > self.capacity_bytes:
+      self._evict_one()
+    node = self._splice_node(key)
+    node.key = key
+    self._entries[key] = _Entry(payload, nbytes, node)
+    self.bytes += nbytes
+    self.inserts += 1
+    return True
+
+  def _splice_node(self, key: tuple) -> _Node:
+    """Walk/extend the trie to the node at exactly `key`, splitting
+    partially matched edges on the way."""
+    node, depth = self._root, 0
+    while depth < len(key):
+      child = node.children.get(key[depth])
+      if child is None:
+        new = _Node(key[depth:], parent=node)
+        node.children[key[depth]] = new
+        return new
+      edge = child.edge
+      common = 0
+      limit = min(len(edge), len(key) - depth)
+      while common < limit and edge[common] == key[depth + common]:
+        common += 1
+      if common < len(edge):
+        # split: parent -> mid(edge[:common]) -> child(edge[common:])
+        mid = _Node(edge[:common], parent=node)
+        node.children[key[depth]] = mid
+        child.edge = edge[common:]
+        child.parent = mid
+        mid.children[child.edge[0]] = child
+        child = mid
+      depth += common
+      node = child
+    return node
+
+  def _evict_to_fit(self) -> None:
+    while self.bytes > self.capacity_bytes:
+      self._evict_one()
+
+  def _evict_one(self) -> None:
+    key, entry = self._entries.popitem(last=False)
+    self.bytes -= entry.nbytes
+    self.evictions += 1
+    node = entry.node
+    node.key = None
+    # prune now-useless structure: drop childless entry-less tails, then
+    # merge single-child entry-less pass-through nodes back into one edge
+    while (node.parent is not None and node.key is None
+           and not node.children):
+      parent = node.parent
+      del parent.children[node.edge[0]]
+      node = parent
+    if (node.parent is not None and node.key is None
+        and len(node.children) == 1):
+      (only,) = node.children.values()
+      only.edge = node.edge + only.edge
+      only.parent = node.parent
+      node.parent.children[node.edge[0]] = only
+
+  def clear(self) -> None:
+    self._root = _Node()
+    self._entries.clear()
+    self.bytes = 0
+
+  # -- introspection --------------------------------------------------------
+
+  def stats(self) -> dict:
+    """One stats surface for benches / serve driver / auditor."""
+    lookups = self.hits + self.misses
+    return {
+        "hits": self.hits,
+        "misses": self.misses,
+        "evictions": self.evictions,
+        "inserts": self.inserts,
+        "rejected_oversize": self.rejected_oversize,
+        "entries": len(self._entries),
+        "bytes": self.bytes,
+        "capacity_bytes": self.capacity_bytes,
+        "hit_rate": self.hits / lookups if lookups else 0.0,
+    }

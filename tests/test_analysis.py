@@ -159,6 +159,20 @@ def test_lifecycle_check_green():
   assert stats["insert"] == 1
 
 
+def test_prefix_splice_check_green():
+  findings, infos = lifecycle.check_prefix_splice_stability(["qwen3-4b"],
+                                                            ["jnp"])
+  assert findings == [], findings
+  (info,) = infos
+  # the scenario really exercised the splice path, not a vacuous pass
+  assert info["cache_stats"]["hits"] >= 1
+  stats = info["compile_stats"]
+  if stats["step"] < 0:
+    pytest.skip("runtime does not expose jit cache sizes")
+  # warm set == cold set == the two designed buckets
+  assert sorted(stats["prefill_buckets"]) == [(1, 4), (1, 8)]
+
+
 def test_sharding_coverage_flags_known_debt():
   rep = report.AuditReport()
   analysis._sharding_findings(["qwen3-4b"], rep)
