@@ -1,14 +1,37 @@
-"""Roofline table — reads the dry-run artifacts (experiments/dryrun/*.json)
-and emits the three-term roofline per (arch x shape x mesh) with the
-dominant bottleneck and useful-FLOP fraction (EXPERIMENTS.md §Roofline)."""
+"""Roofline table — two surfaces:
+
+* `run()` (the benchmarks/run.py driver): reads the dry-run artifacts
+  (experiments/dryrun/*.json) and emits the three-term roofline per
+  (arch x shape x mesh) with the dominant bottleneck and useful-FLOP
+  fraction (EXPERIMENTS.md §Roofline).
+* `--json` (CI): traces the smoke decode programs, pairs each one's
+  STATIC ledger (repro.analysis.budgets.program_ledger — the exact
+  numbers the budget gate pins) with a MEASURED wall-clock sample of
+  the same jitted step, and writes BENCH_roofline.json. Static-vs-real
+  drift is then visible per run: a static ledger that stops predicting
+  the measured ranking is a parser gap or a model change the committed
+  budgets haven't caught up with.
+"""
 from __future__ import annotations
 
 import glob
 import json
 import os
+import time
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
+OUT_PATH = "BENCH_roofline.json"
+
+#: the CI pairing grid: decode (the hot path) on two contrasting
+#: families, both kernel policies, float + int8
+PAIR_CONFIGS = ("qwen3-4b", "xlstm-350m")
+STEPS = 20
+
+#: program_ledger fields worth pairing against a wall-clock sample
+STATIC_FIELDS = ("flops", "dot_flops", "hbm_bytes", "arithmetic_intensity",
+                 "dominant", "roofline_fraction", "input_bytes",
+                 "peak_live_bytes")
 
 
 def run() -> list[dict]:
@@ -32,6 +55,91 @@ def run() -> list[dict]:
   return rows
 
 
+def _measure_decode(config: str, policy: str, quant: str) -> dict:
+  """Wall-clock the smoke decode step at the audit geometry: jit once,
+  run one warmup (compile), then average STEPS timed steps."""
+  import jax
+  import jax.numpy as jnp
+  import numpy as np
+
+  from repro import configs
+  from repro.analysis.targets import BATCH, MAX_LEN
+  from repro.kernels import dispatch
+  from repro.layers.common import identity_constraint
+  from repro.models.api import get_model
+  from repro.quant.ptq import quantize_params
+
+  cfg = configs.get_smoke(config)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  if quant == "int8":
+    params = quantize_params(params)
+  state = api.init_decode_state(cfg, BATCH, MAX_LEN)
+  pol = (dispatch.JNP_ONLY if policy == "jnp"
+         else dispatch.decode_policy(BATCH))
+  cs = identity_constraint
+  if cfg.family == "deepspeech":
+    tok = jnp.asarray(np.zeros((BATCH, 1, cfg.input_dim), np.float32))
+  else:
+    tok = jnp.zeros((BATCH, 1), jnp.int32)
+  pos = jnp.zeros((BATCH,), jnp.int32)
+
+  @jax.jit
+  def step(p, s, t, ps):
+    return api.decode_step(p, s, t, ps, cfg, cs, pol)
+
+  out, state = step(params, state, tok, pos)
+  jax.block_until_ready(out)
+  t0 = time.perf_counter()
+  for _ in range(STEPS):
+    out, state = step(params, state, tok, pos)
+  jax.block_until_ready(out)
+  wall = (time.perf_counter() - t0) / STEPS
+  return dict(wall_s_per_step=round(wall, 6), steps=STEPS)
+
+
+def paired_rows() -> list[dict]:
+  """One row per (config, policy, quant): the static budget ledger of
+  the traced decode program next to a measured wall-clock sample of the
+  same step."""
+  from repro.analysis.budgets import program_ledger
+  from repro.analysis.targets import iter_targets
+
+  rows = []
+  for target in iter_targets(PAIR_CONFIGS, programs=("decode",)):
+    ledger = program_ledger(target)
+    static = {k: ledger[k] for k in STATIC_FIELDS if k in ledger}
+    measured = _measure_decode(target.config, target.policy, target.quant)
+    rows.append(dict(bench="roofline_paired", config=target.config,
+                     policy=target.policy, quant=target.quant,
+                     program="decode", static=static, measured=measured))
+  return rows
+
+
+def main() -> None:
+  import argparse
+  ap = argparse.ArgumentParser(description=__doc__)
+  ap.add_argument("--json", action="store_true",
+                  help="pair static decode ledgers with measured "
+                       f"wall-clock and write {OUT_PATH}")
+  args = ap.parse_args()
+  if not args.json:
+    for r in run():
+      print(r)
+    return
+  rows = paired_rows()
+  with open(OUT_PATH, "w") as f:
+    json.dump({"rows": rows, "dryrun": run()}, f, indent=1, sort_keys=True)
+    f.write("\n")
+  for r in rows:
+    s, m = r["static"], r["measured"]
+    print(f"{r['config']}|{r['policy']}|{r['quant']}: "
+          f"static {s.get('dominant', '?')}-bound "
+          f"ai={s.get('arithmetic_intensity', 0)} "
+          f"hbm={s.get('hbm_bytes', 0)} -> "
+          f"measured {m['wall_s_per_step'] * 1e6:.0f} us/step")
+  print(f"wrote {len(rows)} paired rows to {OUT_PATH}")
+
+
 if __name__ == "__main__":
-  for r in run():
-    print(r)
+  main()

@@ -12,9 +12,16 @@ and optimized HLO:
                       prefill signatures and token-for-token output
   transfer_lint       no host round-trips; donation actually aliases
   sharding_coverage   every production param leaf has a sharding rule
+  cost_budget         HLO FLOP/byte/collective ledger within the
+                      committed tolerance band (budgets.json)
+  memory_budget       jaxpr liveness peak-bytes within its band
+  compression_ledger  static param count/bytes exactly as committed;
+                      compressed trees strictly smaller
 
 Findings diff against the committed allowlist (`baseline.json`); any
-ident not in it is a regression. CLI: `python -m repro.analysis audit`.
+ident not in it is a regression. Budget ledgers diff against committed
+numbers (`budgets.json`) — see `python -m repro.analysis budgets`.
+CLI: `python -m repro.analysis audit`.
 """
 from __future__ import annotations
 
@@ -23,6 +30,7 @@ from typing import Iterable
 import jax
 
 from repro import configs
+from repro.analysis import budgets as budgets_mod
 from repro.analysis import checks, lifecycle
 from repro.analysis.report import (AuditReport, CHECKS, Finding,
                                    default_baseline_path, load_baseline,
@@ -63,7 +71,9 @@ def run_audit(config_names: Iterable[str] = DEFAULT_CONFIGS,
               quants: Iterable[str] = QUANTS,
               programs: Iterable[str] = PROGRAMS,
               *, deep: bool = False, run_lifecycle: bool = True,
-              run_sharding: bool = True) -> AuditReport:
+              run_sharding: bool = True,
+              run_budgets: bool = True,
+              budgets_path=None) -> AuditReport:
   """Trace + check the requested grid; baseline NOT applied (caller's
   job, so tests can assert on raw findings)."""
   config_names = [normalize_config(n) for n in config_names]
@@ -71,9 +81,15 @@ def run_audit(config_names: Iterable[str] = DEFAULT_CONFIGS,
       configs=list(config_names), policies=list(policies),
       quants=list(quants), programs=list(programs), deep=deep,
       jax_version=jax.__version__, checks=list(CHECKS)))
+  budget_audit = None
+  if run_budgets:
+    budget_audit = budgets_mod.BudgetAudit(
+        budgets_mod.load_budgets(budgets_path))
   for target in iter_targets(config_names, policies, quants, programs,
                              deep=deep):
     findings, info = checks.run_target_checks(target)
+    if budget_audit is not None:
+      info["budget"] = budget_audit.add_target(target)
     report.extend(findings)
     report.targets.append(info)
   if run_lifecycle:
@@ -86,4 +102,10 @@ def run_audit(config_names: Iterable[str] = DEFAULT_CONFIGS,
     report.targets.extend(sinfos)
   if run_sharding:
     _sharding_findings(config_names, report)
+  if budget_audit is not None:
+    for name in config_names:
+      budget_audit.add_compression(name)
+    report.extend(budget_audit.findings)
+    report.meta["budgets"] = budget_audit.fresh()
+    report.meta["budget_ratchet_stale"] = budget_audit.warnings
   return report

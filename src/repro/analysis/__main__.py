@@ -1,4 +1,4 @@
-"""CLI: `python -m repro.analysis audit [...]`.
+"""CLI: `python -m repro.analysis {audit,budgets} [...]`.
 
 Exit status is the CI contract: 0 when every finding is allowlisted in
 the baseline, 1 when any NEW finding appears (a hot-path regression).
@@ -11,15 +11,24 @@ the baseline, 1 when any NEW finding appears (a hot-path regression).
 
   # accept current findings as known debt (then review + commit)
   python -m repro.analysis audit --write-baseline
+
+  # cost/memory/compression ledgers vs committed budgets.json
+  python -m repro.analysis budgets --configs qwen3_4b,zamba2_7b
+
+  # refresh the committed numbers after an intentional change
+  python -m repro.analysis budgets --update
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 from repro.analysis import (DEFAULT_CONFIGS, POLICIES, PROGRAMS, QUANTS,
                             load_baseline, run_audit, write_baseline)
+from repro.analysis import budgets as budgets_mod
 from repro.analysis.report import default_baseline_path
+from repro.analysis.targets import iter_targets, normalize_config
 
 
 def _csv(text: str) -> list:
@@ -49,12 +58,36 @@ def main(argv=None) -> int:
                      help="skip the (executing) retrace-stability check")
   audit.add_argument("--no-sharding", action="store_true",
                      help="skip production-scale sharding coverage")
+  audit.add_argument("--no-budgets", action="store_true",
+                     help="skip the cost/memory/compression budget gates")
+
+  budgets = sub.add_parser(
+      "budgets", help="cost/memory/compression ledgers vs budgets.json")
+  budgets.add_argument("--configs", type=_csv,
+                       default=list(DEFAULT_CONFIGS))
+  budgets.add_argument("--policies", type=_csv, default=list(POLICIES))
+  budgets.add_argument("--quants", type=_csv, default=list(QUANTS))
+  budgets.add_argument("--programs", type=_csv, default=list(PROGRAMS))
+  budgets.add_argument("--budgets", default=None,
+                       help=f"committed numbers (default: "
+                            f"{budgets_mod.default_budgets_path()})")
+  budgets.add_argument("--report", default=None,
+                       help="write ledgers + findings JSON here")
+  budgets.add_argument("--update", action="store_true",
+                       help="merge measured numbers into budgets.json")
+  budgets.add_argument("--shallow", action="store_true",
+                       help="skip lowering/compiling window/prefill/train "
+                            "(their cost ledgers are then not refreshed)")
   args = parser.parse_args(argv)
+
+  if args.cmd == "budgets":
+    return _budgets_main(args)
 
   report = run_audit(args.configs, args.policies, args.quants,
                      args.programs, deep=args.deep,
                      run_lifecycle=not args.no_lifecycle,
-                     run_sharding=not args.no_sharding)
+                     run_sharding=not args.no_sharding,
+                     run_budgets=not args.no_budgets)
   if args.write_baseline:
     path = args.baseline or default_baseline_path()
     base = write_baseline(report, path)
@@ -64,7 +97,48 @@ def main(argv=None) -> int:
   if args.report:
     report.save(args.report)
   print(report.summary())
+  for w in report.meta.get("budget_ratchet_stale", ()):
+    print(f"  RATCHET {w['coord']} {w['metric']}: "
+          f"{w['committed']} -> {w['current']} ({w['rel']:+.1%})")
   return 0 if report.ok else 1
+
+
+def _budgets_main(args) -> int:
+  committed = budgets_mod.load_budgets(args.budgets)
+  audit = budgets_mod.BudgetAudit(committed)
+  configs = [normalize_config(n) for n in args.configs]
+  for target in iter_targets(configs, args.policies, args.quants,
+                             args.programs, deep=not args.shallow):
+    audit.add_target(target)
+  for name in configs:
+    audit.add_compression(name)
+
+  if args.update:
+    merged = budgets_mod.merge_budgets(committed, audit.fresh())
+    budgets_mod.write_budgets(merged, args.budgets)
+    path = args.budgets or budgets_mod.default_budgets_path()
+    print(f"budgets: wrote {len(audit.programs)} program ledgers and "
+          f"{len(audit.compression)} compression ledgers to {path}")
+    return 0
+
+  result = dict(audit.fresh(),
+                findings=[f.to_dict() for f in audit.findings],
+                ratchet_stale=audit.warnings,
+                ok=not audit.findings)
+  if args.report:
+    with open(args.report, "w") as f:
+      json.dump(result, f, indent=1, sort_keys=True)
+      f.write("\n")
+  print(f"budgets: {len(audit.programs)} programs, "
+        f"{len(audit.compression)} compression ledgers, "
+        f"{len(audit.findings)} findings, "
+        f"{len(audit.warnings)} ratchet-stale")
+  for f in audit.findings:
+    print(f"  RED     {f.ident}\n          {f.detail}")
+  for w in audit.warnings:
+    print(f"  RATCHET {w['coord']} {w['metric']}: "
+          f"{w['committed']} -> {w['current']} ({w['rel']:+.1%})")
+  return 0 if not audit.findings else 1
 
 
 if __name__ == "__main__":

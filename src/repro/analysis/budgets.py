@@ -1,0 +1,301 @@
+"""Static cost & memory budgets: per-program ledgers diffed against
+committed numbers (`analysis/budgets.json`) with tolerance bands.
+
+For every traced program the auditor builds two ledgers:
+
+* a **cost ledger** from the optimized HLO (`dist.hlo_cost`): FLOPs,
+  dot FLOPs, HBM bytes, collective payload/wire bytes, arithmetic
+  intensity, and the roofline-dominant term — available whenever the
+  target was compiled (decode always; window/prefill/train under
+  `--deep`);
+* a **memory ledger** from the jaxpr (`analysis.liveness`): static peak
+  live-buffer bytes with donation credit — available for every target.
+
+Each gated metric diffs against the committed number with a per-metric
+relative tolerance band:
+
+  regression beyond the band   -> a `cost_budget` / `memory_budget`
+                                  Finding (red; CI fails)
+  improvement beyond the band  -> a "ratchet stale" WARNING: the code
+                                  got cheaper and the committed number
+                                  no longer pins it — run
+                                  `python -m repro.analysis budgets
+                                  --update` and commit the new floor
+  missing committed entry      -> an `unbudgeted` Finding (the grid
+                                  grew; --update to admit it)
+
+The **compression ledger** (`analysis.compression`) is gated exactly,
+tolerance 0: parameter counts and bytes are shape arithmetic, any drift
+is a real model-size change. Its strictness assertions ("the compressed
+tree is strictly smaller, whole-tree and per-device") are
+`compression_ledger` findings independent of the committed numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable, Optional
+
+import jax
+
+from repro.analysis import compression, liveness
+from repro.analysis.report import Finding
+from repro.analysis.targets import TraceTarget
+from repro.dist import hlo_cost
+
+#: relative tolerance band per gated metric; direction: higher is worse
+TOLERANCES = {
+    # cost_budget (optimized HLO)
+    "flops": 0.05,
+    "dot_flops": 0.05,
+    "hbm_bytes": 0.10,
+    "collective_bytes": 0.10,
+    "collective_wire_bytes": 0.10,
+    # memory_budget (jaxpr liveness)
+    "input_bytes": 0.0,
+    "peak_live_bytes": 0.05,
+}
+
+#: which check each gated metric reports under
+CHECK_OF = {
+    "flops": "cost_budget",
+    "dot_flops": "cost_budget",
+    "hbm_bytes": "cost_budget",
+    "collective_bytes": "cost_budget",
+    "collective_wire_bytes": "cost_budget",
+    "input_bytes": "memory_budget",
+    "peak_live_bytes": "memory_budget",
+}
+
+#: exact-gated compression metrics per variant
+COMPRESSION_METRICS = ("param_count", "param_bytes", "device_bytes")
+
+
+def default_budgets_path() -> str:
+  return os.path.join(os.path.dirname(__file__), "budgets.json")
+
+
+def load_budgets(path: Optional[str] = None) -> dict:
+  """Committed budgets; a missing file is empty (every coordinate is
+  then `unbudgeted` — the bootstrap state before the first --update)."""
+  path = default_budgets_path() if path is None else path
+  if not os.path.exists(path):
+    return {"meta": {}, "programs": {}, "compression": {}}
+  with open(path) as f:
+    data = json.load(f)
+  for section in ("programs", "compression"):
+    if not isinstance(data.get(section), dict):
+      raise ValueError(f"budgets {path}: expected a {section!r} dict")
+  return data
+
+
+def write_budgets(data: dict, path: Optional[str] = None) -> None:
+  path = default_budgets_path() if path is None else path
+  with open(path, "w") as f:
+    json.dump(data, f, indent=1, sort_keys=True)
+    f.write("\n")
+
+
+def merge_budgets(committed: dict, fresh: dict) -> dict:
+  """--update semantics: refresh what this run measured, keep the rest.
+
+  Per-coordinate entries merge field-wise, so a shallow run (no cost
+  ledger for window/prefill/train) updates the memory metrics it did
+  compute without dropping the committed cost metrics."""
+  out = {
+      "meta": dict(committed.get("meta", {})),
+      "programs": {k: dict(v)
+                   for k, v in committed.get("programs", {}).items()},
+      "compression": {k: v
+                      for k, v in committed.get("compression", {}).items()},
+  }
+  out["meta"].update(fresh.get("meta", {}))
+  for k, v in fresh.get("programs", {}).items():
+    out["programs"][k] = {**out["programs"].get(k, {}), **v}
+  out["compression"].update(fresh.get("compression", {}))
+  return out
+
+
+def coord_key(coord: dict) -> str:
+  return "|".join((coord["config"], coord["policy"], coord["quant"],
+                   coord["program"]))
+
+
+# ---------------------------------------------------------------------------
+# Ledger construction.
+# ---------------------------------------------------------------------------
+
+def program_ledger(target: TraceTarget) -> dict:
+  """Cost + memory ledger for one traced program.
+
+  Memory metrics always; cost metrics only when the target carries
+  optimized HLO (compiled_text)."""
+  live = liveness.analyze_jaxpr(target.jaxpr, n_params=target.n_params,
+                                n_donated=target.n_donated)
+  ledger = dict(
+      input_bytes=live.input_bytes,
+      donated_bytes=live.donated_bytes,
+      credited_bytes=live.credited_bytes,
+      output_bytes=live.output_bytes,
+      transient_bytes=live.transient_bytes,
+      peak_live_bytes=live.peak_bytes,
+  )
+  if target.compiled_text is not None:
+    rep = hlo_cost.analyze_module(target.compiled_text)
+    roof = hlo_cost.roofline_from_report(rep)
+    ledger.update(
+        flops=rep.flops,
+        dot_flops=rep.dot_flops,
+        hbm_bytes=rep.hbm_bytes,
+        collective_bytes=rep.collective_bytes,
+        collective_wire_bytes=rep.collective_wire_bytes,
+        n_collectives=rep.n_collectives,
+        arithmetic_intensity=round(rep.flops / rep.hbm_bytes, 4)
+        if rep.hbm_bytes else 0.0,
+        dominant=roof.dominant,
+        roofline_fraction=round(roof.roofline_fraction, 4),
+    )
+  return ledger
+
+
+# ---------------------------------------------------------------------------
+# Diffing.
+# ---------------------------------------------------------------------------
+
+def _bf(coord: dict, check: str, key: str, detail: str) -> Finding:
+  return Finding(check=check, config=coord["config"], key=key,
+                 detail=detail, policy=coord["policy"],
+                 quant=coord["quant"], program=coord["program"])
+
+
+def diff_program(coord: dict, ledger: dict, committed_programs: dict
+                 ) -> tuple:
+  """(findings, ratchet_warnings) for one program vs its committed entry."""
+  key = coord_key(coord)
+  committed = committed_programs.get(key)
+  findings: list = []
+  warnings: list = []
+  if committed is None:
+    checks_hit = sorted({CHECK_OF[m] for m in TOLERANCES if m in ledger})
+    for check in checks_hit:
+      findings.append(_bf(
+          coord, check, "unbudgeted",
+          f"no committed budget entry for {key!r}: run "
+          f"`python -m repro.analysis budgets --update` and commit "
+          f"budgets.json"))
+    return findings, warnings
+
+  for metric, tol in TOLERANCES.items():
+    if metric not in ledger or metric not in committed:
+      continue
+    old = float(committed[metric])
+    new = float(ledger[metric])
+    if old == new:
+      continue
+    if old == 0.0:
+      rel = float("inf") if new > 0 else float("-inf")
+    else:
+      rel = (new - old) / old
+    if rel > tol:
+      findings.append(_bf(
+          coord, CHECK_OF[metric], f"over-budget:{metric}",
+          f"{metric}: committed {committed[metric]}, now {ledger[metric]} "
+          f"({rel:+.1%}, band ±{tol:.0%}) — a static "
+          f"{'cost' if CHECK_OF[metric] == 'cost_budget' else 'memory'} "
+          f"regression; if intentional, refresh with "
+          f"`python -m repro.analysis budgets --update`"))
+    elif rel < -tol:
+      warnings.append(dict(
+          coord=key, metric=metric, committed=committed[metric],
+          current=ledger[metric], rel=round(rel, 4),
+          note="ratchet stale: improvement beyond the band — run "
+               "`python -m repro.analysis budgets --update` to pin it"))
+
+  if "dominant" in ledger and "dominant" in committed \
+      and ledger["dominant"] != committed["dominant"]:
+    findings.append(_bf(
+        coord, "cost_budget",
+        f"dominant-flip:{committed['dominant']}->{ledger['dominant']}",
+        f"roofline-dominant term flipped from {committed['dominant']!r} "
+        f"to {ledger['dominant']!r}: the program's performance regime "
+        f"changed — inspect, then --update if intentional"))
+  return findings, warnings
+
+
+def diff_compression(config: str, ledger: dict, committed_compression: dict
+                     ) -> list:
+  """Findings for one config's compression ledger: strictness violations
+  plus exact drift against the committed numbers."""
+  coord = dict(config=config, policy="-", quant="-", program="params")
+  findings = [
+      _bf(coord, "compression_ledger", key, detail)
+      for key, detail in compression.strictness_violations(ledger)
+  ]
+  committed = committed_compression.get(config)
+  if committed is None:
+    findings.append(_bf(
+        coord, "compression_ledger", "unbudgeted",
+        f"no committed compression ledger for {config!r}: run "
+        f"`python -m repro.analysis budgets --update`"))
+    return findings
+  for variant, stats in ledger["variants"].items():
+    old = committed.get("variants", {}).get(variant, {})
+    for metric in COMPRESSION_METRICS:
+      if metric in old and old[metric] != stats[metric]:
+        findings.append(_bf(
+            coord, "compression_ledger", f"drift:{variant}:{metric}",
+            f"{variant} {metric}: committed {old[metric]}, now "
+            f"{stats[metric]} — the model's static size changed; if "
+            f"intentional, --update and commit the new ledger"))
+  return findings
+
+
+# ---------------------------------------------------------------------------
+# The budget audit driver (shared by run_audit and the CLI).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BudgetAudit:
+  """Accumulates fresh ledgers and their diff against committed budgets."""
+  committed: dict
+  programs: dict = dataclasses.field(default_factory=dict)
+  compression: dict = dataclasses.field(default_factory=dict)
+  findings: list = dataclasses.field(default_factory=list)
+  warnings: list = dataclasses.field(default_factory=list)
+
+  def add_target(self, target: TraceTarget) -> dict:
+    ledger = program_ledger(target)
+    self.programs[coord_key(target.coord)] = ledger
+    f, w = diff_program(target.coord, ledger,
+                        self.committed.get("programs", {}))
+    self.findings.extend(f)
+    self.warnings.extend(w)
+    return ledger
+
+  def add_compression(self, config: str) -> dict:
+    ledger = compression.compression_ledger(config)
+    self.compression[config] = ledger
+    self.findings.extend(diff_compression(
+        config, ledger, self.committed.get("compression", {})))
+    return ledger
+
+  def fresh(self) -> dict:
+    """The measured numbers in budgets.json shape (for --update)."""
+    return {
+        "meta": dict(tolerances=TOLERANCES, jax_version=jax.__version__),
+        "programs": self.programs,
+        "compression": self.compression,
+    }
+
+
+def run_budget_audit(targets: Iterable[TraceTarget],
+                     config_names: Iterable[str],
+                     committed: Optional[dict] = None) -> BudgetAudit:
+  """Convenience driver: ledger + diff every target and config."""
+  audit = BudgetAudit(load_budgets() if committed is None else committed)
+  for t in targets:
+    audit.add_target(t)
+  for name in config_names:
+    audit.add_compression(name)
+  return audit

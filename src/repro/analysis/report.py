@@ -33,6 +33,10 @@ CHECKS = (
     "transfer_lint",       # no host callbacks/transfers; donation holds;
                            # HLO parser gaps (unknown ops) surfaced
     "sharding_coverage",   # every param leaf resolves to a sharding rule
+    "cost_budget",         # HLO cost ledger within its committed band
+    "memory_budget",       # jaxpr liveness peak within its committed band
+    "compression_ledger",  # static param count/bytes exactly as committed,
+                           # compressed trees strictly smaller
 )
 
 _CALL_ID_RE = re.compile(r":c\d+")

@@ -168,9 +168,12 @@ def iter_targets(config_names: Iterable[str] = DEFAULT_CONFIGS,
           closed, log, low, comp = _trace(
               window, (params, state_sds, win_tok, pos), donate=(1,),
               lower=deep, compile_=deep)
+          # donation is declared above regardless of `deep` (only the
+          # lowered text is gated), so n_donated must not vary with it:
+          # liveness budgets diff deep-generated numbers in shallow runs
           yield TraceTarget(name, cfg.family, policy, quant, "window",
-                            closed, log, n_params, int8_idx,
-                            n_state if deep else 0, low, comp)
+                            closed, log, n_params, int8_idx, n_state,
+                            low, comp)
 
         if "prefill" in programs and cfg.family != "deepspeech":
           # token-driven only: DS2 prefills frame-synchronously through

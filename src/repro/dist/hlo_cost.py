@@ -29,13 +29,16 @@ PEAK_FLOPS = 197e12          # FLOP/s (bf16 systolic peak)
 HBM_BANDWIDTH = 819e9        # B/s
 ICI_BANDWIDTH = 45e9         # B/s per device, all links combined
 
-_DTYPE_BYTES = {
-    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1,
-    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4,
-    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
-    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1,
-    "f8e5m2fnuz": 1,
+# Sizes are in *bits* so sub-byte dtypes (s4/u4) stay integral: each
+# array's bit volume is rounded up to whole bytes once, per array, the
+# way a packed buffer is actually allocated.
+_DTYPE_BITS = {
+    "pred": 8, "s4": 4, "u4": 4, "s8": 8, "u8": 8,
+    "s16": 16, "u16": 16, "f16": 16, "bf16": 16,
+    "s32": 32, "u32": 32, "f32": 32,
+    "s64": 64, "u64": 64, "f64": 64, "c64": 64, "c128": 128,
+    "f8e4m3fn": 8, "f8e5m2": 8, "f8e4m3b11fnuz": 8, "f8e4m3fnuz": 8,
+    "f8e5m2fnuz": 8,
     # zero-byte marker types (control-flow plumbing, not data)
     "token": 0, "opaque": 0,
 }
@@ -63,17 +66,20 @@ def _dims(dim_str: str) -> list[int]:
   return [int(d) for d in dim_str.split(",") if d]
 
 
-def _shape_bytes(shape_str: str) -> float:
-  """Total bytes of every array in a (possibly tuple) shape string."""
-  total = 0.0
+def _shape_bytes(shape_str: str) -> int:
+  """Total bytes of every array in a (possibly tuple) shape string.
+
+  Always integral: bit volume is accumulated per array and rounded up to
+  whole bytes per array (so `s4[5]` is 3 bytes, not 2.5)."""
+  total = 0
   for dtype, dim_str in _SHAPE_RE.findall(shape_str):
-    size = _DTYPE_BYTES.get(dtype)
-    if size is None:
+    bits = _DTYPE_BITS.get(dtype)
+    if bits is None:
       continue
     n = 1
     for d in _dims(dim_str):
       n *= d
-    total += n * size
+    total += (n * bits + 7) // 8
   return total
 
 
@@ -123,7 +129,7 @@ class CostReport:
   #: "<unparsed>" for instruction lines _split_instr rejected (their
   #: bytes are still counted, as generic traffic from every shape token
   #: on the line) and "dtype:<name>" for dtypes missing from
-  #: _DTYPE_BYTES (whose arrays contribute zero bytes). Audit tooling
+  #: _DTYPE_BITS (whose arrays contribute zero bytes). Audit tooling
   #: (repro.analysis) surfaces this so parser gaps are visible instead
   #: of silently under-counting.
   unknown_ops: dict = dataclasses.field(default_factory=dict)
@@ -326,7 +332,7 @@ def analyze_module(hlo_text: str, n_devices: int = 1) -> CostReport:
     for ins in comps.get(name, ()):
       op = ins.opcode
       for d, _ in _SHAPE_RE.findall(ins.shape):
-        if d not in _DTYPE_BYTES:
+        if d not in _DTYPE_BITS:
           key = f"dtype:{d}"
           rep.unknown_ops[key] = rep.unknown_ops.get(key, 0) + 1
       if op == _UNPARSED:

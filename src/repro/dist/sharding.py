@@ -39,8 +39,9 @@ from typing import Any, Optional, Sequence
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.factored import FactoredLinear
+from repro.core.factored import FactoredLinear, is_gemm_leaf
 from repro.dist.mesh import MODEL_AXIS, dp_axes
+from repro.quant.leaf import QuantizedLinear
 # The contract types live in the leaf module model code already imports;
 # re-exported here so dist.sharding stays the one public constraint surface.
 from repro.layers.common import Constraint, identity_constraint
@@ -150,6 +151,30 @@ def _weight_template(kind: str, ndim: int, field: str) -> tuple:
   return lead + (None, "model")                    # "col"
 
 
+#: QuantizedLinear array fields, in dataclass order
+_QUANT_FIELDS = ("w_q", "w_scale", "u_q", "u_scale", "v_q", "v_scale",
+                 "act_scale")
+
+
+def _quant_field_template(kind: str, field: str, ndim: int) -> tuple:
+  """Role template for one QuantizedLinear field.
+
+  int8 payloads (w_q/u_q/v_q) shard exactly like the float field they
+  were quantized from (same rank-local u/v layout, same Megatron
+  row/col split for w). Per-column scale vectors ride with their
+  weight's column axis — a col-split w_q keeps its (n,) w_scale split
+  the same way, so the dequantize stays device-local; a stacked
+  ([L,] n) scale keeps its leading layer axes unsharded like the
+  payload's. u_scale is per-rank and the rank axis is always local;
+  act_scale is a scalar."""
+  if field.endswith("_q"):
+    return _weight_template(kind, ndim, field[0])
+  if field in ("w_scale", "v_scale"):
+    return ((None,) * (ndim - 1)
+            + (_weight_template(kind, 2, field[0])[-1],))
+  return (None,) * ndim            # u_scale (rank-local), act_scale ()
+
+
 def _with_fsdp(spec: P, shape: Sequence[int], mesh) -> P:
   """Add the dp axes to the first unsharded dimension they divide.
 
@@ -223,11 +248,24 @@ def param_shardings(params: Any, mesh, *, fsdp: bool = False,
             fsdp=fsdp, expert_2d=expert_2d))
       return FactoredLinear(w=fld("w"), u=fld("u"), v=fld("v"),
                             name=leaf.name, group=leaf.group)
+    if isinstance(leaf, QuantizedLinear):
+      # serving artifact: no FSDP axis (that is a training layout)
+      kind = _param_rule(leaf.name)
+      def qfld(field):
+        arr = getattr(leaf, field)
+        if arr is None:
+          return None
+        spec = _gate(_quant_field_template(kind, field, arr.ndim),
+                     arr.shape, mesh) or P()
+        return NamedSharding(mesh, spec)
+      return QuantizedLinear(
+          **{f: qfld(f) for f in _QUANT_FIELDS},
+          name=leaf.name, group=leaf.group, orig_dtype=leaf.orig_dtype)
     return NamedSharding(mesh, _leaf_spec(
         leaf.shape, mesh, path=_path_tokens(path), fsdp=fsdp,
         expert_2d=expert_2d))
   return jax.tree_util.tree_map_with_path(
-      on_node, params, is_leaf=lambda x: isinstance(x, FactoredLinear))
+      on_node, params, is_leaf=is_gemm_leaf)
 
 
 def batch_shardings(batch: Any, mesh, shape) -> Any:
@@ -296,17 +334,20 @@ def rule_coverage(params: Any, mesh=None) -> list:
   ShapeDtypeStructs) — the introspection half of `param_shardings`.
 
   Walks the tree exactly the way `param_shardings` does (FactoredLinear
-  nodes matched by logical name against PARAM_RULES; every other leaf —
-  including the int8/scale fields of QuantizedLinear nodes, which are
-  NOT name-matched today — by tree path) and reports, per leaf:
+  and QuantizedLinear nodes matched by logical name against PARAM_RULES;
+  every other leaf by tree path) and reports, per array leaf:
 
     name     logical GEMM name, or None for path-matched leaves
-    field    FactoredLinear field ("w"/"u"/"v") or last path token
+    field    GEMM-leaf field ("w"/"u"/"v"/"w_q"/"u_scale"/...) or last
+             path token
     path     "/"-joined tree path
     rule     PARAM_RULES kind, "embedding_table", or None (replicated)
     matches  how many PARAM_RULES globs match the name (first wins;
              includes the catchall — 0 for path-matched leaves)
-    shape / size / spec / sharded   the gated outcome on `mesh`
+    shape / size / bytes / spec / sharded   the gated outcome on `mesh`
+    shard_factor   how many devices split this leaf (product of the
+             gated spec's mesh-axis sizes; bytes / shard_factor is the
+             per-device footprint the compression ledger reports)
 
   `mesh` defaults to RuleMesh(data=2, model=4), a canonical small
   production topology where every intended split is representable."""
@@ -316,8 +357,22 @@ def rule_coverage(params: Any, mesh=None) -> list:
   def n_matches(name: str) -> int:
     return sum(1 for pat, _ in PARAM_RULES if fnmatch.fnmatch(name, pat))
 
-  def describe(spec: P) -> tuple[str, bool]:
-    return str(spec), any(e is not None for e in tuple(spec))
+  def spec_factor(spec: P) -> int:
+    f = 1
+    for e in tuple(spec):
+      if e is None:
+        continue
+      for a in (e if isinstance(e, tuple) else (e,)):
+        f *= int(mesh.shape[a])
+    return f
+
+  def emit(spec: P, arr, **kw) -> None:
+    shape = tuple(arr.shape)
+    size = int(math.prod(shape))
+    entries.append(dict(
+        shape=shape, size=size, bytes=size * arr.dtype.itemsize,
+        spec=str(spec), sharded=any(e is not None for e in tuple(spec)),
+        shard_factor=spec_factor(spec), **kw))
 
   def on_node(path, leaf):
     toks = _path_tokens(path)
@@ -327,14 +382,21 @@ def rule_coverage(params: Any, mesh=None) -> list:
         arr = getattr(leaf, field)
         if arr is None:
           continue
-        shape = tuple(arr.shape)
-        spec = _gate(_weight_template(kind, len(shape), field),
-                     shape, mesh) or P()
-        spec_s, sharded = describe(spec)
-        entries.append(dict(
-            name=leaf.name, field=field, path="/".join(toks), rule=kind,
-            matches=n_matches(leaf.name), shape=shape,
-            size=int(math.prod(shape)), spec=spec_s, sharded=sharded))
+        spec = _gate(_weight_template(kind, arr.ndim, field),
+                     tuple(arr.shape), mesh) or P()
+        emit(spec, arr, name=leaf.name, field=field, path="/".join(toks),
+             rule=kind, matches=n_matches(leaf.name))
+      return leaf
+    if isinstance(leaf, QuantizedLinear):
+      kind = _param_rule(leaf.name)
+      for field in _QUANT_FIELDS:
+        arr = getattr(leaf, field)
+        if arr is None:
+          continue
+        spec = _gate(_quant_field_template(kind, field, arr.ndim),
+                     tuple(arr.shape), mesh) or P()
+        emit(spec, arr, name=leaf.name, field=field, path="/".join(toks),
+             rule=kind, matches=n_matches(leaf.name))
       return leaf
     shape = tuple(leaf.shape)
     rule = None
@@ -343,15 +405,11 @@ def rule_coverage(params: Any, mesh=None) -> list:
       spec = _gate(("model", None), shape, mesh) or P()
     else:
       spec = P()
-    spec_s, sharded = describe(spec)
-    entries.append(dict(
-        name=None, field=toks[-1] if toks else "", path="/".join(toks),
-        rule=rule, matches=0, shape=shape, size=int(math.prod(shape)),
-        spec=spec_s, sharded=sharded))
+    emit(spec, leaf, name=None, field=toks[-1] if toks else "",
+         path="/".join(toks), rule=rule, matches=0)
     return leaf
 
-  jax.tree_util.tree_map_with_path(
-      on_node, params, is_leaf=lambda x: isinstance(x, FactoredLinear))
+  jax.tree_util.tree_map_with_path(on_node, params, is_leaf=is_gemm_leaf)
   return entries
 
 
@@ -378,10 +436,22 @@ def _constrain_layer_params(tree: Any, mesh) -> Any:
             arr, NamedSharding(mesh, spec))
       return FactoredLinear(w=fld("w"), u=fld("u"), v=fld("v"),
                             name=leaf.name, group=leaf.group)
+    if isinstance(leaf, QuantizedLinear):
+      kind = _param_rule(leaf.name)
+      def qfld(field):
+        arr = getattr(leaf, field)
+        if arr is None:
+          return None
+        spec = _gate(_quant_field_template(kind, field, arr.ndim),
+                     arr.shape, mesh) or P()
+        return jax.lax.with_sharding_constraint(
+            arr, NamedSharding(mesh, spec))
+      return QuantizedLinear(
+          **{f: qfld(f) for f in _QUANT_FIELDS},
+          name=leaf.name, group=leaf.group, orig_dtype=leaf.orig_dtype)
     return jax.lax.with_sharding_constraint(
         leaf, NamedSharding(mesh, P()))
-  return jax.tree.map(on_node, tree,
-                      is_leaf=lambda x: isinstance(x, FactoredLinear))
+  return jax.tree.map(on_node, tree, is_leaf=is_gemm_leaf)
 
 
 def make_constraint(mesh, cfg, global_batch: int, *, decode: bool = False,

@@ -76,10 +76,14 @@ def quantize_rowwise(x: jax.Array) -> tuple[jax.Array, jax.Array]:
 
 
 def quantize_colwise(w: jax.Array) -> tuple[jax.Array, jax.Array]:
-  """Symmetric per-column int8 quantization: returns (q, scale)."""
-  amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0)
+  """Symmetric per-column int8 quantization: returns (q, scale).
+
+  Columns are the last axis; reduction is over the row axis (-2), so a
+  layer-stacked (L, m, n) weight quantizes per (layer, column) — each
+  scan slice is then an ordinary 2-D quantized operand."""
+  amax = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=-2)
   scale = jnp.maximum(amax, 1e-8) / 127.0
-  q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[None, :]),
+  q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale[..., None, :]),
                -127, 127).astype(jnp.int8)
   return q, scale
 

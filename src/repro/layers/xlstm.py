@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.factored import dense
+from repro.core.factored import FactoredLinear, dense
+from repro.quant.leaf import QuantizedLinear
 from repro.layers.common import (Constraint, ModelConfig, gemm,
                                  identity_constraint as _id_cs)
 from repro.layers.norms import rms_norm
@@ -196,13 +197,46 @@ def init_slstm(key: jax.Array, cfg: ModelConfig, *, layer_prefix: str,
   }
 
 
-def _slstm_cell(xg, hcnm, rh, h_, hd):
-  """One sLSTM time step. xg: (b, 4d) precomputed Wx; state tuple."""
+def _head_rh(rh, i: int):
+  """2-D per-head slice of the block-diagonal recurrent kernel
+  (..., h, hd, 4hd) — the form `gemm`/dispatch can route."""
+  if isinstance(rh, QuantizedLinear):
+    if rh.is_factored:
+      return QuantizedLinear(
+          w_q=None, w_scale=None,
+          u_q=rh.u_q[..., i, :, :], u_scale=rh.u_scale[..., i, :],
+          v_q=rh.v_q[..., i, :, :], v_scale=rh.v_scale[..., i, :],
+          act_scale=rh.act_scale, name=rh.name, group=rh.group,
+          orig_dtype=rh.orig_dtype)
+    return QuantizedLinear(
+        w_q=rh.w_q[..., i, :, :], w_scale=rh.w_scale[..., i, :],
+        u_q=None, u_scale=None, v_q=None, v_scale=None,
+        act_scale=rh.act_scale, name=rh.name, group=rh.group,
+        orig_dtype=rh.orig_dtype)
+  if rh.is_factored:
+    return FactoredLinear(w=None, u=rh.u[..., i, :, :], v=rh.v[..., i, :, :],
+                          name=rh.name, group=rh.group)
+  return FactoredLinear(w=rh.w[..., i, :, :], u=None, v=None,
+                        name=rh.name, group=rh.group)
+
+
+def _slstm_cell(xg, hcnm, rh, h_, hd, policy=None):
+  """One sLSTM time step. xg: (b, 4d) precomputed Wx; state tuple.
+
+  The block-diagonal recurrent kernel (the paper's U_cat, group "rec")
+  applies head-by-head through `gemm`, so it routes through
+  kernels.dispatch like every other model GEMM — dispatch_coverage sees
+  it, and factored rh leaves run in their (x@U)@V inference form
+  instead of materializing W = UV every step."""
   hprev, c, n, m = hcnm
   b = hprev.shape[0]
-  hh = hprev.reshape(b, h_, hd)
-  rg = jnp.einsum("bhp,hpq->bhq", hh.astype(jnp.float32),
-                  rh.astype(jnp.float32)).reshape(b, 4 * h_ * hd)
+  hh = hprev.reshape(b, h_, hd).astype(jnp.float32)
+  if isinstance(rh, (FactoredLinear, QuantizedLinear)):
+    outs = [gemm(_head_rh(rh, i), hh[:, i, :], policy) for i in range(h_)]
+    rg = jnp.stack(outs, axis=1).reshape(b, 4 * h_ * hd)
+  else:
+    rg = jnp.einsum("bhp,hpq->bhq", hh,
+                    rh.astype(jnp.float32)).reshape(b, 4 * h_ * hd)
   g = xg.astype(jnp.float32) + rg
   gz, gi, gf, go = jnp.split(g.reshape(b, 4, h_ * hd), 4, axis=1)
   gz, gi, gf, go = gz[:, 0], gi[:, 0], gf[:, 0], go[:, 0]
@@ -226,12 +260,11 @@ def slstm_forward(p: dict, x: jax.Array, cfg: ModelConfig,
   hd = d // h_
   # non-recurrent GEMM batched across time (paper §4's Wx batching)
   xg = gemm(p["wx"], x, policy) + p["bias"].astype(x.dtype)
-  rh = p["rh"].product() if hasattr(p["rh"], "product") else p["rh"]
   state = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32),
            jnp.zeros((b, d), jnp.float32), jnp.full((b, d), -1e30,
                                                     jnp.float32))
   def step(carry, xt):
-    new = _slstm_cell(xt, carry, rh, h_, hd)
+    new = _slstm_cell(xt, carry, p["rh"], h_, hd, policy)
     return new, new[0]
   _, hs = jax.lax.scan(step, state, xg.transpose(1, 0, 2))
   y = hs.transpose(1, 0, 2).astype(x.dtype)
@@ -255,9 +288,8 @@ def slstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
   h_ = cfg.num_heads
   hd = d // h_
   xg = (gemm(p["wx"], x, policy) + p["bias"].astype(x.dtype))[:, 0]
-  rh = p["rh"].product() if hasattr(p["rh"], "product") else p["rh"]
   new = _slstm_cell(xg, (state["h"], state["c"], state["n"], state["m"]),
-                    rh, h_, hd)
+                    p["rh"], h_, hd, policy)
   y = new[0][:, None, :].astype(x.dtype)
   y = rms_norm(y, p["norm"], cfg.norm_eps)
   return gemm(p["out"], y, policy), {"h": new[0], "c": new[1], "n": new[2],

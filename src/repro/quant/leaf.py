@@ -10,11 +10,12 @@ reads int8 weights directly, with NO per-call weight requantization
 (retiring the KNOWN COST note that used to live on
 `kernels.ops.quantized_matmul`).
 
-Shapes (2D only — quantized leaves are a serving artifact, never stacked
-under a layer scan):
-  unfactored: w_q (m, n) s8, w_scale (n,) f32
-  factored:   u_q (m, r) s8, u_scale (r,) f32;
-              v_q (r, n) s8, v_scale (n,) f32
+Shapes (a leading layer axis L is allowed — scanned stacks quantize per
+(layer, column), and the serving scan slices every field so each
+iteration consumes the 2-D form):
+  unfactored: w_q ([L,] m, n) s8, w_scale ([L,] n) f32
+  factored:   u_q ([L,] m, r) s8, u_scale ([L,] r) f32;
+              v_q ([L,] r, n) s8, v_scale ([L,] n) f32
   act_scale:  optional () f32 — a calibrated static activation range;
               None means dynamic per-row activation quantization.
 
@@ -102,11 +103,11 @@ class QuantizedLinear:
     """Materialize the dequantized W (the float-math escape hatch some
     layers use for absorbed/stacked weights)."""
     if self.is_factored:
-      u = self.u_q.astype(jnp.float32) * self.u_scale[None, :]
-      v = self.v_q.astype(jnp.float32) * self.v_scale[None, :]
+      u = self.u_q.astype(jnp.float32) * self.u_scale[..., None, :]
+      v = self.v_q.astype(jnp.float32) * self.v_scale[..., None, :]
       return jnp.matmul(u, v).astype(self.dtype)
     return (self.w_q.astype(jnp.float32) *
-            self.w_scale[None, :]).astype(self.dtype)
+            self.w_scale[..., None, :]).astype(self.dtype)
 
   def apply(self, x: jax.Array, policy=None) -> jax.Array:
     """y = x @ W in w8a8 arithmetic (the jnp reference for the int8_gemm

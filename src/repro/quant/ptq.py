@@ -35,23 +35,21 @@ DEFAULT_PLAN = FactorizationPlan(min_dim=1)
 
 def quantize_leaf(leaf: FactoredLinear,
                   act_amax: Optional[float] = None) -> QuantizedLinear:
-  """Symmetric per-column int8 quantization of one GEMM leaf."""
+  """Symmetric per-column int8 quantization of one GEMM leaf.
+
+  Layer-stacked (L, m, n) leaves quantize per (layer, column); the scan
+  that consumes them slices every field, so each iteration sees an
+  ordinary 2-D QuantizedLinear."""
   act_scale = None
   if act_amax is not None:
     act_scale = jnp.float32(max(float(act_amax), 1e-8) / 127.0)
   kw = dict(act_scale=act_scale, name=leaf.name, group=leaf.group,
             orig_dtype=str(jnp.dtype(leaf.dtype)))
   if leaf.is_factored:
-    if leaf.u.ndim != 2:
-      raise ValueError(
-          f"cannot quantize stacked leaf {leaf.name!r}; slice first")
     u_q, u_s = ref.quantize_colwise(leaf.u)
     v_q, v_s = ref.quantize_colwise(leaf.v)
     return QuantizedLinear(w_q=None, w_scale=None, u_q=u_q, u_scale=u_s,
                            v_q=v_q, v_scale=v_s, **kw)
-  if leaf.w.ndim != 2:
-    raise ValueError(
-        f"cannot quantize stacked leaf {leaf.name!r}; slice first")
   w_q, w_s = ref.quantize_colwise(leaf.w)
   return QuantizedLinear(w_q=w_q, w_scale=w_s, u_q=None, u_scale=None,
                          v_q=None, v_scale=None, **kw)
@@ -62,8 +60,9 @@ def quantize_params(params: Any, plan: Optional[FactorizationPlan] = None,
   """One-shot PTQ over a params pytree.
 
   plan  — which GEMMs to quantize, matched on logical names exactly like
-          compression plans (default: all of them). Stacked (3D+) leaves
-          are skipped — they only occur under training-time layer scans.
+          compression plans (default: all of them). Layer-stacked (3D+)
+          leaves quantize per layer: the serving scan slices every field,
+          handing each iteration a 2-D QuantizedLinear.
   calib — optional {logical name: activation amax} from
           `calibrate_activation_ranges`; matched leaves get a static
           activation scale.
@@ -71,8 +70,7 @@ def quantize_params(params: Any, plan: Optional[FactorizationPlan] = None,
   plan = DEFAULT_PLAN if plan is None else plan
 
   def f(leaf: FactoredLinear):
-    arr = leaf.u if leaf.is_factored else leaf.w
-    if arr.ndim != 2 or not plan.matches(leaf):
+    if not plan.matches(leaf):
       return leaf
     amax = calib.get(leaf.name) if calib else None
     return quantize_leaf(leaf, act_amax=amax)

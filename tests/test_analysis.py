@@ -229,20 +229,20 @@ def test_cli_exit_codes(tmp_path, capsys):
   assert main(common + ["--report", rep_path]) == 0
   saved = json.loads(open(rep_path).read())
   assert saved["ok"] and saved["targets"]
-  # xlstm's recurrent-gate einsum is a known unrouted debt: against an
-  # EMPTY baseline it must turn the exit code red
+  # whisper's tied-head readout einsum is a known unrouted debt: against
+  # an EMPTY baseline it must turn the exit code red
   empty = str(tmp_path / "empty.json")
-  code = main(["audit", "--configs", "xlstm_350m", "--policies", "jnp",
+  code = main(["audit", "--configs", "whisper_small", "--policies", "jnp",
                "--quants", "float", "--programs", "decode",
                "--no-lifecycle", "--no-sharding", "--baseline", empty])
   assert code == 1
   assert "NEW" in capsys.readouterr().out
   # --write-baseline accepts those debts; the same audit then passes
-  assert main(["audit", "--configs", "xlstm_350m", "--policies", "jnp",
+  assert main(["audit", "--configs", "whisper_small", "--policies", "jnp",
                "--quants", "float", "--programs", "decode",
                "--no-lifecycle", "--no-sharding", "--baseline", empty,
                "--write-baseline"]) == 0
-  assert main(["audit", "--configs", "xlstm_350m", "--policies", "jnp",
+  assert main(["audit", "--configs", "whisper_small", "--policies", "jnp",
                "--quants", "float", "--programs", "decode",
                "--no-lifecycle", "--no-sharding",
                "--baseline", empty]) == 0

@@ -1,0 +1,311 @@
+"""Budget auditor: jaxpr liveness, tolerance-band diffs, the compression
+ledger's strict-smaller guarantees, and the budgets CLI exit-code contract.
+
+Seeded-regression tests prove the gates actually fire: an f32-widened
+decode state must trip memory_budget red, a doctored committed number
+must trip cost_budget red, and an improvement beyond the band must
+surface as a ratchet-stale warning (not a finding).
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import budgets, compression, liveness, targets
+
+F32 = jnp.float32
+
+
+def _liveness(fn, args, **kw):
+  return liveness.analyze_jaxpr(jax.make_jaxpr(fn)(*args), **kw)
+
+
+# ---------------------------------------------------------------------------
+# Liveness: last-use walk, donation credit, control-flow descent.
+# ---------------------------------------------------------------------------
+
+
+def test_liveness_chain_exact():
+  """y and z overlap for exactly one equation: peak transient is 2 bufs."""
+  x = jax.ShapeDtypeStruct((1024,), F32)
+
+  def f(x):
+    y = x * 2.0
+    z = y + 1.0
+    return z.sum()
+
+  rep = _liveness(f, (x,))
+  assert rep.input_bytes == 4096
+  assert rep.transient_bytes == 8192       # y (4096) live while z allocates
+  assert rep.peak_bytes == 4096 + 8192
+  assert rep.output_bytes == 4
+  assert rep.donated_bytes == rep.credited_bytes == 0
+
+
+def test_liveness_donation_credit():
+  """An output aliasing a donated input allocates nothing; the same
+  program without donation pays for the output buffer."""
+  s = jax.ShapeDtypeStruct((1024,), F32)
+  t = jax.ShapeDtypeStruct((1024,), F32)
+
+  def step(s, t):
+    return s + t
+
+  donated = _liveness(step, (s, t), n_params=0, n_donated=1)
+  assert donated.donated_bytes == 4096
+  assert donated.credited_bytes == 4096    # s' writes into s's buffer
+  assert donated.transient_bytes == 0
+  assert donated.peak_bytes == donated.input_bytes == 8192
+
+  plain = _liveness(step, (s, t))
+  assert plain.credited_bytes == 0
+  assert plain.transient_bytes == 4096
+  assert plain.peak_bytes == 8192 + 4096
+
+
+def test_liveness_scan_counts_one_iteration():
+  """A scan body's transient peak counts once (carries reuse buffers),
+  not multiplied by the trip count."""
+  h0 = jax.ShapeDtypeStruct((1024,), F32)
+
+  def f(h0):
+    def body(h, _):
+      return h * 2.0 + 1.0, None
+    h, _ = jax.lax.scan(body, h0, None, length=10)
+    return h
+
+  rep = _liveness(f, (h0,))
+  assert rep.input_bytes == 4096
+  # inner peak: mul result live while add allocates = 8192; the outer
+  # scan outvar (the carry out) adds its own 4096 on top of nothing
+  assert rep.transient_bytes == 8192
+  assert rep.transient_bytes < 10 * 4096   # no trip-count multiplication
+
+
+# ---------------------------------------------------------------------------
+# Tolerance-band diff semantics.
+# ---------------------------------------------------------------------------
+
+_COORD = dict(config="c", policy="jnp", quant="float", program="decode")
+_KEY = "c|jnp|float|decode"
+
+
+def _committed(**over):
+  base = dict(flops=1000.0, hbm_bytes=1000.0, peak_live_bytes=1000,
+              input_bytes=100, dominant="memory")
+  base.update(over)
+  return {_KEY: base}
+
+
+def test_band_inside_is_silent():
+  led = dict(flops=1040.0, hbm_bytes=1090.0, peak_live_bytes=1040,
+             input_bytes=100, dominant="memory")
+  f, w = budgets.diff_program(_COORD, led, _committed())
+  assert f == [] and w == []
+
+
+def test_band_regression_is_red():
+  led = dict(flops=1060.0, hbm_bytes=1200.0, peak_live_bytes=1060,
+             input_bytes=101, dominant="memory")
+  f, w = budgets.diff_program(_COORD, led, _committed())
+  assert w == []
+  assert {x.key for x in f} == {
+      "over-budget:flops", "over-budget:hbm_bytes",
+      "over-budget:peak_live_bytes", "over-budget:input_bytes"}
+  assert {x.check for x in f} == {"cost_budget", "memory_budget"}
+  by_key = {x.key: x for x in f}
+  assert by_key["over-budget:flops"].check == "cost_budget"
+  assert by_key["over-budget:input_bytes"].check == "memory_budget"
+
+
+def test_band_improvement_is_ratchet_stale_not_red():
+  led = dict(flops=900.0, hbm_bytes=800.0, peak_live_bytes=900,
+             input_bytes=100, dominant="memory")
+  f, w = budgets.diff_program(_COORD, led, _committed())
+  assert f == []
+  assert {x["metric"] for x in w} == {"flops", "hbm_bytes",
+                                      "peak_live_bytes"}
+  assert all("--update" in x["note"] for x in w)
+
+
+def test_dominant_flip_is_red():
+  led = dict(flops=1000.0, hbm_bytes=1000.0, peak_live_bytes=1000,
+             input_bytes=100, dominant="compute")
+  f, _ = budgets.diff_program(_COORD, led, _committed())
+  assert [x.key for x in f] == ["dominant-flip:memory->compute"]
+  assert f[0].check == "cost_budget"
+
+
+def test_unbudgeted_coordinate_is_red_per_check():
+  led = dict(flops=1.0, hbm_bytes=1.0, peak_live_bytes=1, input_bytes=1)
+  f, _ = budgets.diff_program(_COORD, led, {})
+  assert sorted(x.check for x in f) == ["cost_budget", "memory_budget"]
+  assert all(x.key == "unbudgeted" for x in f)
+  # a memory-only ledger (shallow, uncompiled) only owes a memory budget
+  f2, _ = budgets.diff_program(_COORD, dict(peak_live_bytes=1,
+                                            input_bytes=1), {})
+  assert [x.check for x in f2] == ["memory_budget"]
+
+
+def test_merge_budgets_is_fieldwise():
+  """A shallow refresh (memory metrics only) must not drop the committed
+  cost metrics of the same coordinate."""
+  committed = {"meta": {"jax_version": "old"},
+               "programs": {_KEY: dict(flops=5.0, peak_live_bytes=10)},
+               "compression": {"c": {"variants": {}}}}
+  fresh = {"meta": {"jax_version": "new"},
+           "programs": {_KEY: dict(peak_live_bytes=12),
+                        "d|jnp|float|decode": dict(peak_live_bytes=1)},
+           "compression": {}}
+  out = budgets.merge_budgets(committed, fresh)
+  assert out["programs"][_KEY] == dict(flops=5.0, peak_live_bytes=12)
+  assert "d|jnp|float|decode" in out["programs"]
+  assert out["compression"] == {"c": {"variants": {}}}
+  assert out["meta"]["jax_version"] == "new"
+
+
+def test_budgets_io_roundtrip(tmp_path):
+  path = str(tmp_path / "b.json")
+  assert budgets.load_budgets(path) == {"meta": {}, "programs": {},
+                                        "compression": {}}
+  budgets.write_budgets({"meta": {}, "programs": {_KEY: {"flops": 1}},
+                         "compression": {}}, path)
+  assert budgets.load_budgets(path)["programs"][_KEY] == {"flops": 1}
+  (tmp_path / "bad.json").write_text('{"programs": []}')
+  with pytest.raises(ValueError, match="programs"):
+    budgets.load_budgets(str(tmp_path / "bad.json"))
+
+
+# ---------------------------------------------------------------------------
+# Seeded regression: a widened decode state must trip the gate red.
+# ---------------------------------------------------------------------------
+
+
+def _seeded_decode(dtype):
+  """A toy decode step whose state dominates the footprint."""
+  w = jax.ShapeDtypeStruct((64, 64), F32)
+  state = jax.ShapeDtypeStruct((256, 64), dtype)
+
+  def step(p, s):
+    s2 = (s.astype(F32) @ p).astype(dtype)
+    return s2, s2.sum(axis=-1)
+
+  closed, log, low, comp = targets._trace(
+      step, (w, state), donate=(1,), lower=True, compile_=True)
+  return targets.TraceTarget(
+      config="seeded", family="test", policy="jnp", quant="float",
+      program="decode", jaxpr=closed, dispatch_log=log, n_params=1,
+      int8_param_idx=frozenset(), n_donated=1, lowered_text=low,
+      compiled_text=comp)
+
+
+def test_widened_state_trips_memory_budget_red():
+  narrow = budgets.program_ledger(_seeded_decode(jnp.bfloat16))
+  committed = {"seeded|jnp|float|decode": narrow}
+  wide = budgets.program_ledger(_seeded_decode(F32))
+  assert wide["input_bytes"] > narrow["input_bytes"]
+  f, _ = budgets.diff_program(
+      dict(config="seeded", policy="jnp", quant="float",
+           program="decode"), wide, committed)
+  assert f, "f32-widened state did not trip the budget gate"
+  assert {x.check for x in f} <= {"cost_budget", "memory_budget"}
+  assert "over-budget:input_bytes" in {x.key for x in f}
+  assert any(x.check == "memory_budget" for x in f)
+
+
+def test_doctored_committed_number_trips_cost_budget_red():
+  t = _seeded_decode(F32)
+  ledger = budgets.program_ledger(t)
+  doctored = dict(ledger, hbm_bytes=int(ledger["hbm_bytes"] * 0.8))
+  f, _ = budgets.diff_program(t.coord, ledger,
+                              {"seeded|jnp|float|decode": doctored})
+  assert [x.key for x in f] == ["over-budget:hbm_bytes"]
+  assert f[0].check == "cost_budget"
+  # and the mirror image is a ratchet warning, not a finding
+  inflated = dict(ledger, hbm_bytes=int(ledger["hbm_bytes"] * 1.25))
+  f2, w2 = budgets.diff_program(t.coord, ledger,
+                                {"seeded|jnp|float|decode": inflated})
+  assert f2 == []
+  assert [x["metric"] for x in w2] == ["hbm_bytes"]
+
+
+# ---------------------------------------------------------------------------
+# Compression ledger: strictly smaller across all five families, and
+# drift-free against the committed numbers.
+# ---------------------------------------------------------------------------
+
+
+def test_ledger_rank_is_structurally_compressive():
+  for m, n in ((128, 128), (2048, 512), (4096, 11008), (129, 257)):
+    r = compression.ledger_rank(m, n)
+    assert r % 8 == 0 or r == 8
+    assert r * (m + n) < m * n
+
+
+@pytest.mark.parametrize("config", targets.DEFAULT_CONFIGS)
+def test_compression_strictly_smaller_every_family(config):
+  ledger = compression.compression_ledger(config)
+  assert compression.strictness_violations(ledger) == []
+  assert ledger["n_factored_gemms"] >= 1
+  v = ledger["variants"]
+  for small, big in (("int8", "float"), ("lowrank", "float"),
+                     ("lowrank_int8", "lowrank")):
+    assert v[small]["param_bytes"] < v[big]["param_bytes"]
+    assert v[small]["device_bytes"] < v[big]["device_bytes"]
+  assert all(0.0 < r < 1.0 for r in ledger["ratios"].values())
+  # drift-free against the committed ledger
+  committed = budgets.load_budgets()["compression"]
+  assert budgets.diff_compression(config, ledger, committed) == []
+
+
+def test_strictness_violation_surfaces():
+  ledger = compression.compression_ledger("xlstm-350m")
+  broken = json.loads(json.dumps(ledger))        # deep copy
+  broken["variants"]["int8"]["param_bytes"] = \
+      broken["variants"]["float"]["param_bytes"]
+  broken["variants"]["int8"]["device_bytes"] = \
+      broken["variants"]["float"]["device_bytes"]
+  found = budgets.diff_compression("xlstm-350m", broken,
+                                   budgets.load_budgets()["compression"])
+  keys = {f.key for f in found}
+  assert "not-smaller:int8-vs-float:param_bytes" in keys
+  assert "not-smaller:int8-vs-float:device_bytes" in keys
+  assert all(f.check == "compression_ledger" for f in found)
+
+
+# ---------------------------------------------------------------------------
+# Green path + CLI exit codes against the committed budgets.json.
+# ---------------------------------------------------------------------------
+
+
+def test_committed_budgets_green_scoped():
+  """Regenerating one real coordinate reproduces the committed numbers
+  within the bands (the same invariant CI's budgets step gates on)."""
+  audit = budgets.BudgetAudit(budgets.load_budgets())
+  (target,) = list(targets.iter_targets(
+      ["xlstm-350m"], ["jnp"], ["float"], ["decode"]))
+  ledger = audit.add_target(target)
+  assert audit.findings == [], [f.ident for f in audit.findings]
+  assert audit.warnings == []
+  assert ledger["credited_bytes"] == ledger["donated_bytes"]
+  assert ledger["dominant"] in ("compute", "memory", "collective")
+
+
+def test_budgets_cli_exit_codes(tmp_path, capsys):
+  from repro.analysis.__main__ import main
+  scoped = ["budgets", "--configs", "xlstm_350m", "--policies", "jnp",
+            "--quants", "float", "--programs", "decode", "--shallow"]
+  # green against the committed file
+  rep_path = str(tmp_path / "budgets_report.json")
+  assert main(scoped + ["--report", rep_path]) == 0
+  saved = json.loads(open(rep_path).read())
+  assert saved["ok"] and saved["programs"] and saved["compression"]
+  assert saved["findings"] == []
+  # bootstrap state: an empty budgets file turns the exit code red
+  empty = str(tmp_path / "empty.json")
+  assert main(scoped + ["--budgets", empty]) == 1
+  assert "unbudgeted" in capsys.readouterr().out
+  # --update admits the current numbers; the same run then passes
+  assert main(scoped + ["--budgets", empty, "--update"]) == 0
+  assert main(scoped + ["--budgets", empty]) == 0

@@ -40,6 +40,30 @@ def test_shape_bytes():
   assert hlo_cost._shape_bytes("pred[16]") == 16
 
 
+def test_shape_bytes_subbyte_integral():
+  """s4/u4 are 4-bit: byte totals round UP per array, never fractional."""
+  assert hlo_cost._shape_bytes("s4[4,8]{1,0}") == 16
+  assert hlo_cost._shape_bytes("s4[5]{0}") == 3      # 20 bits -> 3 bytes
+  assert hlo_cost._shape_bytes("u4[3]{0}") == 2
+  # rounding happens per array: two s4[5] are 3+3, not ceil(40/8)=5
+  assert hlo_cost._shape_bytes("(s4[5]{0}, s4[5]{0})") == 6
+  assert isinstance(hlo_cost._shape_bytes("(bf16[3]{0}, s4[7]{0})"), int)
+
+
+def test_s4_module_bytes_are_integral():
+  hlo = """
+HloModule m
+
+ENTRY %main (p: s4[5]) -> s4[5] {
+  %p = s4[5]{0} parameter(0)
+  ROOT %n = s4[5]{0} negate(s4[5]{0} %p)
+}
+"""
+  rep = hlo_cost.analyze_module(hlo)
+  assert rep.hbm_bytes == 6          # 3 result + 3 operand, whole bytes
+  assert rep.unknown_ops == {}
+
+
 def test_wire_factors():
   assert hlo_cost._wire_factor("all-reduce", 4) == 1.5
   assert hlo_cost._wire_factor("all-gather", 4) == 0.75
@@ -62,3 +86,104 @@ def test_trip_count_regex_on_real_format():
           '"known_init_step":{"init":"0","step":"1"}}')
   m = hlo_cost._TRIP_RE.search(line)
   assert m and m.group(1) == "12"
+
+
+def test_conv_dim_labels_flops():
+  """dim_labels place the output-feature dim inside the kernel shape:
+  3x3x3->4 NHWC conv over a 2x8x8 image is 2*out_elems*(k_elems/o)."""
+  hlo = """
+HloModule m
+
+ENTRY %main (x: f32[2,8,8,3], k: f32[3,3,3,4]) -> f32[2,8,8,4] {
+  %x = f32[2,8,8,3]{3,2,1,0} parameter(0)
+  %k = f32[3,3,3,4]{3,2,1,0} parameter(1)
+  ROOT %conv = f32[2,8,8,4]{3,2,1,0} convolution(f32[2,8,8,3]{3,2,1,0} %x, f32[3,3,3,4]{3,2,1,0} %k), window={size=3x3 pad=1_1x1_1}, dim_labels=b01f_01io->b01f
+}
+"""
+  rep = hlo_cost.analyze_module(hlo)
+  assert rep.flops == 2 * (2 * 8 * 8 * 4) * (3 * 3 * 3)
+  assert rep.dot_flops == 0.0        # convs are compute, not GEMM volume
+  assert rep.unknown_ops == {}
+
+
+def test_nested_while_trip_counts_multiply():
+  """known_trip_count composes through nesting: a dot inside an inner
+  trip-5 while inside an outer trip-3 while counts 15 times."""
+  hlo = """
+HloModule m
+
+%inner_body (p: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[4,4]{1,0}) %p), index=0
+  %h = f32[4,4]{1,0} get-tuple-element((s32[], f32[4,4]{1,0}) %p), index=1
+  %d = f32[4,4]{1,0} dot(f32[4,4]{1,0} %h, f32[4,4]{1,0} %h), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[4,4]{1,0}) tuple(s32[] %i, f32[4,4]{1,0} %d)
+}
+
+%inner_cond (p: (s32[], f32[4,4])) -> pred[] {
+  %p = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[4,4]{1,0}) %p), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+%outer_body (q: (s32[], f32[4,4])) -> (s32[], f32[4,4]) {
+  %q = (s32[], f32[4,4]{1,0}) parameter(0)
+  ROOT %w = (s32[], f32[4,4]{1,0}) while((s32[], f32[4,4]{1,0}) %q), condition=%inner_cond, body=%inner_body, backend_config={"known_trip_count":{"n":"5"}}
+}
+
+%outer_cond (q: (s32[], f32[4,4])) -> pred[] {
+  %q = (s32[], f32[4,4]{1,0}) parameter(0)
+  %i = s32[] get-tuple-element((s32[], f32[4,4]{1,0}) %q), index=0
+  %c = s32[] constant(3)
+  ROOT %lt = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+
+ENTRY %main (x: f32[4,4]) -> f32[4,4] {
+  %x = f32[4,4]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[4,4]{1,0}) tuple(s32[] %z, f32[4,4]{1,0} %x)
+  %loop = (s32[], f32[4,4]{1,0}) while((s32[], f32[4,4]{1,0}) %init), condition=%outer_cond, body=%outer_body, backend_config={"known_trip_count":{"n":"3"}}
+  ROOT %out = f32[4,4]{1,0} get-tuple-element((s32[], f32[4,4]{1,0}) %loop), index=1
+}
+"""
+  rep = hlo_cost.analyze_module(hlo)
+  assert rep.flops == 3 * 5 * (2 * 4 * 4 * 4)
+  assert rep.dot_flops == rep.flops
+
+
+def test_nested_scan_flops_real():
+  """Same property through real XLA output: scan-of-scan lowers to
+  nested whiles whose trip counts must multiply."""
+  def step(w, x):
+    def outer(h, _):
+      def inner(h2, _):
+        return h2 @ w, None
+      h2, _ = jax.lax.scan(inner, h, None, length=4)
+      return h2, None
+    h, _ = jax.lax.scan(outer, x, None, length=3)
+    return jnp.sum(h)
+  compiled = jax.jit(step).lower(
+      jax.ShapeDtypeStruct((64, 64), jnp.float32),
+      jax.ShapeDtypeStruct((8, 64), jnp.float32)).compile()
+  rep = hlo_cost.analyze_module(compiled.as_text(), 1)
+  expected = 3 * 4 * 2 * 8 * 64 * 64
+  assert abs(rep.flops - expected) / expected < 0.05, rep.flops
+
+
+def test_unparsed_lines_count_as_generic_traffic():
+  """A line the splitter rejects still lands in the ledger: every shape
+  token on it becomes generic HBM traffic plus an unknown_ops entry."""
+  hlo = """
+HloModule m
+
+ENTRY %main (p: f32[8]) -> f32[8] {
+  %p = f32[8]{0} parameter(0)
+  %bad = f32[8]{0} mystery op with f32[16]{0} and no operand parens
+  ROOT %n = f32[8]{0} negate(f32[8]{0} %p)
+}
+"""
+  rep = hlo_cost.analyze_module(hlo)
+  assert rep.unknown_ops == {"<unparsed>": 1}
+  # 32 + 64 from the rejected line's tokens, 32 + 32 from the negate
+  assert rep.hbm_bytes == (32 + 64) + (32 + 32)

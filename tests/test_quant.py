@@ -90,12 +90,24 @@ def test_quantize_params_plan_scoping():
   assert count_params(q) == count_params(params)
 
 
-def test_quantize_params_skips_stacked_leaves():
-  stacked = FactoredLinear(w=rnd(3, (2, 64, 64)), u=None, v=None,
-                           name="layers/scan")
+def test_quantize_params_stacked_leaves_per_layer():
+  """A scanned (L, m, n) stack quantizes per (layer, column); slicing
+  the fields — what lax.scan does with the params pytree — recovers
+  exactly the leaf 2-D quantization would have produced."""
+  w = rnd(3, (2, 64, 64))
+  stacked = FactoredLinear(w=w, u=None, v=None, name="layers/scan")
   q = quantize_params({"s": stacked, "fc": dense(KEY, 64, 64, name="fc")})
-  assert isinstance(q["s"], FactoredLinear)        # 3D: left alone
+  assert isinstance(q["s"], QuantizedLinear)
   assert isinstance(q["fc"], QuantizedLinear)
+  assert q["s"].w_q.shape == (2, 64, 64) and q["s"].w_q.dtype == jnp.int8
+  assert q["s"].w_scale.shape == (2, 64)
+  for i in range(2):
+    per_layer = quantize_params(
+        {"s": FactoredLinear(w=w[i], u=None, v=None, name="layers/scan")})
+    np.testing.assert_array_equal(np.asarray(q["s"].w_q[i]),
+                                  np.asarray(per_layer["s"].w_q))
+    np.testing.assert_allclose(np.asarray(q["s"].w_scale[i]),
+                               np.asarray(per_layer["s"].w_scale))
 
 
 def test_static_activation_scale_calibration():
