@@ -1,27 +1,39 @@
-"""Self-speculative decoding vs vanilla greedy on a mixed-length workload.
+"""Self-speculative decoding vs vanilla decoding on a mixed-length workload.
 
 The paper's low-rank stage-2 model (§3.2) as a free draft: per spec
 iteration the draft proposes k tokens, the target verifies all of them in
-one fused `ModelApi.decode_window`, and the engine commits the longest
-agreeing prefix + one bonus token — so the target's sequential-step count
-drops by the accept rate while the OUTPUT stays token-for-token vanilla
-greedy (this bench re-checks that parity on every row).
+one fused `ModelApi.decode_window` — now a TRUE batched forward (one
+weight read amortized over the k+1 window positions, the paper's §4
+bandwidth economics applied to verification), not a scan of single-token
+steps. At temperature 0 the engine commits the longest agreeing prefix +
+one bonus token and the OUTPUT stays token-for-token vanilla greedy
+(re-checked on every greedy row). At temperature > 0 the engine rejection-
+samples (accept-with-prob-min(1, p/q), residual resample on reject), so
+every emitted token is distributed exactly as vanilla sampling — the
+distribution identity is pinned by tests/test_spec_window_parity.py; this
+bench reports throughput and accept rate at T = 0.8.
 
-Reports, per (k, draft rank): wall-clock tok/s, measured accept rate, and
-parity against the vanilla baseline; k in {1, 2, 4} over a near-full rank
-(accept -> 1) and a pathologically low one (accept -> 0, the overhead
-floor). Timings are second-pass (first pass warms the jit caches). CPU
-wall-clock is a trajectory signal, not a TPU number: the smoke model is
-dispatch-bound, and the draft's factored GEMMs only pay off once weights
-dominate step time.
+Three report sections:
 
-Metric honesty: `decode_steps` counts ENGINE ITERATIONS (host round
-trips + accept/rewind overhead amortized per window), which acceptance
-divides by ~(accept*k + 1). It is NOT yet target weight traffic — the
-verify window is a scan of single-token steps, so it still reads the
-weights once per window position; collapsing the window into one batched
-(b x (k+1))-row forward (single weight pass, where the real §4
-bandwidth win appears) is a ROADMAP open item.
+  verify   the verify program itself, microbenched per k: one batched
+           (b x (k+1))-row `decode_window` call vs the sequential scan
+           oracle `decode_window_sequential` (k+1 serial weight reads).
+           This isolates the window forward from engine overhead — the
+           number CI gates on (batched no slower than sequential, k=4).
+  rows     full-engine greedy sweep over k x draft rank: wall-clock
+           tok/s, accept rate, engine iterations, token parity vs the
+           vanilla greedy baseline. Near-full rank (accept -> 1) and a
+           pathologically low one (accept -> 0, the overhead floor).
+  sampled  full-engine sweep at temperature 0.8, sane rank only: tok/s
+           and accept rate vs a vanilla sampled baseline. No token
+           parity at T > 0 (spec and vanilla consume RNG differently);
+           work parity = equal token counts.
+
+`decode_steps` counts ENGINE ITERATIONS (host round trips), which
+acceptance divides by ~(accept*k + 1); with the batched window each
+iteration is also a single target weight pass, so the iteration ratio IS
+the weight-traffic ratio now. Timings are second-pass (first pass warms
+the jit caches); CPU wall-clock is a trajectory signal, not a TPU number.
 
 `--json` writes BENCH_speculative.json — CI runs this as a smoke step and
 uploads it alongside BENCH_serving.json.
@@ -37,6 +49,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.kernels import dispatch
+from repro.layers.common import identity_constraint
 from repro.models.api import get_model
 from repro.serving import LMEngine, make_draft_params
 
@@ -46,53 +60,110 @@ from repro.serving import LMEngine, make_draft_params
 from benchmarks.bench_serving import make_workload
 
 
-def run_engine(eng: LMEngine, prompts, budgets) -> dict:
-  """Warm pass (jit), then a timed pass after reset()."""
+def run_engine(eng: LMEngine, prompts, budgets, *,
+               temperature: float = 0.0) -> dict:
+  """Warm pass (jit), then a timed pass after reset(). Sampled runs
+  re-seed the same rng key per pass so warm and timed draw identically."""
   for _ in range(2):
     eng.reset()
     t0 = time.perf_counter()
     for p, n in zip(prompts, budgets):
       eng.submit(p, max_new_tokens=n)
-    finished = eng.run()
+    finished = eng.run(temperature=temperature, rng=jax.random.PRNGKey(7))
     dt = time.perf_counter() - t0
   tokens = {f.uid: f.tokens for f in finished}
   n_tok = sum(len(t) for t in tokens.values())
   return {"wall_s": dt, "tokens": n_tok, "tok_s": n_tok / dt,
           "accept_rate": eng.accept_rate, "decode_steps": eng.decode_steps,
-          # engine iterations per emitted token (see module docstring:
-          # iteration != weight pass until the window step is batched)
+          # engine iterations per emitted token == target weight passes
+          # per token (the batched window is one weight read)
           "iters_per_token": eng.decode_steps / max(n_tok, 1),
           "by_uid": tokens}
 
 
+def time_verify(cfg, api, params, kernel_policy: str, batch: int,
+                ks, *, max_len: int, reps: int = 30) -> list:
+  """Microbench the verify program per k: one batched decode_window call
+  vs the sequential scan oracle, same inputs, median of `reps` timed
+  calls after a warm/compile call."""
+  rs = np.random.RandomState(0)
+  state0 = api.init_decode_state(cfg, batch, max_len)
+  rows = []
+  for k in ks:
+    w = k + 1
+    pol = (None if kernel_policy == "jnp"
+           else dispatch.decode_policy(batch, window=w, interpret=True))
+    toks = jnp.asarray(rs.randint(1, cfg.vocab_size, size=(batch, w)),
+                       jnp.int32)
+    pos = jnp.zeros((batch,), jnp.int32)
+
+    def bat(p, s, t, q, pol=pol):
+      return api.decode_window(p, s, t, q, cfg, identity_constraint, pol)
+
+    def seq(p, s, t, q, pol=pol):
+      return api.decode_window_sequential(p, s, t, q, cfg,
+                                          identity_constraint, pol)
+
+    row = {"k": k}
+    for name, fn in (("batched", jax.jit(bat)),
+                     ("sequential", jax.jit(seq))):
+      lg, _ = fn(params, state0, toks, pos)       # compile + warm
+      jax.block_until_ready(lg)
+      times = []
+      for _ in range(reps):
+        t0 = time.perf_counter()
+        lg, _ = fn(params, state0, toks, pos)
+        jax.block_until_ready(lg)
+        times.append(time.perf_counter() - t0)
+      row[f"{name}_ms"] = float(np.median(times)) * 1e3
+    row["speedup"] = row["sequential_ms"] / row["batched_ms"]
+    rows.append(row)
+  return rows
+
+
 def run(arch: str, *, batch: int, num_requests: int, max_len: int,
-        kernel_policy, ks=(1, 2, 4), ranks=(128, 8)) -> dict:
+        kernel_policy, ks=(1, 2, 4), ranks=(128, 8),
+        sample_temperature=0.8) -> dict:
   cfg = configs.get_smoke(arch).with_(vocab_size=128, dtype=jnp.float32)
   api = get_model(cfg)
   params = api.init(jax.random.PRNGKey(0), cfg)
   prompts, budgets = make_workload(num_requests, cfg.vocab_size)
   kw = dict(batch_size=batch, max_len=max_len, kernel_policy=kernel_policy)
 
+  verify = time_verify(cfg, api, params, kernel_policy or "jnp", batch,
+                       ks, max_len=max_len)
+
   base = run_engine(LMEngine(cfg, params, **kw), prompts, budgets)
   ref = base.pop("by_uid")
   del base["accept_rate"]
+  base_s = run_engine(LMEngine(cfg, params, **kw), prompts, budgets,
+                      temperature=sample_temperature)
+  del base_s["by_uid"], base_s["accept_rate"]
 
-  rows = []
+  rows, sampled = [], []
   for rank in ranks:
     draft = make_draft_params(params, rank=rank)
     for k in ks:
       eng = LMEngine(cfg, params, speculate=k, draft_params=draft, **kw)
       r = run_engine(eng, prompts, budgets)
       got = r.pop("by_uid")
-      # losslessness re-checked on every row: uids restart per engine,
-      # so position i of each engine is the same request
+      # greedy losslessness re-checked on every row: uids restart per
+      # engine, so position i of each engine is the same request
       r["parity"] = all(
           np.array_equal(got[u2], ref[u1])
           for u1, u2 in zip(sorted(ref), sorted(got)))
       r.update(k=k, rank=rank)
       rows.append(r)
+      if rank == max(ranks):
+        eng = LMEngine(cfg, params, speculate=k, draft_params=draft, **kw)
+        rs_ = run_engine(eng, prompts, budgets,
+                         temperature=sample_temperature)
+        del rs_["by_uid"]
+        rs_.update(k=k, rank=rank, temperature=sample_temperature)
+        sampled.append(rs_)
   return {"arch": cfg.name, "batch": batch, "num_requests": num_requests,
-          "max_len": max_len, "baseline": base, "rows": rows}
+          "max_len": max_len, "verify": verify, "baseline": base,
+          "baseline_sampled": base_s, "rows": rows, "sampled": sampled}
 
 
 def main() -> None:
@@ -108,15 +179,26 @@ def main() -> None:
 
   out = run(args.arch, batch=args.batch, num_requests=args.num_requests,
             max_len=args.max_len, kernel_policy=args.kernels)
+  print("  verify program (one window, batched vs sequential scan):")
+  for v in out["verify"]:
+    print(f"    k={v['k']}: batched {v['batched_ms']:.2f} ms vs "
+          f"sequential {v['sequential_ms']:.2f} ms ({v['speedup']:.2f}x)")
   b = out["baseline"]
-  print(f"  vanilla: {b['tokens']} tok in {b['wall_s']:.2f}s "
+  print(f"  vanilla greedy: {b['tokens']} tok in {b['wall_s']:.2f}s "
         f"({b['tok_s']:.1f} tok/s, {b['decode_steps']} steps)")
   for r in out["rows"]:
-    print(f"  k={r['k']} rank={r['rank']:>4}: {r['tok_s']:.1f} tok/s "
+    print(f"  T=0.0 k={r['k']} rank={r['rank']:>4}: {r['tok_s']:.1f} tok/s "
           f"({r['tok_s'] / b['tok_s']:.2f}x), accept {r['accept_rate']:.2f}, "
           f"{r['decode_steps']} iterations "
           f"({b['decode_steps'] / r['decode_steps']:.1f}x fewer), "
           f"parity={r['parity']}")
+  bs = out["baseline_sampled"]
+  print(f"  vanilla sampled: {bs['tok_s']:.1f} tok/s "
+        f"({bs['decode_steps']} steps)")
+  for r in out["sampled"]:
+    print(f"  T={r['temperature']} k={r['k']} rank={r['rank']:>4}: "
+          f"{r['tok_s']:.1f} tok/s ({r['tok_s'] / bs['tok_s']:.2f}x), "
+          f"accept {r['accept_rate']:.2f}, {r['decode_steps']} iterations")
   if args.json:
     with open("BENCH_speculative.json", "w") as f:
       json.dump(out, f, indent=1)

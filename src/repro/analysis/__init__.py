@@ -10,6 +10,9 @@ and optimized HLO:
   retrace_stability   engine compiles each signature exactly once
   prefix_splice_stability  cached-splice serving keeps the cold path's
                       prefill signatures and token-for-token output
+  spec_window_stability  the batched speculative verify window compiles
+                      one signature per (bucket, k) — greedy and
+                      sampled, across draft-rank walks
   transfer_lint       no host round-trips; donation actually aliases
   sharding_coverage   every production param leaf has a sharding rule
   cost_budget         HLO FLOP/byte/collective ledger within the
@@ -100,6 +103,10 @@ def run_audit(config_names: Iterable[str] = DEFAULT_CONFIGS,
                                                          policies)
     report.extend(sf)
     report.targets.extend(sinfos)
+    wf, winfos = lifecycle.check_spec_window_stability(config_names,
+                                                       policies)
+    report.extend(wf)
+    report.targets.extend(winfos)
   if run_sharding:
     _sharding_findings(config_names, report)
   if budget_audit is not None:

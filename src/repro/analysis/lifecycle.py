@@ -1,9 +1,13 @@
 """Executing lifecycle checks: jit caches after real serve cycles.
 
-Two checks live here — `retrace_stability` (the vanilla engine
-lifecycle) and `prefix_splice_stability` (the prefix-cache splice path
+Three checks live here — `retrace_stability` (the vanilla engine
+lifecycle), `prefix_splice_stability` (the prefix-cache splice path
 must not add prefill signatures beyond the cold path's, and spliced
-greedy output must match cold token-for-token).
+greedy output must match cold token-for-token), and
+`spec_window_stability` (the batched speculative verify window compiles
+exactly one signature per (bucket, k) — across greedy AND sampled
+cycles and across mid-serve draft-rank walks, which retrace only
+draft-side programs).
 
 Retrace-stability: the engine's jit caches after a real serve cycle.
 
@@ -46,6 +50,7 @@ from repro.analysis.targets import normalize_config
 from repro.models.api import get_model
 from repro.serving.engine import LMEngine
 from repro.serving.prefix_cache import PrefixCache
+from repro.serving.speculative import RankController
 
 #: configs whose family runs the full LMEngine lifecycle
 LIFECYCLE_CONFIGS = ("qwen3-4b", "zamba2-7b", "xlstm-350m")
@@ -229,4 +234,83 @@ def check_prefix_splice_stability(
           fail(f"{prog}-cache:{n}",
                f"auxiliary program {prog!r} compiled {n} signatures in "
                f"the cached-splice cycle")
+  return findings, infos
+
+
+# ---------------------------------------------------------------------------
+# spec_window_stability
+# ---------------------------------------------------------------------------
+
+#: speculative-cycle geometry: one k (= one window bucket per engine),
+#: a low starting rank, and a deliberately unreachable accept-rate band
+#: so the controller is guaranteed to walk the rank mid-serve
+_SPEC_K = 2
+_SPEC_RANK = 8
+_SPEC_BUDGET = 4
+
+
+def _spec_cycle(cfg, params, policy: str) -> Tuple[dict, int]:
+  """One speculative engine through a greedy cycle then a sampled cycle,
+  with a rank controller that must walk; returns (stats, rank walks)."""
+  rc = RankController(band=(0.99, 1.0), step=32, interval=2,
+                      min_rank=_SPEC_RANK, max_rank=_SPEC_RANK + 64)
+  eng = LMEngine(cfg, params, batch_size=_BATCH, max_len=_MAX_LEN,
+                 kernel_policy=None if policy == "jnp" else policy,
+                 speculate=_SPEC_K, draft_rank=_SPEC_RANK,
+                 rank_controller=rc)
+  rs = np.random.RandomState(0)
+  for temperature in (0.0, 0.7):     # verify must share ONE program
+    eng.reset()
+    for n in _PROMPT_LENS:           # retire + refill, two buckets
+      eng.submit(rs.randint(1, _VOCAB, size=(n,)),
+                 max_new_tokens=_SPEC_BUDGET)
+    done = eng.run(temperature=temperature, rng=jax.random.PRNGKey(1))
+    assert len(done) == len(_PROMPT_LENS)
+  return eng.compile_stats(), len(eng.rank_history)
+
+
+def check_spec_window_stability(
+    config_names: Iterable[str],
+    policies: Iterable[str]) -> Tuple[List[Finding], List[dict]]:
+  """The batched verify window must compile exactly ONE signature per
+  (bucket, k) engine — measured across a greedy cycle, a sampled cycle,
+  retire/refill churn, and at least one controller-driven draft-rank
+  walk (which may retrace draft-side programs, but never the verify
+  window: `make_draft_params` changes factor shapes only on the draft's
+  side of the engine)."""
+  findings: List[Finding] = []
+  infos: List[dict] = []
+  for name in config_names:
+    name = normalize_config(name)
+    if name not in LIFECYCLE_CONFIGS:
+      continue
+    cfg = configs.get_smoke(name).with_(vocab_size=_VOCAB)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+
+    for policy in policies:
+      stats, walks = _spec_cycle(cfg, params, policy)
+      info = dict(config=name, policy=policy, quant="-",
+                  program="lifecycle", check="spec_window_stability",
+                  compile_stats=stats, rank_walks=walks)
+      infos.append(info)
+
+      def fail(key: str, detail: str) -> None:
+        findings.append(Finding(
+            check="spec_window_stability", config=name, policy=policy,
+            program="lifecycle", key=key, detail=detail))
+
+      if stats["window"] < 0:
+        info["skipped"] = "jit cache sizes unavailable on this runtime"
+        continue
+      if stats["window"] != 1:
+        fail(f"window-cache:{stats['window']}",
+             f"the batched verify window compiled {stats['window']} "
+             f"signatures across greedy+sampled speculative cycles at "
+             f"one (bucket, k={_SPEC_K}) — temperature or a draft-rank "
+             f"walk leaked into the verify program's jit signature")
+      if walks < 1:
+        fail("no-rank-walk",
+             f"the rank controller never adjusted the draft rank "
+             f"(history empty, rank {_SPEC_RANK}) — the window pin was "
+             f"not exercised across a draft rebuild and is vacuous")
   return findings, infos

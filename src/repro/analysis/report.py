@@ -30,6 +30,9 @@ CHECKS = (
     "retrace_stability",   # engine lifecycle compiles each signature once
     "prefix_splice_stability",  # cached-splice serving: same prefill
                                 # signatures as cold + token parity
+    "spec_window_stability",    # batched speculative verify: one jit
+                                # signature per (bucket, k), greedy and
+                                # sampled, across draft-rank walks
     "transfer_lint",       # no host callbacks/transfers; donation holds;
                            # HLO parser gaps (unknown ops) surfaced
     "sharding_coverage",   # every param leaf resolves to a sharding rule

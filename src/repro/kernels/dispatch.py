@@ -118,10 +118,11 @@ def decode_policy(batch_size: Optional[int] = None, *, window: int = 1,
   rows into one GEMM, which is still the paper's low-batch serving
   regime as long as b*w fits the kernel's contract. The bound therefore
   becomes min(16, batch_size * window) — the kernel's 16-row contract is
-  never widened, so an oversized b*w window simply stays on jnp. (The
-  current ModelApi.decode_window is a scan — one token per step, batch
-  rows per GEMM — so this entry is the classification contract for the
-  batched window step, a ROADMAP open item, not a live reroute today.)
+  never widened, so an oversized b*w window simply stays on jnp. This is
+  live routing: ModelApi.decode_window now runs each family's batched
+  window forward, whose non-recurrent GEMMs flatten b*w rows and
+  classify here (pinned by the parity grid in
+  tests/test_spec_window_parity.py, which runs both policies).
   """
   bmax = ops.DECODE_BATCH_MAX
   if batch_size is not None:

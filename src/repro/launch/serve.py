@@ -49,14 +49,28 @@ def main() -> None:
                        "GEMM leaf becomes int8 + per-column scales and "
                        "decodes through the int8_gemm regime")
   ap.add_argument("--speculate", type=int, default=0, metavar="K",
-                  help="lossless self-speculative decoding: a low-rank "
-                       "draft of the SAME params proposes K tokens per "
-                       "step, the target verifies them in one fused "
-                       "window (greedy-only; token-for-token identical "
-                       "to vanilla greedy)")
+                  help="self-speculative decoding: a low-rank draft of "
+                       "the SAME params proposes K tokens per step, the "
+                       "target verifies them in one batched window "
+                       "forward. Greedy (--temperature 0) is lossless — "
+                       "token-for-token vanilla greedy; temperature > 0 "
+                       "rejection-samples, matching the vanilla "
+                       "sampling distribution exactly")
   ap.add_argument("--draft-rank", type=int, default=None,
                   help="fixed truncated-SVD rank for the draft's GEMMs "
                        "(default: explained-variance rule at 0.9)")
+  ap.add_argument("--adapt-rank", action="store_true",
+                  help="online draft-rank controller: walk --draft-rank "
+                       "to keep the measured accept rate inside "
+                       "--rank-band (requires --draft-rank)")
+  ap.add_argument("--rank-band", type=float, nargs=2, default=(0.5, 0.85),
+                  metavar=("LO", "HI"),
+                  help="target accept-rate band for --adapt-rank")
+  ap.add_argument("--rank-step", type=int, default=16,
+                  help="rank increment per --adapt-rank adjustment")
+  ap.add_argument("--rank-interval", type=int, default=8,
+                  help="engine iterations per --adapt-rank measurement "
+                       "window")
   ap.add_argument("--prefix-cache", action="store_true",
                   help="radix-trie prefix cache: shared prompt prefixes "
                        "splice from cached decode-state snapshots and "
@@ -65,6 +79,11 @@ def main() -> None:
   ap.add_argument("--prefix-cache-mb", type=float, default=256.0,
                   help="byte-accounted LRU capacity for --prefix-cache")
   args = ap.parse_args()
+  if args.adapt_rank and args.draft_rank is None:
+    ap.error("--adapt-rank needs --draft-rank (a starting rank to walk)")
+  if args.adapt_rank and args.quantize:
+    ap.error("--adapt-rank rebuilds the draft from the served params, "
+             "which int8 leaves cannot be SVD'd from — drop one flag")
 
   cfg = (configs.get_config(args.arch) if args.full
          else configs.get_smoke(args.arch))
@@ -114,21 +133,21 @@ def main() -> None:
   rng = np.random.RandomState(0)
   lo, hi = max(1, args.prompt_len // 2), 2 * args.prompt_len
   temperature = args.temperature
-  if args.speculate and temperature > 0:
-    # speculative decoding is greedy-only (rejection sampling for T > 0
-    # is an open item); fall back rather than erroring out of the driver
-    print(f"--speculate is greedy-only: overriding --temperature "
-          f"{temperature} -> 0.0")
-    temperature = 0.0
   cache = None
   if args.prefix_cache:
     from repro.serving import PrefixCache
     cache = PrefixCache(capacity_mb=args.prefix_cache_mb)
+  controller = None
+  if args.adapt_rank:
+    from repro.serving import RankController
+    controller = RankController(band=tuple(args.rank_band),
+                                step=args.rank_step,
+                                interval=args.rank_interval)
   engine = LMEngine(cfg, params, batch_size=args.batch,
                     max_len=args.max_len, kernel_policy=args.kernels,
                     eos_id=args.eos_id, speculate=args.speculate,
                     draft_params=draft_params, draft_rank=args.draft_rank,
-                    prefix_cache=cache)
+                    rank_controller=controller, prefix_cache=cache)
   if args.speculate:
     from repro.core.factored import count_params
     print(f"speculating {args.speculate} tokens/step with a "
@@ -146,8 +165,15 @@ def main() -> None:
   finished = engine.run(temperature=temperature)
   dt = time.perf_counter() - t0
   tokens = sum(len(f.tokens) for f in finished)
-  spec = (f", accept rate {engine.accept_rate:.2f}"
-          if args.speculate else "")
+  spec = ""
+  if args.speculate:
+    # accept_rate is None until something was drafted — "no data", not 0
+    rate = engine.accept_rate
+    spec = (f", accept rate {rate:.2f}" if rate is not None
+            else ", accept rate n/a")
+    if args.adapt_rank:
+      spec += (f", draft rank {engine.draft_rank} "
+               f"({len(engine.rank_history)} adjustments)")
   ttfts = sorted(f.ttft_s for f in finished if f.ttft_s is not None)
   ttft_p50 = ttfts[len(ttfts) // 2] * 1e3 if ttfts else float("nan")
   cachestr = ""

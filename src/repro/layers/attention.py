@@ -200,3 +200,49 @@ def attention_decode(p: dict, x: jax.Array, cache: dict,
     out = out.reshape(b, 1, h * hd).astype(x.dtype)
   y = gemm(p["wo"], out, policy)
   return y, {"k": k_cache, "v": v_cache}
+
+
+def attention_decode_window(p: dict, x: jax.Array, cache: dict,
+                            positions: jax.Array, cfg: ModelConfig,
+                            cs: Constraint = _id_cs, policy=None
+                            ) -> tuple[jax.Array, dict]:
+  """Batched W-token decode window. x: (b, W, d); positions: (b,) start.
+
+  The speculative-verify forward: all W tokens go through the q/k/v/o
+  GEMMs in one (b*W)-row pass — ONE weight read for the whole window,
+  the paper's §4 amortization — then attend causally against the KV
+  cache with per-query masks (query t sees absolute positions <=
+  positions + t). Each output row is bit-identical to running
+  `attention_decode` W times: the GEMM rows are independent dots, the
+  new KV rows land at the same absolute slots in the same cache dtype,
+  and masked (future-window) cache rows contribute exactly 0 after the
+  softmax — the same way unwritten rows already do in the single step.
+  Out-of-bounds window writes at the max_len boundary drop, as before.
+  """
+  b, W, _ = x.shape
+  h, kvh, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+  pos2d = positions[:, None] + jnp.arange(W)[None, :]           # (b, W)
+  q, k_new, v_new = _project_qkv(p, x, cfg, pos2d, cs, policy)
+  bidx = jnp.arange(b)[:, None]
+  k_cache = cache["k"].at[bidx, pos2d].set(k_new.astype(cache["k"].dtype))
+  v_cache = cache["v"].at[bidx, pos2d].set(v_new.astype(cache["v"].dtype))
+  mask = jnp.arange(k_cache.shape[1])[None, None, :] <= pos2d[:, :, None]
+  if h != kvh:
+    group = h // kvh
+    qg = q.reshape(b, W, kvh, group, hd)
+    sc = jnp.einsum("bqkgd,bskd->bqkgs", qg.astype(jnp.float32),
+                    k_cache.astype(jnp.float32)) / (hd ** 0.5)
+    sc = jnp.where(mask[:, :, None, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqkgs,bskd->bqkgd", pr,
+                     v_cache.astype(jnp.float32))
+    out = out.reshape(b, W, h * hd).astype(x.dtype)
+  else:
+    sc = jnp.einsum("bqhd,bshd->bqhs", q.astype(jnp.float32),
+                    k_cache.astype(jnp.float32)) / (hd ** 0.5)
+    sc = jnp.where(mask[:, :, None, :], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bqhs,bshd->bqhd", pr, v_cache.astype(jnp.float32))
+    out = out.reshape(b, W, h * hd).astype(x.dtype)
+  y = gemm(p["wo"], out, policy)
+  return y, {"k": k_cache, "v": v_cache}

@@ -188,3 +188,42 @@ def mamba2_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
   y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
   y = rms_norm(y, p["norm"], cfg.norm_eps)
   return gemm(p["out_proj"], y, policy), {"ssm": ssm, "conv": conv_state}
+
+
+def mamba2_decode_window(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
+                         cs: Constraint = _id_cs, expand: int = 2,
+                         policy=None) -> tuple[jax.Array, dict]:
+  """Batched W-token decode window. x: (b, W, d).
+
+  All weight GEMMs (in_zx / in_bcdt / out_proj), the streaming conv, and
+  the per-position dt / decay / outer-product terms batch over the window
+  in one pass; only the O(1)-state recurrence `h' = da*h + upd` stays a
+  `lax.scan` of elementwise ops over the W positions, preserving the fp
+  summation order of W sequential `mamba2_decode` calls bit-for-bit.
+  """
+  b, W, _ = x.shape
+  z, xi, B, C, dt, d_inner, nheads = _split_proj(p, x, cfg, expand, policy)
+  xi, conv_state = _causal_conv(xi, p["conv_w"], state["conv"])
+  dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                       p["dt_bias"].astype(jnp.float32))      # (b,W,h)
+  A = -jnp.exp(p["A_log"].astype(jnp.float32))
+  xh = xi.reshape(b, W, nheads, HEAD_DIM).astype(jnp.float32)
+  Bf = B.astype(jnp.float32)                                   # (b,W,n)
+  Cf = C.astype(jnp.float32)
+  da = jnp.exp(dt * A)                                         # (b,W,h)
+  upd = jnp.einsum("bqn,bqhp->bqhnp", Bf, xh * dt[..., None])
+
+  def step(ssm, inp):
+    da_t, upd_t = inp
+    ssm1 = ssm * da_t[..., None, None] + upd_t
+    return ssm1, ssm1
+  ssm_last, ssm_seq = jax.lax.scan(
+      step, state["ssm"], (da.transpose(1, 0, 2),
+                           upd.transpose(1, 0, 2, 3, 4)))
+  ssm_seq = ssm_seq.transpose(1, 0, 2, 3, 4)                   # (b,W,h,n,p)
+  y = jnp.einsum("bqn,bqhnp->bqhp", Cf, ssm_seq)
+  y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+  y = y.reshape(b, W, d_inner).astype(x.dtype)
+  y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["out_proj"], y, policy), {"ssm": ssm_last, "conv": conv_state}

@@ -196,5 +196,47 @@ def mla_decode(p: dict, x: jax.Array, cache: dict, positions: jax.Array,
   return y, {"c_kv": c_cache, "k_rope": kr_cache}
 
 
+def mla_decode_window(p: dict, x: jax.Array, cache: dict,
+                      positions: jax.Array, cfg: ModelConfig,
+                      cs: Constraint = _id_cs, policy=None
+                      ) -> tuple[jax.Array, dict]:
+  """Batched W-token absorbed-form decode. x: (b, W, d); positions (b,).
+
+  One weight pass over the window: query/latent projections run as
+  (b*W)-row GEMMs, the W new latents scatter at absolute positions, and
+  every window query scores the latent cache under its own causal mask
+  (query t reads positions <= positions + t). Bit-identical per row to
+  W sequential `mla_decode` steps — masked future-window cache rows
+  contribute exactly 0 after the softmax, like unwritten rows do today.
+  """
+  m, h = cfg.mla, cfg.num_heads
+  b, W, _ = x.shape
+  pos2d = positions[:, None] + jnp.arange(W)[None, :]           # (b, W)
+  q_nope, q_rope = _queries(p, x, cfg, pos2d, policy)
+  c_new, kr_new = _latents(p, x, cfg, pos2d, policy)
+  bidx = jnp.arange(b)[:, None]
+  c_cache = cache["c_kv"].at[bidx, pos2d].set(
+      c_new.astype(cache["c_kv"].dtype))
+  kr_cache = cache["k_rope"].at[bidx, pos2d].set(
+      kr_new.astype(cache["k_rope"].dtype))
+
+  w_uk = _as_w(p["w_uk"]).reshape(m.kv_lora_rank, h, m.qk_nope_dim)
+  q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                     w_uk.astype(jnp.float32))
+  sc = jnp.einsum("bqhr,bsr->bqhs", q_lat, c_cache.astype(jnp.float32))
+  sc += jnp.einsum("bqhr,bsr->bqhs", q_rope.astype(jnp.float32),
+                   kr_cache.astype(jnp.float32))
+  sc *= 1.0 / ((m.qk_nope_dim + m.qk_rope_dim) ** 0.5)
+  mask = jnp.arange(c_cache.shape[1])[None, None, :] <= pos2d[:, :, None]
+  sc = jnp.where(mask[:, :, None, :], sc, NEG_INF)
+  pr = jax.nn.softmax(sc, axis=-1)
+  ctx = jnp.einsum("bqhs,bsr->bqhr", pr, c_cache.astype(jnp.float32))
+  w_uv = _as_w(p["w_uv"]).reshape(m.kv_lora_rank, h, m.v_head_dim)
+  out = jnp.einsum("bqhr,rhd->bqhd", ctx, w_uv.astype(jnp.float32))
+  out = out.reshape(b, W, h * m.v_head_dim).astype(x.dtype)
+  y = gemm(p["wo"], out, policy)
+  return y, {"c_kv": c_cache, "k_rope": kr_cache}
+
+
 def _as_w(leaf):
   return leaf.product() if hasattr(leaf, "product") else leaf

@@ -172,6 +172,52 @@ def mlstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
   return gemm(p["down"], y, policy), {"C": C1, "n": n1, "m": m1}
 
 
+def mlstm_decode_window(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
+                        cs: Constraint = _id_cs, pf: float = 2.0,
+                        policy=None) -> tuple[jax.Array, dict]:
+  """Batched W-token decode window. x: (b, W, d).
+
+  The non-recurrent up/qkv/ifg/down GEMMs batch over the window in one
+  weight pass; only the stabilized matrix-memory recurrence (C, n, m —
+  pure elementwise ops plus activation-only einsums) stays a `lax.scan`
+  over the W positions, so every position reproduces `mlstm_decode`'s fp
+  operation order bit-for-bit."""
+  b, W, _ = x.shape
+  d = cfg.d_model
+  di = int(pf * d)
+  h = cfg.num_heads
+  hd = di // h
+  up = gemm(p["up"], x, policy)
+  xin, z = up[..., :di], up[..., di:]
+  qkv = gemm(p["qkv"], xin, policy)
+  q, k, v = [t.reshape(b, W, h, hd).astype(jnp.float32)
+             for t in jnp.split(qkv, 3, axis=-1)]
+  gates = gemm(p["ifg"], xin, policy).astype(jnp.float32).reshape(b, W, 2, h)
+  logi, logf = gates[:, :, 0], jax.nn.log_sigmoid(gates[:, :, 1])
+
+  def step(carry, inp):
+    C, n, m = carry
+    qt, kt, vt, logit, logft = inp
+    m1 = jnp.maximum(logft + m, logit)
+    fe = jnp.exp(logft + m - m1)
+    ie = jnp.exp(logit - m1)
+    C1 = C * fe[..., None, None] + \
+        ie[..., None, None] * jnp.einsum("bhp,bht->bhpt", kt, vt)
+    n1 = n * fe[..., None] + ie[..., None] * kt
+    num = jnp.einsum("bhp,bhpt->bht", qt, C1) / (hd ** 0.5)
+    den = jnp.abs(jnp.einsum("bhp,bhp->bh", qt, n1)) / (hd ** 0.5)
+    yt = num / jnp.maximum(den, jnp.exp(-m1))[..., None]
+    return (C1, n1, m1), yt
+  t1 = lambda t: jnp.moveaxis(t, 1, 0)
+  (C1, n1, m1), ys = jax.lax.scan(
+      step, (state["C"], state["n"], state["m"]),
+      (t1(q), t1(k), t1(v), t1(logi), t1(logf)))
+  y = jnp.moveaxis(ys, 0, 1).reshape(b, W, di).astype(x.dtype) * \
+      jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["down"], y, policy), {"C": C1, "n": n1, "m": m1}
+
+
 # ---------------------------------------------------------------------------
 # sLSTM
 # ---------------------------------------------------------------------------
@@ -294,3 +340,26 @@ def slstm_decode(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
   y = rms_norm(y, p["norm"], cfg.norm_eps)
   return gemm(p["out"], y, policy), {"h": new[0], "c": new[1], "n": new[2],
                                      "m": new[3]}
+
+
+def slstm_decode_window(p: dict, x: jax.Array, state: dict, cfg: ModelConfig,
+                        cs: Constraint = _id_cs, policy=None
+                        ) -> tuple[jax.Array, dict]:
+  """Batched W-token decode window. x: (b, W, d).
+
+  The non-recurrent W_cat GEMM (and out/norm) batches over the window;
+  the recurrent U_cat application is a nonlinear recurrence in h, so the
+  cell itself stays a `lax.scan` — exactly `slstm_forward`'s split, seeded
+  from the decode carry. Each position matches `slstm_decode` bit-for-bit."""
+  h_ = cfg.num_heads
+  hd = cfg.d_model // h_
+  xg = gemm(p["wx"], x, policy) + p["bias"].astype(x.dtype)
+  def step(carry, xt):
+    new = _slstm_cell(xt, carry, p["rh"], h_, hd, policy)
+    return new, new[0]
+  (h1, c1, n1, m1), hs = jax.lax.scan(
+      step, (state["h"], state["c"], state["n"], state["m"]),
+      xg.transpose(1, 0, 2))
+  y = hs.transpose(1, 0, 2).astype(x.dtype)
+  y = rms_norm(y, p["norm"], cfg.norm_eps)
+  return gemm(p["out"], y, policy), {"h": h1, "c": c1, "n": n1, "m": m1}

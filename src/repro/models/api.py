@@ -118,6 +118,18 @@ class ModelApi:
   # overwritten, never read under the causal mask) and step-invariant
   # leaves (whisper's encoder memory) never change at all.
   decode_state_carry: Optional[Callable] = None
+  # family batched window forward: (params, state, tokens (b, W),
+  # positions (b,), cfg, cs, policy) -> (logits (b, W, v), state after W
+  # tokens), computing the whole window in ONE weight pass (attention
+  # families: one causal pass over the KV cache; carry families: batched
+  # non-recurrent GEMMs + an elementwise state scan). Contract, pinned by
+  # the parity grid in tests/test_spec_window_parity.py: token-for-token
+  # (argmax) equal to W sequential decode_step calls everywhere, and
+  # bit-identical where the backend delivers it (transformer, zamba,
+  # deepspeech are bitwise; xlstm and whisper land within a few ulp —
+  # XLA fuses the two program shapes differently, see the grid test).
+  # Token equality is the invariant speculative acceptance rests on.
+  decode_window_batched: Optional[Callable] = None
 
   @property
   def decodable(self) -> bool:
@@ -126,14 +138,17 @@ class ModelApi:
   def decode_window(self, params, state, tokens, positions,
                     cfg: ModelConfig, cs: Constraint = identity_constraint,
                     policy=None):
-    """Decode a W-token window in one fused scan of `decode_step`.
+    """Decode a W-token window in one batched forward pass.
 
     tokens (b, W) ids — or (b, W, f) frames for deepspeech — fed at
     positions `positions + t`; returns (logits (b, W, v) float32, state
-    after all W steps). The scan body is the family's own decode_step,
-    so each window position computes bit-identically to a lone jitted
-    step — the invariant speculative verification's losslessness rests
-    on (the verify window's argmaxes ARE vanilla greedy's choices).
+    after all W steps). Routes to the family's `decode_window_batched`
+    (one weight read amortized over the window — the paper's §4
+    economics applied to speculative verification), whose per-position
+    argmaxes ARE vanilla greedy's choices (bit-identical logits on the
+    bitwise families, ulp-close on xlstm/whisper — see
+    `decode_window_batched`). Families without a batched forward fall
+    back to the sequential scan.
 
     Rewind contract: the caller owns undoing the W - accepted rejected
     suffix. KV-cache leaves need only the position counter moved back
@@ -141,6 +156,23 @@ class ModelApi:
     pre-window snapshot and replayed through the accepted prefix
     (`decode_state_carry` True) — see serving.engine's speculative path.
     """
+    if not self.decodable:
+      raise ValueError(f"{self.family} has no decode path")
+    if self.decode_window_batched is None:
+      return self.decode_window_sequential(params, state, tokens, positions,
+                                           cfg, cs, policy)
+    logits, state = self.decode_window_batched(params, state, tokens,
+                                               positions, cfg, cs, policy)
+    return logits.astype(jnp.float32), state
+
+  def decode_window_sequential(self, params, state, tokens, positions,
+                               cfg: ModelConfig,
+                               cs: Constraint = identity_constraint,
+                               policy=None):
+    """Reference W-token window: a fused scan of `decode_step`, one
+    position per iteration (k+1 serial weight reads). Kept as the parity
+    oracle for the batched window and as the fallback for families
+    without one; semantics identical to `decode_window`."""
     if not self.decodable:
       raise ValueError(f"{self.family} has no decode path")
     def body(st, t):
@@ -245,14 +277,16 @@ def get_model(cfg: ModelConfig) -> ModelApi:
         init_decode_state=transformer.init_decode_state,
         decode_step=transformer.decode_step,
         decode_state_batch_axes=transformer.decode_state_batch_axes,
-        decode_state_carry=transformer.decode_state_carry)
+        decode_state_carry=transformer.decode_state_carry,
+        decode_window_batched=transformer.decode_window)
   if fam == "zamba":
     return ModelApi(
         family=fam, init=zamba.init_lm, loss_fn=zamba.loss_fn,
         forward=zamba.forward, init_decode_state=zamba.init_decode_state,
         decode_step=zamba.decode_step,
         decode_state_batch_axes=zamba.decode_state_batch_axes,
-        decode_state_carry=zamba.decode_state_carry)
+        decode_state_carry=zamba.decode_state_carry,
+        decode_window_batched=zamba.decode_window)
   if fam == "xlstm":
     return ModelApi(
         family=fam, init=xlstm_model.init_lm, loss_fn=xlstm_model.loss_fn,
@@ -260,14 +294,16 @@ def get_model(cfg: ModelConfig) -> ModelApi:
         init_decode_state=xlstm_model.init_decode_state,
         decode_step=xlstm_model.decode_step,
         decode_state_batch_axes=xlstm_model.decode_state_batch_axes,
-        decode_state_carry=xlstm_model.decode_state_carry)
+        decode_state_carry=xlstm_model.decode_state_carry,
+        decode_window_batched=xlstm_model.decode_window)
   if fam == "whisper":
     return ModelApi(
         family=fam, init=whisper.init_model, loss_fn=whisper.loss_fn,
         forward=None, init_decode_state=whisper.init_decode_state,
         decode_step=whisper.decode_step, encode=whisper.encode,
         decode_state_batch_axes=whisper.decode_state_batch_axes,
-        decode_state_carry=whisper.decode_state_carry)
+        decode_state_carry=whisper.decode_state_carry,
+        decode_window_batched=whisper.decode_window)
   if fam == "deepspeech":
     return ModelApi(
         family=fam, init=deepspeech.init_model, loss_fn=deepspeech.loss_fn,
@@ -276,5 +312,6 @@ def get_model(cfg: ModelConfig) -> ModelApi:
             deepspeech.init_decode_state(cfg, batch),
         decode_step=deepspeech.api_decode_step,
         decode_state_batch_axes=deepspeech.decode_state_batch_axes,
-        decode_state_carry=deepspeech.decode_state_carry)
+        decode_state_carry=deepspeech.decode_state_carry,
+        decode_window_batched=deepspeech.api_decode_window)
   raise ValueError(f"unknown model family: {fam}")

@@ -166,3 +166,34 @@ def api_decode_step(params: dict, state: dict, feat: jax.Array,
   log_probs, new_state = decode_step(params, state, feat[:, 0], cfg, cs,
                                      policy)
   return log_probs[:, None], new_state
+
+
+def api_decode_window(params: dict, state: dict, feat: jax.Array,
+                      positions: jax.Array, cfg: ModelConfig,
+                      cs: Constraint = _id_cs, policy=None
+                      ) -> tuple[jax.Array, dict]:
+  """Batched window decode: feat (b, W, gru_in) -> (log_probs (b, W, v),
+  state). Per layer the non-recurrent W_{z,r,h} GEMM batches over the
+  window in one weight pass (paper §4's Wx batching, now in the decode
+  path); only the `gru_cell` recurrence scans over positions, seeded from
+  the streaming carry — each frame matches `api_decode_step` bit-for-bit.
+  `positions` is ignored exactly as in the step path."""
+  from repro.layers.gru import gru_cell
+  del positions
+  b, W, _ = feat.shape
+  new_state = {}
+  h = feat
+  for i in range(len(cfg.gru_dims)):
+    p = params["grus"][f"gru{i}"]
+    hidden = cfg.gru_dims[i]
+    xw = gemm(p["nonrec"], h, policy)
+    def step(hc, xwt, p=p, hidden=hidden):
+      h1 = gru_cell(xwt, hc, p["rec"], p["bias"], hidden, policy)
+      return h1, h1
+    hlast, hs = jax.lax.scan(step, state[f"gru{i}"], xw.transpose(1, 0, 2))
+    new_state[f"gru{i}"] = hlast
+    h = hs.transpose(1, 0, 2)
+  h = jax.nn.relu(
+      gemm(params["fc"], h, policy).astype(jnp.float32)).astype(h.dtype)
+  logits = gemm(params["out"], h, policy)
+  return jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1), new_state

@@ -249,3 +249,47 @@ def decode_step(params: dict, state: dict, token: jax.Array,
         use_moe=True, policy=policy)
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
   return lm_logits(params["embedding"], x, policy), new_state
+
+
+def _window_stack(x, stack, cache, positions, cfg: ModelConfig,
+                  cs: Constraint, *, use_moe: bool, policy=None):
+  dec = (mla_lib.mla_decode_window if cfg.mla is not None
+         else attn_lib.attention_decode_window)
+  def body(h, xs):
+    lp, lc = xs
+    lp = cs(lp, "layer_params")
+    a = rms_norm(h, lp["ln1"], cfg.norm_eps)
+    a, new_c = dec(lp["attn"], a, lc, positions, cfg, cs, policy)
+    h = h + a
+    f = rms_norm(h, lp["ln2"], cfg.norm_eps)
+    if use_moe:
+      f, _ = moe_lib.moe_forward(lp["moe"], f, cfg, cs, policy)
+    else:
+      f = swiglu_forward(lp["ffn"], f, cs, policy)
+    return h + f, new_c
+  x, new_cache = jax.lax.scan(body, x, (stack, cache))
+  return x, new_cache
+
+
+def decode_window(params: dict, state: dict, tokens: jax.Array,
+                  positions: jax.Array, cfg: ModelConfig,
+                  cs: Constraint = _id_cs, policy=None
+                  ) -> tuple[jax.Array, dict]:
+  """Batched window decode: tokens (b, W) at positions `positions + t`
+  -> (logits (b, W, v), state after W tokens). One weight pass for the
+  whole window — the attention layers run `attention_decode_window` /
+  `mla_decode_window` and every FFN/MoE/norm is position-independent, so
+  each window row is bit-identical to W sequential `decode_step` calls
+  (the invariant speculative verification's losslessness rests on)."""
+  x = cs(embed(params["embedding"], tokens), "bsd")
+  new_state = dict(state)
+  if "dense_layers" in params:
+    x, new_state["dense"] = _window_stack(
+        x, params["dense_layers"], state["dense"], positions, cfg, cs,
+        use_moe=False, policy=policy)
+  if "moe_layers" in params:
+    x, new_state["moe"] = _window_stack(
+        x, params["moe_layers"], state["moe"], positions, cfg, cs,
+        use_moe=True, policy=policy)
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  return lm_logits(params["embedding"], x, policy), new_state

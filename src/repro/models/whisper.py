@@ -253,3 +253,34 @@ def decode_step(params: dict, state: dict, token: jax.Array,
   x = layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"],
                  cfg.norm_eps)
   return lm_logits(params["embedding"], x, policy), {"kv": kv, "mem": mem}
+
+
+def decode_window(params: dict, state: dict, tokens: jax.Array,
+                  positions: jax.Array, cfg: ModelConfig,
+                  cs: Constraint = _id_cs, policy=None
+                  ) -> tuple[jax.Array, dict]:
+  """Batched window decode: tokens (b, W) -> (logits (b, W, v), state).
+
+  Mirrors `decode_step` with `attention_decode_window` for the causal
+  self-attention; cross-attention over the (step-invariant) encoder
+  memory and the FFN are position-independent, so they just batch. One
+  weight pass for the window, rows bit-identical to W sequential steps."""
+  pos2d = positions[:, None] + jnp.arange(tokens.shape[1])[None, :]
+  x = embed(params["embedding"], tokens)
+  x = x + params["pos_dec"][pos2d].astype(x.dtype)
+  mem = state["mem"]
+  def body(h, xs):
+    lp, lc = xs
+    lp = cs(lp, "layer_params")
+    a = layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
+    a, c1 = attn_lib.attention_decode_window(lp["attn"], a, lc, positions,
+                                             cfg, cs, policy)
+    h = h + a
+    a = layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
+    h = h + _xattn(lp["xattn"], a, mem, cfg, cs, policy)
+    f = layer_norm(h, lp["ln3"]["scale"], lp["ln3"]["bias"], cfg.norm_eps)
+    return h + gelu_ffn_forward(lp["ffn"], f, cs, policy), c1
+  x, kv = jax.lax.scan(body, x, (params["dec_layers"], state["kv"]))
+  x = layer_norm(x, params["dec_ln"]["scale"], params["dec_ln"]["bias"],
+                 cfg.norm_eps)
+  return lm_logits(params["embedding"], x, policy), {"kv": kv, "mem": mem}

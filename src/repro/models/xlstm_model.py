@@ -123,3 +123,35 @@ def decode_step(params: dict, state: dict, token: jax.Array,
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
   return lm_logits(params["embedding"], x, policy), {"mlstm": ms,
                                                      "slstm": ss}
+
+
+def decode_window(params: dict, state: dict, tokens: jax.Array,
+                  positions: jax.Array, cfg: ModelConfig,
+                  cs: Constraint = _id_cs, policy=None
+                  ) -> tuple[jax.Array, dict]:
+  """Batched window decode: tokens (b, W) -> (logits (b, W, v), state).
+
+  Mirrors `decode_step` with `mlstm_decode_window` / `slstm_decode_window`:
+  every non-recurrent GEMM reads its weights once for the whole window,
+  only the O(1) carries scan over positions — rows bit-identical to W
+  sequential steps. `positions` is unused (pure-carry family) but kept for
+  the uniform family signature."""
+  del positions
+  x = cs(embed(params["embedding"], tokens), "bsd")
+  def body(h, xs):
+    lp, ms, ss = xs
+    lp = cs(lp, "layer_params")
+    y, ms1 = xl.mlstm_decode_window(lp["mlstm"],
+                                    rms_norm(h, lp["m_norm"], cfg.norm_eps),
+                                    ms, cfg, cs, policy=policy)
+    h = h + y
+    y, ss1 = xl.slstm_decode_window(lp["slstm"],
+                                    rms_norm(h, lp["s_norm"], cfg.norm_eps),
+                                    ss, cfg, cs, policy)
+    return h + y, (ms1, ss1)
+  x, (ms, ss) = jax.lax.scan(body, x,
+                             (params["pairs"], state["mlstm"],
+                              state["slstm"]))
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  return lm_logits(params["embedding"], x, policy), {"mlstm": ms,
+                                                     "slstm": ss}

@@ -204,3 +204,55 @@ def decode_step(params: dict, state: dict, token: jax.Array,
     new_state["tail_ssm"] = tail_ssm
   x = rms_norm(x, params["final_norm"], cfg.norm_eps)
   return lm_logits(params["embedding"], x, policy), new_state
+
+
+def decode_window(params: dict, state: dict, tokens: jax.Array,
+                  positions: jax.Array, cfg: ModelConfig,
+                  cs: Constraint = _id_cs, policy=None
+                  ) -> tuple[jax.Array, dict]:
+  """Batched window decode: tokens (b, W) -> (logits (b, W, v), state).
+
+  Mirrors `decode_step` with the window variants: the shared attention
+  block runs `attention_decode_window` (one causal pass over the KV
+  cache), each Mamba2 block runs `mamba2_decode_window` (batched GEMMs,
+  elementwise state scan) — one weight pass for the whole window, rows
+  bit-identical to W sequential steps."""
+  x = cs(embed(params["embedding"], tokens), "bsd")
+  new_state = dict(state)
+
+  def group_body(h, xs):
+    gstack, g_ssm, g_kv = xs
+    a = rms_norm(h, params["shared_attn"]["ln1"], cfg.norm_eps)
+    a, kv1 = attn_lib.attention_decode_window(
+        params["shared_attn"]["attn"], a, g_kv, positions, cfg, cs, policy)
+    h = h + a
+    f = rms_norm(h, params["shared_attn"]["ln2"], cfg.norm_eps)
+    h = h + swiglu_forward(params["shared_attn"]["ffn"], f, cs, policy)
+    def mamba_body(hh, ys):
+      lp, ls = ys
+      lp = cs(lp, "layer_params")
+      y, s1 = m2.mamba2_decode_window(
+          lp, rms_norm(hh, lp["norm_in"], cfg.norm_eps), ls, cfg, cs,
+          policy=policy)
+      return hh + y, s1
+    h, ssm1 = jax.lax.scan(mamba_body, h, (gstack, g_ssm))
+    return h, (ssm1, kv1)
+
+  x, (main_ssm, shared_kv) = jax.lax.scan(
+      group_body, x, (params["main"], state["main_ssm"],
+                      state["shared_kv"]))
+  new_state["main_ssm"] = main_ssm
+  new_state["shared_kv"] = shared_kv
+  if "tail" in params:
+    def mamba_body(hh, ys):
+      lp, ls = ys
+      lp = cs(lp, "layer_params")
+      y, s1 = m2.mamba2_decode_window(
+          lp, rms_norm(hh, lp["norm_in"], cfg.norm_eps), ls, cfg, cs,
+          policy=policy)
+      return hh + y, s1
+    x, tail_ssm = jax.lax.scan(mamba_body, x,
+                               (params["tail"], state["tail_ssm"]))
+    new_state["tail_ssm"] = tail_ssm
+  x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+  return lm_logits(params["embedding"], x, policy), new_state

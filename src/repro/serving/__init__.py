@@ -4,9 +4,11 @@ speech."""
 from repro.serving.engine import (FinishedRequest, GenerationResult,
                                   LMEngine, Request, StreamingSpeechServer)
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.speculative import (accept_longest_prefix,
-                                       make_draft_params)
+from repro.serving.speculative import (RankController,
+                                       accept_longest_prefix,
+                                       accept_sampled, make_draft_params)
 
 __all__ = ["FinishedRequest", "GenerationResult", "LMEngine",
-           "PrefixCache", "Request", "StreamingSpeechServer",
-           "accept_longest_prefix", "make_draft_params"]
+           "PrefixCache", "RankController", "Request",
+           "StreamingSpeechServer", "accept_longest_prefix",
+           "accept_sampled", "make_draft_params"]

@@ -25,16 +25,26 @@ Speculative decoding (`speculate=k`): the engine runs a second, low-rank
 model — the stage-2 truncated-SVD factorization of the *same* params
 (serving.speculative.make_draft_params, no extra training) — against its
 own decode state. Each iteration the draft proposes k tokens
-autoregressively, the target verifies all of them in one fused
-`ModelApi.decode_window`, and `accept_longest_prefix` commits the
-longest agreeing prefix plus one bonus token (1..k+1 tokens per
-iteration instead of exactly 1). Greedy acceptance makes this LOSSLESS:
-speculative greedy is token-for-token vanilla greedy. Rejected suffixes
-rewind both models' states with per-family semantics
-(ModelApi.decode_state_carry): attention KV rows rewind by moving the
-position counter (rows past it are dead until overwritten); SSM /
-recurrent carries restore the pre-draft snapshot and replay the accepted
-prefix through the masked window program prefill already uses.
+autoregressively and the target verifies all of them in one fused
+`ModelApi.decode_window` — per family a true batched window forward (one
+causal attention pass over the KV cache, or batched GEMMs with only the
+O(1) recurrent carries scanning), so verification reads the weights once
+for the whole window instead of k+1 times. At temperature 0,
+`accept_longest_prefix` commits the longest agreeing prefix plus one
+bonus token (1..k+1 tokens per iteration instead of exactly 1) and
+greedy acceptance makes this LOSSLESS: speculative greedy is
+token-for-token vanilla greedy. At temperature > 0, `accept_sampled`
+runs standard speculative rejection sampling (accept each draft with
+prob min(1, p/q), resample the first rejection from the residual), which
+keeps every emitted token distributed exactly as vanilla sampling from
+the target. Rejected suffixes rewind both models' states with per-family
+semantics (ModelApi.decode_state_carry): attention KV rows rewind by
+moving the position counter (rows past it are dead until overwritten);
+SSM / recurrent carries restore the pre-draft snapshot and replay the
+accepted prefix through the masked window program prefill already uses.
+An optional `rank_controller` (serving.speculative.RankController) walks
+the draft rank online against a target accept-rate band, rebuilding the
+draft params in place — the target's verify program never re-jits.
 
 Prefix caching (`prefix_cache=PrefixCache(...)`): admission consults a
 radix-trie cache of decode-state snapshots (serving.prefix_cache) keyed
@@ -81,8 +91,10 @@ from repro.layers.common import ModelConfig
 from repro.models import deepspeech
 from repro.models.api import cast_kv_cache, get_model
 from repro.serving.prefix_cache import PrefixCache
-from repro.serving.speculative import (accept_longest_prefix,
-                                       make_draft_params, merge_rewind)
+from repro.serving.speculative import (RankController,
+                                       accept_longest_prefix,
+                                       accept_sampled, make_draft_params,
+                                       merge_rewind)
 
 _INHERIT = object()   # submit(eos_id=...) sentinel: use the engine's eos_id
 
@@ -197,6 +209,17 @@ def _bcast_mask(mask: jax.Array, ndim: int, axis: int) -> jax.Array:
   return mask.reshape(shape)
 
 
+def _host_probs(logits, temperature: float) -> np.ndarray:
+  """softmax(logits / temperature) on the host in float64 — the
+  acceptance-side view of the distribution `_sample`'s categorical draws
+  from (float32 logits over temperature)."""
+  x = np.asarray(logits, np.float64) / temperature
+  x -= x.max(axis=-1, keepdims=True)
+  np.exp(x, out=x)
+  x /= x.sum(axis=-1, keepdims=True)
+  return x
+
+
 class LMEngine:
 
   def __init__(self, model_cfg: ModelConfig, params: Any, *,
@@ -204,6 +227,7 @@ class LMEngine:
                cache_dtype=None, rng=None, kernel_policy=None,
                eos_id: Optional[int] = None, speculate: int = 0,
                draft_params: Any = None, draft_rank: Optional[int] = None,
+               rank_controller: Optional[RankController] = None,
                prefix_cache: Optional[PrefixCache] = None,
                publish_on_retire: bool = False):
     self.cfg = model_cfg
@@ -247,6 +271,24 @@ class LMEngine:
     else:
       self.draft_params = None
       self.draft_state = None
+
+    # the (optional) online rank controller: walks draft_rank against an
+    # accept-rate band, rebuilding the draft in place. Only draft-side
+    # programs retrace for the new factor shapes; the target's verify
+    # window never re-jits (same params, same signature).
+    if rank_controller is not None:
+      if not self.speculate:
+        raise ValueError("rank_controller requires speculate > 0")
+      if draft_rank is None:
+        raise ValueError(
+            "rank_controller needs a starting draft_rank to walk from "
+            "(the explained-variance draft has no single rank)")
+    self.rank_controller = rank_controller
+    self.draft_rank = draft_rank
+    self.rank_history: list = []   # (decode_steps, old_rank, new_rank)
+    self._ctrl_step0 = 0
+    self._ctrl_drafted0 = 0
+    self._ctrl_accepted0 = 0
 
     # the (optional, shareable) prefix cache: admission splices hits,
     # publishes full prompts, and — opted in — retired prefixes too
@@ -376,6 +418,9 @@ class LMEngine:
     self.busy_slot_steps = 0
     self.drafted_tokens = 0
     self.accepted_tokens = 0
+    self._ctrl_step0 = 0
+    self._ctrl_drafted0 = 0
+    self._ctrl_accepted0 = 0
     self._prefill_calls = {}
     self._pending_publish = []
     # the prefix cache itself is NOT cleared: it may be shared across
@@ -394,10 +439,14 @@ class LMEngine:
     return sum(s.active for s in self._slots)
 
   @property
-  def accept_rate(self) -> float:
-    """Accepted draft tokens / drafted tokens since init or reset()."""
+  def accept_rate(self) -> Optional[float]:
+    """Accepted draft tokens / drafted tokens since init or reset(), or
+    None when nothing has been drafted yet — "no data" and "every draft
+    rejected" are different answers, and callers (the serve driver, the
+    rank controller, `GenerationResult.accept_rate`) all read None as
+    the former. One semantics across every accept-rate surface."""
     return (self.accepted_tokens / self.drafted_tokens
-            if self.drafted_tokens else 0.0)
+            if self.drafted_tokens else None)
 
   @property
   def occupancy(self) -> float:
@@ -453,16 +502,22 @@ class LMEngine:
     # clamped to 0) and the next admit splices a fully fresh prefilled
     # state over every row of the slot
 
-  def _flush_retire_publish(self, *, valid: bool = True) -> None:
-    """Publish (or drop) the prefixes queued by `_retire`. Callers pass
-    `valid=False` when retired slots' carries are not the committed
-    values (the speculative full-accept branch skips the masked replay,
-    so partially-accepted retired slots hold post-window garbage)."""
-    if valid:
-      for slot, key, fed in self._pending_publish:
-        snap = self.api.slot_snapshot(self.cfg, self.state, slot, fed)
-        # retire publishes target-only: the draft re-prefills on a hit
-        self._cache.insert(key, (snap, None))
+  def _flush_retire_publish(self, *, invalid_slots=()) -> None:
+    """Publish the prefixes queued by `_retire`, dropping only the slots
+    named in `invalid_slots`. Validity is PER SLOT: the speculative
+    full-accept fast path skips the masked replay, which leaves a
+    partially-accepted retired slot's carries at post-window values (not
+    the committed prefix) — those publishes must drop — while a slot
+    that retired having accepted its whole window holds carries that ARE
+    the committed values (the window state at exactly `fed` tokens), so
+    its publish is good. Vanilla decode and the replay path pass nothing
+    and publish everything."""
+    for slot, key, fed in self._pending_publish:
+      if slot in invalid_slots:
+        continue
+      snap = self.api.slot_snapshot(self.cfg, self.state, slot, fed)
+      # retire publishes target-only: the draft re-prefills on a hit
+      self._cache.insert(key, (snap, None))
     self._pending_publish.clear()
 
   def _record_token(self, slot: int, tok: int, pos: int) -> bool:
@@ -627,19 +682,25 @@ class LMEngine:
     # vanilla path: the stepped state is final — retired prefixes publish
     self._flush_retire_publish()
 
-  def _decode_all_speculative(self) -> None:
+  def _decode_all_speculative(self, temperature: float) -> None:
     """One speculative iteration for every slot: draft k, verify k+1 in
     one fused window, commit the accepted prefix + bonus, rewind the
-    rejected suffix. Greedy-only (run() guards temperature).
+    rejected suffix. Temperature 0 accepts greedily (lossless:
+    token-for-token vanilla greedy); temperature > 0 rejection-samples
+    against the draft distribution (accept_sampled — the emitted tokens
+    are distributed exactly as vanilla sampling from the target).
 
     Window layout per slot: inputs [t0, d_1..d_k] fed at positions
-    p..p+k (t0 = the committed-but-unfed token) produce target argmaxes
-    g_1..g_{k+1}; after accepting `a` drafts the slot commits d_1..d_a
-    plus the bonus g_{a+1} and its position moves to p+a+1. Writes past
-    max_len fall off the cache (JAX scatter drops out-of-bounds updates)
-    and the commit loop retires the slot at the boundary first, so the
-    hard max_len contract survives speculation."""
+    p..p+k (t0 = the committed-but-unfed token) produce target
+    distributions p_1..p_{k+1}; after accepting `a` drafts the slot
+    commits d_1..d_a plus one more token (greedy: the target argmax
+    g_{a+1}; sampled: the residual resample or the bonus draw) and its
+    position moves to p+a+1. Writes past max_len fall off the cache
+    (JAX scatter drops out-of-bounds updates) and the commit loop
+    retires the slot at the boundary first, so the hard max_len
+    contract survives speculation."""
     k = self.speculate
+    sampled = temperature > 0.0
     active_np = self._active_mask()
     pos_np = np.asarray(self.positions)
     active = jnp.asarray(active_np)
@@ -650,14 +711,17 @@ class LMEngine:
       draft_snap = self.draft_state    # pre-draft carry snapshot (refs)
     cur = jnp.asarray(self._next_tokens())
     cols = [cur]
+    draft_lgs = []          # sampled path: q_j, the draft distributions
     for j in range(k):
       # step 0 reads the pre-draft snapshot (must survive — no
       # donation); later steps consume disposable intermediates
       step_fn = self._draft_step0 if j == 0 else self._step
       lg, self.draft_state = step_fn(self.draft_params, self.draft_state,
                                      cur, pos0 + j)
-      cur = self._sample(lg, 0.0)
+      cur = self._sample(lg, temperature)
       cols.append(cur)
+      if sampled:
+        draft_lgs.append(lg[:, -1:])
     if not self._has_carry:
       # pure-KV families: one extra draft step consumes d_k so a fully
       # accepted window leaves the draft cache complete through p+k
@@ -671,10 +735,23 @@ class LMEngine:
       snap = self.state                # pre-window carry snapshot (refs)
     logits_w, self.state = self._window(self.params, self.state, window,
                                         pos0)
-    target = np.asarray(jnp.argmax(logits_w, axis=-1), np.int32)
     window_np = np.asarray(window)
-    accept, out_toks, out_len = accept_longest_prefix(window_np[:, 1:],
-                                                      target)
+    if sampled:
+      # rejection sampling needs the exact distributions both models
+      # sample from: softmax of the float32 logits at the temperature
+      q = _host_probs(jnp.concatenate(draft_lgs, axis=1), temperature)
+      p = _host_probs(logits_w, temperature)
+      if not active_np.all():
+        # inactive slots step with garbage state rows; their (discarded)
+        # acceptance math still must not see non-finite probabilities
+        q[~active_np] = 1.0 / q.shape[-1]
+        p[~active_np] = 1.0 / p.shape[-1]
+      accept, out_toks, out_len = accept_sampled(window_np[:, 1:], q, p,
+                                                 self._host_rng())
+    else:
+      target = np.asarray(jnp.argmax(logits_w, axis=-1), np.int32)
+      accept, out_toks, out_len = accept_longest_prefix(window_np[:, 1:],
+                                                        target)
     self.decode_steps += 1
     self.busy_slot_steps += int(active_np.sum())
 
@@ -730,33 +807,63 @@ class LMEngine:
         # up with a single step instead of a (k+1)-position replay
         _, self.draft_state = self._step(self.draft_params,
                                          self.draft_state, cur, pos0 + k)
-    # retired prefixes: carries are committed values only if this family
-    # has none (KV rows [0, fed) are always exact) or the masked replay
-    # above re-advanced every row to its own commit count — the full-
-    # accept fast path leaves partially-accepted retired slots with
-    # post-window carry garbage, so their publishes are dropped
-    self._flush_retire_publish(valid=not self._has_carry or replayed)
+    # retired prefixes: a slot's carries are the committed values if this
+    # family has none (KV rows [0, fed) are always exact), if the masked
+    # replay above re-advanced every row to its own commit count, or if
+    # the slot accepted its WHOLE window (post-window carries == state at
+    # exactly `fed` tokens). Only partially-accepted retired slots under
+    # the full-accept fast path hold post-window garbage — drop exactly
+    # those, per slot, instead of the whole batch's publishes.
+    invalid = ()
+    if self._has_carry and not replayed:
+      invalid = {s for (s, _, _) in self._pending_publish
+                 if int(commit[s]) != k + 1}
+    self._flush_retire_publish(invalid_slots=invalid)
+    self._maybe_adapt_rank()
 
-  def _check_greedy_only(self, temperature: float) -> None:
-    if temperature > 0.0 and self.speculate:
-      raise NotImplementedError(
-          "speculative decoding is greedy-only: temperature > 0 needs "
-          "rejection sampling against the draft distribution, which is "
-          "not implemented — decode with temperature=0.0 or speculate=0")
+  def _host_rng(self) -> np.random.Generator:
+    """One host-side RNG per speculative acceptance round, forked from
+    the engine's JAX key chain — run(rng=...) reproduces the rejection
+    draws exactly like it reproduces the categorical samples."""
+    self.rng, k = jax.random.split(self.rng)
+    seed = np.asarray(jax.random.randint(k, (2,), 0, np.iinfo(np.int32).max))
+    return np.random.default_rng(seed.tolist())
+
+  def _maybe_adapt_rank(self) -> None:
+    """Rank-controller tick: every `interval` engine iterations, measure
+    the window's accept rate and apply the controller's proposal by
+    rebuilding the draft params at the new rank. The draft's decode
+    state carries over (factoring weights never changes state shapes) —
+    stale draft-side caches cost accept rate for a few iterations, never
+    correctness (the target verifies everything). Draft-side programs
+    retrace for the new factor shapes; the verify window does not."""
+    rc = self.rank_controller
+    if rc is None or self.decode_steps - self._ctrl_step0 < rc.interval:
+      return
+    d = self.drafted_tokens - self._ctrl_drafted0
+    a = self.accepted_tokens - self._ctrl_accepted0
+    new = rc.propose(self.draft_rank, a / d if d else None)
+    if new != self.draft_rank:
+      self.rank_history.append((self.decode_steps, self.draft_rank, new))
+      self.draft_rank = new
+      self.draft_params = make_draft_params(self.params, rank=new)
+    self._ctrl_step0 = self.decode_steps
+    self._ctrl_drafted0 = self.drafted_tokens
+    self._ctrl_accepted0 = self.accepted_tokens
 
   def run(self, *, temperature: float = 0.0, rng=None) -> list:
     """Drain the queue: admit, decode, retire, refill until idle. Returns
     the requests finished since the last call, in submission order.
     `rng` seeds sampled (temperature > 0) decoding for this call — pass
-    the same key to reproduce a run exactly."""
-    self._check_greedy_only(temperature)
+    the same key to reproduce a run exactly (speculative rejection
+    sampling forks its host RNG from the same chain)."""
     if rng is not None:
       self.rng = rng
     while self._queue or self.num_active:
       self._admit_from_queue(temperature)
       if self.num_active:
         if self.speculate:
-          self._decode_all_speculative()
+          self._decode_all_speculative(temperature)
         else:
           self._decode_all(temperature)
     out = [self._finished[uid] for uid in sorted(self._finished)]
@@ -796,9 +903,6 @@ class LMEngine:
     semantics). Rows retired early at the max_len boundary come back
     shorter; see `lengths`. Accepts more rows than slots — extras queue.
     A speculative engine reports the measured accept rate of the call."""
-    # validate BEFORE enqueueing: raising from run() after the submits
-    # would leave stale requests polluting the caller's next call
-    self._check_greedy_only(temperature)
     prompts = np.asarray(prompts)
     drafted0, accepted0 = self.drafted_tokens, self.accepted_tokens
     uids = [self.submit(row, max_new_tokens=steps, eos_id=None)

@@ -16,8 +16,16 @@ This module holds the pure, engine-independent pieces:
   make_draft_params      — params -> low-rank draft params (same tree,
                            matching GEMM leaves factored at the draft
                            rank; everything else shared by reference)
-  accept_longest_prefix  — the acceptance rule: longest agreeing draft
-                           prefix + exactly one bonus token per slot
+  accept_longest_prefix  — the greedy acceptance rule: longest agreeing
+                           draft prefix + exactly one bonus token per slot
+  accept_sampled         — the temperature > 0 acceptance rule: standard
+                           speculative rejection sampling (accept d_j
+                           with prob min(1, p/q), residual resample on
+                           reject) — the emitted tokens are distributed
+                           exactly as vanilla sampling from the target
+  RankController         — online draft-rank walk against a target
+                           accept-rate band (the engine rebuilds the
+                           draft via make_draft_params on a change)
   merge_rewind           — KV leaves from the post-window state, carry
                            leaves from the pre-draft snapshot (the
                            per-family rewind split, see
@@ -28,6 +36,7 @@ accepted prefix) lives in `serving.engine.LMEngine`.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Optional
 
 import jax
@@ -37,7 +46,8 @@ from repro.core.compress import FactorizationPlan, to_stage2
 from repro.core.factored import iter_factored_leaves
 from repro.core.svd import TruncationSpec
 
-__all__ = ["accept_longest_prefix", "make_draft_params", "merge_rewind"]
+__all__ = ["RankController", "accept_longest_prefix", "accept_sampled",
+           "make_draft_params", "merge_rewind"]
 
 
 def make_draft_params(params: Any, *, rank: Optional[int] = None,
@@ -106,6 +116,127 @@ def accept_longest_prefix(draft_toks, target_argmax
     out[:, :k] = np.where(keep, draft, 0)
   out[rows, accept] = tgt[rows, accept]
   return accept.astype(np.int64), out, (accept + 1).astype(np.int64)
+
+
+def accept_sampled(draft_toks, draft_probs, target_probs,
+                   rng: np.random.Generator
+                   ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+  """Speculative rejection sampling (Leviathan et al. 2022; Chen et al.
+  2023) — the temperature > 0 counterpart of `accept_longest_prefix`.
+
+  draft_toks (b, k): draft proposals d_1..d_k, each sampled from q_j.
+  draft_probs (b, k, v): q_j — the draft distribution each d_j was drawn
+    from (softmax of the draft logits at the serving temperature).
+  target_probs (b, k+1, v): p_j — the target distribution at every
+    window position (position k+1 is the bonus distribution).
+
+  Per slot, walking j = 1..k: accept d_j with probability
+  min(1, p_j(d_j) / q_j(d_j)); on the first rejection draw the
+  replacement from the residual max(0, p_j - q_j) (renormalized) and
+  stop. If every draft survives, draw one bonus token from p_{k+1}.
+
+  Returns (accept_len (b,), tokens (b, k+1), out_len (b,)) — the exact
+  contract of `accept_longest_prefix`: accept_len in [0, k] counts
+  surviving drafts, tokens[i, :out_len[i]] is the accepted prefix plus
+  exactly one sampled token (residual or bonus), out_len = accept_len+1.
+
+  The marginal distribution of every emitted token is exactly p_j —
+  vanilla sampling from the target — for ANY draft q (the classic
+  rejection-sampling identity q(d)·min(1, p/q) + P(reject)·residual = p),
+  so speculation at temperature > 0 changes throughput only, never the
+  sampled distribution. Pure numpy + host RNG; the caller owns seeding.
+  """
+  draft = np.asarray(draft_toks)
+  q = np.asarray(draft_probs, np.float64)
+  p = np.asarray(target_probs, np.float64)
+  if draft.ndim != 2:
+    raise ValueError(f"draft (b, k) required, got {draft.shape}")
+  b, k = draft.shape
+  if q.shape[:2] != (b, k) or p.shape[:2] != (b, k + 1):
+    raise ValueError(
+        f"draft_probs (b, k, v) and target_probs (b, k+1, v) required, "
+        f"got {q.shape} and {p.shape}")
+  v = p.shape[-1]
+  accept = np.zeros((b,), np.int64)
+  out = np.zeros((b, k + 1), np.int32)
+  for i in range(b):
+    a = k
+    extra = None
+    for j in range(k):
+      d = int(draft[i, j])
+      # u*q < p <=> u < p/q without the 0/0; p >= q always accepts
+      if rng.uniform() * q[i, j, d] < p[i, j, d]:
+        out[i, j] = d
+        continue
+      res = np.maximum(p[i, j] - q[i, j], 0.0)
+      z = res.sum()
+      # z == 0 means p <= q everywhere, so p == q (both sum to 1) and
+      # the rejection had probability 0 — numerically, fall back to p
+      pr = res / z if z > 0.0 else p[i, j] / p[i, j].sum()
+      a, extra = j, int(rng.choice(v, p=pr))
+      break
+    if extra is None:                       # full accept: bonus from p_{k+1}
+      extra = int(rng.choice(v, p=p[i, k] / p[i, k].sum()))
+    accept[i] = a
+    out[i, a] = extra
+    out[i, a + 1:] = 0
+  return accept, out, (accept + 1).astype(np.int64)
+
+
+@dataclasses.dataclass
+class RankController:
+  """Online draft-rank controller: walk the draft's truncated-SVD rank so
+  the measured accept rate sits inside a target band.
+
+  The trade it balances: a higher rank makes the draft agree with the
+  target more often (higher accept rate, more tokens per verify window)
+  but costs more per draft step; a lower rank drafts cheaper but gets
+  rejected more. The controller watches the accept rate over windows of
+  `interval` engine iterations and nudges the rank by `step`:
+
+    rate < band[0]  ->  rank + step   (draft too weak — buy agreement)
+    rate > band[1]  ->  rank - step   (draft too strong — shed FLOPs)
+
+  clamped to [min_rank, max_rank]. The engine applies a change by
+  rebuilding the draft through `make_draft_params(params, rank=...)` —
+  draft-SIDE programs retrace for the new factor shapes, but the target's
+  verify window is untouched (same params, same program, no re-jit), and
+  the draft's decode state carries over unchanged (factoring weights
+  never changes state shapes), so a swap costs accept rate transiently
+  and correctness nothing. Pure decision logic; the engine owns both the
+  measurement and the rebuild.
+  """
+  band: tuple = (0.5, 0.85)
+  step: int = 16
+  min_rank: int = 8
+  max_rank: Optional[int] = None
+  interval: int = 8       # engine iterations per measurement window
+
+  def __post_init__(self):
+    lo, hi = self.band
+    if not (0.0 <= lo < hi <= 1.0):
+      raise ValueError(f"band must satisfy 0 <= lo < hi <= 1, got "
+                       f"{self.band}")
+    if self.step < 1 or self.min_rank < 1 or self.interval < 1:
+      raise ValueError("step, min_rank and interval must be >= 1")
+    if self.max_rank is not None and self.max_rank < self.min_rank:
+      raise ValueError(f"max_rank {self.max_rank} < min_rank "
+                       f"{self.min_rank}")
+
+  def propose(self, rank: int, accept_rate: Optional[float]) -> int:
+    """Next draft rank given the current rank and the accept rate
+    measured over the last window (None = nothing drafted: hold)."""
+    if accept_rate is None:
+      return rank
+    lo, hi = self.band
+    if accept_rate < lo:
+      rank = rank + self.step
+    elif accept_rate > hi:
+      rank = rank - self.step
+    rank = max(self.min_rank, rank)
+    if self.max_rank is not None:
+      rank = min(self.max_rank, rank)
+    return rank
 
 
 def merge_rewind(window_state: Any, snapshot: Any, carry: Any) -> Any:

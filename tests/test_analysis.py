@@ -173,6 +173,19 @@ def test_prefix_splice_check_green():
   assert sorted(stats["prefill_buckets"]) == [(1, 4), (1, 8)]
 
 
+def test_spec_window_check_green():
+  findings, infos = lifecycle.check_spec_window_stability(["qwen3-4b"],
+                                                          ["jnp"])
+  assert findings == [], findings
+  (info,) = infos
+  stats = info["compile_stats"]
+  if stats["window"] < 0:
+    pytest.skip("runtime does not expose jit cache sizes")
+  # one verify program across greedy + sampled cycles AND a rank walk
+  assert stats["window"] == 1
+  assert info["rank_walks"] >= 1
+
+
 def test_sharding_coverage_flags_known_debt():
   rep = report.AuditReport()
   analysis._sharding_findings(["qwen3-4b"], rep)

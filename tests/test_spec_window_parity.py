@@ -1,0 +1,348 @@
+"""The speculative-path correctness sweep for the batched decode_window.
+
+Three pillars:
+
+  1. The parity grid — batched `decode_window` vs the sequential
+     `decode_window_sequential` oracle across every decodable family x
+     kernel policy (jnp / pallas) x storage (float / PTQ int8).
+     Contract: token-for-token argmax equality EVERYWHERE (the invariant
+     speculative acceptance rests on), plus bitwise equality where the
+     backend delivers it. transformer (qwen3 GQA + deepseek MLA), zamba
+     and deepspeech are bit-identical; xlstm and whisper run the same
+     arithmetic but XLA's CPU fusion contexts differ between the two
+     program shapes, leaving their accumulators a few ulp apart
+     (~2e-6 relative for xlstm, ~2e-7 for whisper) — proven by
+     bisection to appear only in the fully composed program, not in any
+     isolated layer, so the pinned contract there is argmax + tight
+     allclose.
+
+  2. Rejection sampling (`accept_sampled`) distribution parity — a
+     hypothesis-driven chi-square test that the emitted-token marginal
+     matches vanilla sampling from the target exactly, for arbitrary
+     draft/target distributions (tiny vocab, deterministic seeds).
+
+  3. Sampled-path rewind — a temperature > 0 speculative engine's
+     committed state is the never-drafted state: the prefix published at
+     a full-accept retirement splices into a follow-up turn that decodes
+     token-for-token like a cold vanilla engine (also the regression
+     test for per-slot publish validity: a partial-accept retirement
+     under the full-accept fast path must still DROP its publish).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.kernels import dispatch
+from repro.models.api import get_model
+from repro.serving import LMEngine, PrefixCache
+from repro.serving.speculative import accept_sampled
+
+# b * W = 8 <= 16: the fused window GEMMs stay inside decode_matvec's
+# row contract under the pallas policy (dispatch.decode_policy(window=))
+B, W = 2, 4
+
+# the locked per-family contract: which archs are bit-identical in float
+# storage. Token (argmax) parity holds EVERYWHERE; the bitwise set is
+# empirical — where XLA happens to fuse the two program shapes the same.
+ARCHS = {
+    "qwen3-4b": True,
+    "deepseek-v2-lite": True,
+    "zamba2-7b": True,
+    "xlstm-350m": False,
+    "whisper-small": False,
+    "deepspeech2-wsj": True,
+}
+# PTQ shifts the fusion landscape: the int8 w8a8 oracle makes whisper
+# fully bitwise and deepspeech's logits bitwise (its GRU carries drift
+# ~1e-8); xlstm stays ulp-level. (logits_bitwise, state_bitwise) per arch:
+PTQ_ARCHS = {
+    "qwen3-4b": (True, True),
+    "deepseek-v2-lite": (True, True),
+    "zamba2-7b": (True, True),
+    "xlstm-350m": (False, False),
+    "whisper-small": (True, True),
+    "deepspeech2-wsj": (True, False),
+}
+
+
+def _build(arch, quantized):
+  cfg = configs.get_smoke(arch).with_(dtype=jnp.float32, vocab_size=48)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  if quantized:
+    from repro.quant import quantize_params
+    params = quantize_params(params)
+  return cfg, api, params
+
+
+def _window_inputs(cfg, api, rng):
+  """(state, tokens-or-frames, positions) for one (B, W) window; frames
+  for deepspeech (its decode surface streams post-frontend features)."""
+  state = api.init_decode_state(cfg, B, 16)
+  if cfg.family == "deepspeech":
+    gru_in = (((cfg.feat_dim + 1) // 2 + 1) // 2) * cfg.conv_channels
+    toks = jnp.asarray(rng.randn(B, W, gru_in).astype(np.float32) * 0.1)
+  else:
+    toks = jnp.asarray(rng.randint(1, cfg.vocab_size, size=(B, W)),
+                       jnp.int32)
+  return state, toks, jnp.zeros((B,), jnp.int32)
+
+
+def _policy(name):
+  if name == "jnp":
+    return None
+  return dispatch.decode_policy(B, window=W, interpret=True)
+
+
+@pytest.mark.parametrize("policy_name", ["jnp", "pallas"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_window_parity_grid_float(arch, policy_name):
+  _assert_window_parity(arch, policy_name, quantized=False)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("policy_name", ["jnp", "pallas"])
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_window_parity_grid_quantized(arch, policy_name):
+  """PTQ column: int8 storage decodes through the same two window
+  programs — the w8a8 arithmetic is policy-invariant, so the float
+  contract (tokens everywhere, bits on the bitwise archs) carries."""
+  _assert_window_parity(arch, policy_name, quantized=True)
+
+
+def _assert_window_parity(arch, policy_name, *, quantized):
+  if quantized:
+    logits_bitwise, state_bitwise = PTQ_ARCHS[arch]
+  else:
+    logits_bitwise = state_bitwise = ARCHS[arch]
+  cfg, api, params = _build(arch, quantized)
+  policy = _policy(policy_name)
+  state, toks, pos = _window_inputs(cfg, api, np.random.RandomState(3))
+
+  seq_fn = jax.jit(lambda p, s, t, q: api.decode_window_sequential(
+      p, s, t, q, cfg, policy=policy))
+  bat_fn = jax.jit(lambda p, s, t, q: api.decode_window(
+      p, s, t, q, cfg, policy=policy))
+  assert api.decode_window_batched is not None   # the grid tests the
+  lg_seq, st_seq = seq_fn(params, state, toks, pos)  # batched program
+  lg_bat, st_bat = bat_fn(params, state, toks, pos)
+
+  lg_seq, lg_bat = np.asarray(lg_seq), np.asarray(lg_bat)
+  # the invariant acceptance rests on: identical greedy choices
+  np.testing.assert_array_equal(lg_seq.argmax(-1), lg_bat.argmax(-1))
+  if logits_bitwise:
+    np.testing.assert_array_equal(lg_seq, lg_bat)
+  else:
+    np.testing.assert_allclose(lg_seq, lg_bat, rtol=1e-4, atol=1e-4)
+  for a, b in zip(jax.tree.leaves(st_seq), jax.tree.leaves(st_bat)):
+    if state_bitwise:
+      np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    else:
+      np.testing.assert_allclose(np.asarray(a, np.float32),
+                                 np.asarray(b, np.float32),
+                                 rtol=1e-4, atol=1e-4)
+
+
+def test_window_streaming_split_matches_one_shot():
+  """Two chained windows (W then W at positions W..2W-1) equal one 2W
+  window: the batched program composes over its own output state, not
+  just over sequential-step state."""
+  cfg, api, params = _build("qwen3-4b", False)
+  rng = np.random.RandomState(5)
+  state = api.init_decode_state(cfg, B, 16)
+  toks = jnp.asarray(rng.randint(1, cfg.vocab_size, size=(B, 2 * W)),
+                     jnp.int32)
+  pos = jnp.zeros((B,), jnp.int32)
+  win = jax.jit(lambda p, s, t, q: api.decode_window(p, s, t, q, cfg))
+
+  lg_a, st = win(params, state, toks[:, :W], pos)
+  lg_b, st = win(params, st, toks[:, W:], pos + W)
+  lg_full, st_full = win(params, state, toks, pos)
+  np.testing.assert_array_equal(
+      np.concatenate([np.asarray(lg_a), np.asarray(lg_b)], 1),
+      np.asarray(lg_full))
+  for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st_full)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Rejection sampling == vanilla sampling, in distribution. (The
+# hypothesis-drawn generalization lives in test_speculative_properties,
+# gated like the repo's other property modules; this one is deterministic
+# so the distribution identity is always pinned, hypothesis or not.)
+# ---------------------------------------------------------------------------
+
+VOCAB = 5
+# chi-square upper critical value at alpha = 1e-3 for df = VOCAB - 1
+# (seeds are fixed, so this is a pass/fail line, not a flake rate)
+CHI2_CRIT_DF4 = 18.47
+
+
+def _norm(w):
+  w = np.asarray(w, np.float64) + 0.25    # bounded away from 0 so every
+  return w / w.sum()                      # expected cell count is ~N/20+
+
+
+@pytest.mark.parametrize("k,seed", [(1, 0), (2, 1), (3, 2)])
+def test_accept_sampled_first_token_marginal_is_target(k, seed):
+  """The core rejection-sampling identity: whatever the draft proposes
+  and whatever q it proposes from, the FIRST emitted token's marginal is
+  exactly p_1 — q(d)·min(1, p/q) + P(reject)·residual = p. Monte Carlo
+  over n rounds with draft tokens drawn from q on a shared rng,
+  chi-square of the emitted-token counts against n·p_1."""
+  dist_rng = np.random.default_rng(100 + seed)
+  q = np.stack([_norm(dist_rng.random(VOCAB)) for _ in range(k)])[None]
+  p = np.stack([_norm(dist_rng.random(VOCAB))
+                for _ in range(k + 1)])[None]
+
+  rng = np.random.default_rng(seed)
+  n = 2500
+  counts = np.zeros(VOCAB)
+  for _ in range(n):
+    draft = np.array([[rng.choice(VOCAB, p=q[0, j]) for j in range(k)]],
+                     np.int32)
+    _, out, _ = accept_sampled(draft, q, p, rng)
+    counts[out[0, 0]] += 1
+  expected = n * p[0, 0]
+  chi2 = ((counts - expected) ** 2 / expected).sum()
+  assert chi2 < CHI2_CRIT_DF4, (chi2, counts, expected)
+
+
+def test_accept_sampled_contract():
+  """Shape/validation contract mirrors accept_longest_prefix; a draft
+  the target fully agrees with is always accepted (p == q -> the accept
+  probability min(1, p/q) is 1 for every token)."""
+  rng = np.random.default_rng(0)
+  with pytest.raises(ValueError, match="draft"):
+    accept_sampled(np.zeros((3,)), np.zeros((1, 3, 4)),
+                   np.zeros((1, 4, 4)), rng)
+  with pytest.raises(ValueError, match="target_probs"):
+    accept_sampled(np.zeros((1, 3), np.int32), np.zeros((1, 3, 4)),
+                   np.zeros((1, 3, 4)), rng)
+  k, v = 3, 4
+  p = _norm(np.arange(v))[None, None].repeat(k + 1, 1)    # (1, k+1, v)
+  draft = np.array([[rng.choice(v, p=p[0, j]) for j in range(k)]])
+  accept, out, out_len = accept_sampled(draft, p[:, :k], p, rng)
+  assert accept[0] == k and out_len[0] == k + 1
+  np.testing.assert_array_equal(out[0, :k], draft[0])
+
+
+def test_accept_sampled_zero_q_mass_rejects_to_residual():
+  """A draft token with q ≈ 0 but p > 0 accepts with prob p/q clamped
+  to 1... and the reverse (p = 0) always rejects into the residual,
+  which can never re-emit a zero-p token."""
+  k, v = 1, 4
+  q = np.array([[[0.0, 1.0, 0.0, 0.0]]])        # draft always says 1
+  p = np.array([[[0.5, 0.0, 0.5, 0.0]]] * 2).reshape(1, 2, v)
+  rng = np.random.default_rng(1)
+  for _ in range(50):
+    accept, out, out_len = accept_sampled(
+        np.array([[1]], np.int32), q, p, rng)
+    assert accept[0] == 0 and out_len[0] == 1
+    assert out[0, 0] in (0, 2)                  # residual ∝ max(0, p-q)
+
+
+# ---------------------------------------------------------------------------
+# Sampled-path rewind: committed state == never-drafted state.
+# ---------------------------------------------------------------------------
+
+
+def test_sampled_rewind_continues_like_never_drafted():
+  """Temperature > 0 speculative decode on a carry family (zamba: SSM
+  snapshot/replay) with a weak draft (rejections every few windows),
+  then a greedy follow-up turn over prompt+answer: the follow-up must
+  equal a cold vanilla engine token-for-token — the sampled run's
+  rewinds left exactly the never-drafted state behind."""
+  from repro.serving import make_draft_params
+  cfg = configs.get_smoke("zamba2-7b").with_(dtype=jnp.float32,
+                                             vocab_size=48)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  prompt = np.arange(1, 7)
+
+  spec = LMEngine(cfg, params, batch_size=1, max_len=64, speculate=3,
+                  draft_params=make_draft_params(params, rank=8))
+  spec.submit(prompt, max_new_tokens=9)
+  turn1 = spec.run(temperature=0.9, rng=jax.random.PRNGKey(5))[0].tokens
+  assert spec.accept_rate is not None and spec.accept_rate < 1.0
+  follow = np.concatenate([prompt, turn1])
+
+  spec.submit(follow, max_new_tokens=8)
+  got = spec.run()[0].tokens                      # greedy follow-up
+  van = LMEngine(cfg, params, batch_size=1, max_len=64)
+  van.submit(follow, max_new_tokens=8)
+  want = van.run()[0].tokens
+  np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+def test_full_accept_retirement_publishes_prefix(temperature):
+  """Per-slot publish validity, the regression this PR fixes: a slot
+  retiring on its window's LAST token (full accept, commit == k+1) has
+  carries that ARE the committed state, so under publish_on_retire its
+  prefix must publish and the follow-up turn must HIT the cache — the
+  old all-or-nothing flush dropped every carry-family retirement
+  publish whenever the full-accept fast path skipped the replay."""
+  cfg = configs.get_smoke("zamba2-7b").with_(dtype=jnp.float32,
+                                             vocab_size=48)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  prompt = np.arange(1, 7)
+  k = 2
+  # emissions: 1 (prefill) + m windows x (k+1) -> budget 7 retires on a
+  # fully-accepted window's bonus token (the perfect draft agrees always)
+  budget = 1 + 2 * (k + 1)
+
+  cache = PrefixCache(capacity_mb=8)
+  spec = LMEngine(cfg, params, batch_size=1, max_len=64, speculate=k,
+                  draft_params=params, prefix_cache=cache,
+                  publish_on_retire=True)
+  spec.submit(prompt, max_new_tokens=budget)
+  turn1 = spec.run(temperature=temperature,
+                   rng=jax.random.PRNGKey(9))[0].tokens
+  assert spec.accept_rate == 1.0                  # the draft IS the target
+
+  follow = np.concatenate([prompt, turn1])
+  hits0 = cache.stats()["hits"]
+  spec.submit(follow, max_new_tokens=6)
+  got = spec.run()[0].tokens
+  assert cache.stats()["hits"] > hits0            # the retired prefix hit
+
+  van = LMEngine(cfg, params, batch_size=1, max_len=64)
+  van.submit(follow, max_new_tokens=6)
+  np.testing.assert_array_equal(got, van.run()[0].tokens)
+
+
+def test_partial_accept_retirement_drops_publish():
+  """The dual guard: a budget ending MID-window (commit < k+1) retires a
+  slot whose carries sit at post-window values — its publish must drop
+  (no replay ran: the lone slot emptied `live`), and the follow-up turn
+  must stay correct through the cold path."""
+  cfg = configs.get_smoke("zamba2-7b").with_(dtype=jnp.float32,
+                                             vocab_size=48)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  prompt = np.arange(1, 7)
+  k = 2
+  budget = 1 + 2 * (k + 1) + 1      # one token into the third window
+
+  cache = PrefixCache(capacity_mb=8)
+  spec = LMEngine(cfg, params, batch_size=1, max_len=64, speculate=k,
+                  draft_params=params, prefix_cache=cache,
+                  publish_on_retire=True)
+  spec.submit(prompt, max_new_tokens=budget)
+  turn1 = spec.run()[0].tokens
+  # the retirement publish was dropped: no entry covers prompt+answer
+  # (admission's prompt-level entries remain, which is fine — they hold
+  # committed prefill state); a deeper lookup stops at the prompt
+  cached, _ = cache.lookup(np.concatenate([prompt, turn1[:-1]]))
+  assert cached <= prompt.size
+
+  follow = np.concatenate([prompt, turn1])
+  spec.submit(follow, max_new_tokens=6)
+  got = spec.run()[0].tokens
+  van = LMEngine(cfg, params, batch_size=1, max_len=64)
+  van.submit(follow, max_new_tokens=6)
+  np.testing.assert_array_equal(got, van.run()[0].tokens)

@@ -8,11 +8,14 @@ attention family (qwen3: positional overwrite-rewind) and an SSM hybrid
 from near-full (accept -> 1) to pathologically low (accept -> 0), under
 continuous batching with mixed lengths and slot refill.
 
-Plus: the decode_window == sequential-steps bit-exactness the parity
-rests on, the decode_state_carry contract per family, accept-rate
-accounting (the acceptance criterion), retirement boundaries (EOS /
-budget / max_len) inside a speculative window, draft GEMM kernel
-routing, and the greedy-only guard.
+Plus: the decode_window == sequential-steps parity the acceptance rests
+on (bitwise where the backend delivers it, token-for-token everywhere —
+the full grid lives in test_spec_window_parity), the decode_state_carry
+contract per family, accept-rate accounting (the acceptance criterion),
+retirement boundaries (EOS / budget / max_len) inside a speculative
+window, draft GEMM kernel routing, and temperature > 0 end-to-end
+(rejection sampling; distribution parity lives in
+test_spec_window_parity).
 """
 import jax
 import jax.numpy as jnp
@@ -60,11 +63,22 @@ def _assert_parity(ref_uids, ref, got_uids, got):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("arch", ["qwen3-4b", "zamba2-7b", "xlstm-350m"])
-def test_decode_window_matches_sequential_steps(arch):
-  """decode_window's scan body is the family's own decode_step, so every
-  window position must be BIT-identical to a lone jitted step — the
-  invariant greedy verification's losslessness rests on."""
+@pytest.mark.parametrize("arch,bitwise", [("qwen3-4b", True),
+                                          ("zamba2-7b", True),
+                                          ("xlstm-350m", False)])
+def test_decode_window_matches_sequential_steps(arch, bitwise):
+  """The batched decode_window computes what W sequential decode_steps
+  compute — the invariant verification's losslessness rests on.
+
+  For qwen3 (causal attention over the KV cache) and zamba (attention +
+  elementwise SSM scan) the batched program is BIT-identical to the
+  lone steps. xLSTM's batched program is mathematically the same
+  operations, but XLA's CPU fusion contexts differ between the two
+  program shapes, so its mLSTM C/n accumulators land within a few ulp
+  (~1e-6 relative) of the sequential values — there the contract is the
+  one acceptance actually needs, token-for-token argmax equality, plus
+  a tight allclose. The full family x policy grid (and the same split)
+  lives in test_spec_window_parity."""
   cfg, api, params = _params_for(arch, vocab_size=64)
   b, W = 3, 4
   state = api.init_decode_state(cfg, b, 16)
@@ -81,9 +95,19 @@ def test_decode_window_matches_sequential_steps(arch):
   lgw, stw = jax.jit(
       lambda p, s, t, q: api.decode_window(p, s, t, q, cfg))(
           params, state, toks, pos)
-  np.testing.assert_array_equal(np.stack(seq, 1), np.asarray(lgw))
-  for a, b_ in zip(jax.tree.leaves(st), jax.tree.leaves(stw)):
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+  seq = np.stack(seq, 1)
+  lgw = np.asarray(lgw)
+  if bitwise:
+    np.testing.assert_array_equal(seq, lgw)
+    for a, b_ in zip(jax.tree.leaves(st), jax.tree.leaves(stw)):
+      np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+  else:
+    np.testing.assert_array_equal(seq.argmax(-1), lgw.argmax(-1))
+    np.testing.assert_allclose(seq, lgw, rtol=1e-4, atol=1e-4)
+    for a, b_ in zip(jax.tree.leaves(st), jax.tree.leaves(stw)):
+      np.testing.assert_allclose(np.asarray(a, np.float32),
+                                 np.asarray(b_, np.float32),
+                                 rtol=1e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("arch", ["qwen3-4b", "deepseek-v2-lite",
@@ -220,11 +244,14 @@ def test_speculative_max_len_boundary():
 
 def test_generation_result_accept_rate():
   """generate() reports the measured accept rate; near-full-rank drafts
-  clear the > 0.5 acceptance criterion, vanilla engines report None."""
+  clear the > 0.5 acceptance criterion. Both accept-rate surfaces agree
+  that None means "nothing drafted" — a vanilla engine and a freshly
+  built speculative engine report None, never a fake 0.0."""
   cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
   prompts = np.array([[1, 2, 3], [4, 5, 6]])
   spec = LMEngine(cfg, params, batch_size=2, max_len=32, speculate=2,
                   draft_params=make_draft_params(params, rank=SANE_RANK))
+  assert spec.accept_rate is None          # no data yet, not 0.0
   out = spec.generate(prompts, steps=8)
   assert out.accept_rate is not None and out.accept_rate > 0.5
   assert spec.accept_rate == out.accept_rate
@@ -232,7 +259,25 @@ def test_generation_result_accept_rate():
 
   van = LMEngine(cfg, params, batch_size=2, max_len=32)
   assert van.generate(prompts, steps=4).accept_rate is None
-  assert van.accept_rate == 0.0
+  assert van.accept_rate is None
+
+
+def test_accept_accounting_caps_at_commit():
+  """accepted_tokens counts REALIZED acceptance: min(accept, commit) per
+  slot per window — a mid-window retirement (here: token budget 1 with
+  an agreeing draft) must not count drafts the window agreed on but the
+  slot never emitted, so accepted <= emitted tokens always holds."""
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  spec = LMEngine(cfg, params, batch_size=1, max_len=32, speculate=4,
+                  draft_params=make_draft_params(params, rank=SANE_RANK))
+  # prefill emits token 1; the single decode window then emits exactly 1
+  # more (budget 2), even though the near-full-rank draft accepts ~all 4
+  spec.submit(np.array([1, 2, 3]), max_new_tokens=2)
+  out = spec.run()[0]
+  assert len(out.tokens) == 2
+  emitted_in_windows = len(out.tokens) - 1   # first token is prefill's
+  assert spec.drafted_tokens == 4
+  assert spec.accepted_tokens <= emitted_in_windows
 
 
 def test_draft_gemms_route_through_lowrank_kernel():
@@ -250,21 +295,56 @@ def test_draft_gemms_route_through_lowrank_kernel():
   assert "decode_matvec" in regimes     # target window + steps
 
 
-def test_speculative_rejects_temperature():
+def test_speculative_samples_at_temperature():
+  """speculate=k at temperature > 0 runs end-to-end (rejection sampling
+  retired the old greedy-only guard), reports a measured accept rate,
+  and reproduces exactly under the same rng."""
   cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
-  eng = LMEngine(cfg, params, batch_size=1, max_len=16, speculate=2,
+  eng = LMEngine(cfg, params, batch_size=2, max_len=32, speculate=2,
                  draft_params=make_draft_params(params, rank=SANE_RANK))
-  eng.submit(np.array([1, 2]), max_new_tokens=4)
-  with pytest.raises(NotImplementedError, match="greedy-only"):
-    eng.run(temperature=0.5)
-  # generate() validates BEFORE enqueueing: a failed sampled call must
-  # not leave stale copies of its prompts polluting the next run
+  prompts = np.array([[1, 2, 3], [4, 5, 6]])
+  a = eng.generate(prompts, steps=8, temperature=0.8,
+                   rng=jax.random.PRNGKey(11))
+  assert a.accept_rate is not None
+  assert (a.lengths == 8).all()
   eng.reset()
-  with pytest.raises(NotImplementedError, match="greedy-only"):
-    eng.generate(np.array([[1, 2]]), steps=4, temperature=0.5)
-  assert len(eng._queue) == 0
-  got = eng.generate(np.array([[1, 2]]), steps=4)
-  assert got.tokens.shape == (1, 4)      # only the retried request ran
+  b = eng.generate(prompts, steps=8, temperature=0.8,
+                   rng=jax.random.PRNGKey(11))
+  np.testing.assert_array_equal(a.tokens, b.tokens)
+  assert a.accept_rate == b.accept_rate
+
+
+def test_rank_controller_walks_toward_band():
+  """An unreachable accept-rate band keeps raising the rank (clamped at
+  max_rank), rebuilding the draft in place — the verify window program
+  must never re-trace across a rank change."""
+  from repro.serving import RankController
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  rc = RankController(band=(0.99, 1.0), step=32, interval=2, min_rank=8,
+                      max_rank=80)
+  eng = LMEngine(cfg, params, batch_size=2, max_len=64, speculate=2,
+                 draft_rank=16, rank_controller=rc)
+  for _ in range(4):
+    eng.submit(np.arange(1, 10), max_new_tokens=16)
+  eng.run()
+  assert eng.rank_history                     # it adjusted at least once
+  assert eng.draft_rank == 80                 # walked up, hit the clamp
+  ranks = [old for _, old, _ in eng.rank_history] + [eng.draft_rank]
+  assert ranks == sorted(ranks)               # monotone walk upward
+  assert eng.compile_stats()["window"] == 1   # verify never re-jitted
+
+
+def test_rank_controller_construction_guards():
+  from repro.serving import RankController
+  cfg, _, params = _params_for("qwen3-4b", vocab_size=64)
+  with pytest.raises(ValueError, match="speculate"):
+    LMEngine(cfg, params, batch_size=1, max_len=16,
+             rank_controller=RankController())
+  with pytest.raises(ValueError, match="draft_rank"):
+    LMEngine(cfg, params, batch_size=1, max_len=16, speculate=2,
+             rank_controller=RankController())
+  with pytest.raises(ValueError, match="band"):
+    RankController(band=(0.9, 0.5))
 
 
 def test_make_draft_params_requires_a_match():

@@ -4,6 +4,10 @@ mirroring test_quant_properties):
   * accept_longest_prefix against a per-row python oracle — accepted
     prefix + exactly one bonus token, never more than k+1, acceptance
     maximal;
+  * accept_sampled's emitted-token marginal == the target distribution,
+    for ARBITRARY drawn draft/target distributions (chi-square over a
+    Monte Carlo; the deterministic fixed-seed version always runs in
+    test_spec_window_parity);
   * rewind-then-redecode == never-having-drafted — for ARBITRARY accept
     lengths 0..k, a state assembled from post-window KV + pre-window
     carries and re-fed the accepted prefix continues bit-identically to
@@ -20,7 +24,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro import configs
 from repro.models.api import get_model
-from repro.serving.speculative import accept_longest_prefix, merge_rewind
+from repro.serving.speculative import (accept_longest_prefix,
+                                       accept_sampled, merge_rewind)
 
 VOCAB = 32
 
@@ -65,6 +70,44 @@ def test_accept_longest_prefix_matches_oracle(data):
     if accept[i] < k:
       assert draft[i, accept[i]] != target[i, accept[i]]
     assert out[i, accept[i]] == target[i, accept[i]]
+
+
+SAMP_VOCAB = 5
+CHI2_CRIT_DF4 = 18.47     # alpha = 1e-3 (derandomized: fixed line)
+
+
+def _norm(w):
+  w = np.asarray(w, np.float64) + 0.25
+  return w / w.sum()
+
+
+@settings(deadline=None, max_examples=10, derandomize=True)
+@given(st.data())
+def test_accept_sampled_marginal_matches_target(data):
+  """Rejection-sampling identity, property form: for drawn q/p the first
+  emitted token's Monte Carlo marginal is chi-square-consistent with
+  p_1 — speculation at temperature > 0 is vanilla sampling in
+  distribution regardless of the draft."""
+  k = data.draw(st.integers(1, 3), label="k")
+  seed = data.draw(st.integers(0, 2 ** 16), label="seed")
+  weights = data.draw(
+      st.lists(st.lists(st.floats(0.0, 1.0), min_size=SAMP_VOCAB,
+                        max_size=SAMP_VOCAB),
+               min_size=2 * k + 1, max_size=2 * k + 1), label="w")
+  q = np.stack([_norm(w) for w in weights[:k]])[None]
+  p = np.stack([_norm(w) for w in weights[k:]])[None]
+
+  rng = np.random.default_rng(seed)
+  n = 2000
+  counts = np.zeros(SAMP_VOCAB)
+  for _ in range(n):
+    draft = np.array(
+        [[rng.choice(SAMP_VOCAB, p=q[0, j]) for j in range(k)]], np.int32)
+    _, out, _ = accept_sampled(draft, q, p, rng)
+    counts[out[0, 0]] += 1
+  expected = n * p[0, 0]
+  chi2 = ((counts - expected) ** 2 / expected).sum()
+  assert chi2 < CHI2_CRIT_DF4, (chi2, counts, expected)
 
 
 def test_accept_longest_prefix_validates_shapes():
