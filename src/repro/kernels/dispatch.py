@@ -45,6 +45,7 @@ import math
 from typing import Optional
 
 import jax
+import numpy as np
 
 from repro.core.factored import FactoredLinear, matmul_ref
 from repro.kernels import ops
@@ -205,6 +206,8 @@ def _record(name: Optional[str], regime: str) -> int:
 
 
 _OBSERVERS: list = []
+_MOMENT_OBSERVERS: list = []
+_CAL_LAYER: list = []
 
 
 @contextlib.contextmanager
@@ -213,13 +216,55 @@ def observe_gemm_inputs():
   `gemm()` inside the context — the activation-range tap
   `repro.quant.calibrate_activation_ranges` builds on. Eager-only:
   traced activations (inside jit / lax.scan) are skipped, since their
-  values don't exist at trace time."""
+  values don't exist at trace time.
+
+  Under a `calibration_layer(i)` context the key becomes "name@L{i}":
+  scan-stacked (L, m, n) leaves share one logical name across layers,
+  and without the tag their per-layer statistics would silently
+  aggregate (the PR 4 tap's blind spot)."""
   log: dict = {}
   _OBSERVERS.append(log)
   try:
     yield log
   finally:
     _remove_by_identity(_OBSERVERS, log)
+
+
+@contextlib.contextmanager
+def calibration_layer(index: int):
+  """Tag every GEMM observed inside as belonging to scan layer `index`.
+
+  Whisper's encoder layers are vmap-initialized into stacked (L, m, n)
+  leaves that all carry the same logical name; an eager layer-unrolled
+  forward (models.whisper.encode_unrolled) wraps each layer's block in
+  this context so observers key its activations "name@L{index}" instead
+  of collapsing all layers onto one entry. Nesting keeps the innermost
+  index (a layer inside a layer names the leaf it actually feeds)."""
+  _CAL_LAYER.append(int(index))
+  try:
+    yield
+  finally:
+    _CAL_LAYER.pop()
+
+
+@contextlib.contextmanager
+def observe_gemm_moments():
+  """Capture per-GEMM input *second moments* for activation-calibrated
+  low-rank truncation (LiteASR, arXiv 2502.20583): for every eagerly
+  observed GEMM input x (rows flattened to (N, m)) accumulate
+
+      {key: {"xtx": sum_n x_n x_n^T  (m, m) float64,
+             "count": N rows seen, "amax": max |x|}}
+
+  keyed like `observe_gemm_inputs` (including the "@L{i}" layer tag).
+  E[x x^T] = xtx / count is the Gram matrix `core.svd.activation_split`
+  whitens with. Eager-only, like the amax tap."""
+  log: dict = {}
+  _MOMENT_OBSERVERS.append(log)
+  try:
+    yield log
+  finally:
+    _remove_by_identity(_MOMENT_OBSERVERS, log)
 
 
 def clear_jit_caches() -> None:
@@ -232,13 +277,33 @@ def clear_jit_caches() -> None:
   jax.clear_caches()
 
 
-def _observe(name: Optional[str], x: jax.Array) -> None:
-  if not _OBSERVERS or isinstance(x, jax.core.Tracer):
-    return
-  amax = float(jax.numpy.max(jax.numpy.abs(x.astype(jax.numpy.float32))))
+def _obs_key(name: Optional[str]) -> str:
   key = name or "<unnamed>"
+  if _CAL_LAYER:
+    key = f"{key}@L{_CAL_LAYER[-1]}"
+  return key
+
+
+def _observe(name: Optional[str], x: jax.Array) -> None:
+  if (not _OBSERVERS and not _MOMENT_OBSERVERS) \
+      or isinstance(x, jax.core.Tracer):
+    return
+  key = _obs_key(name)
+  amax = float(jax.numpy.max(jax.numpy.abs(x.astype(jax.numpy.float32))))
   for log in _OBSERVERS:
     log[key] = max(log.get(key, 0.0), amax)
+  if _MOMENT_OBSERVERS:
+    rows = np.asarray(x, dtype=np.float64).reshape(-1, x.shape[-1])
+    xtx = rows.T @ rows
+    for log in _MOMENT_OBSERVERS:
+      ent = log.get(key)
+      if ent is None:
+        log[key] = {"xtx": xtx.copy(), "count": rows.shape[0],
+                    "amax": amax}
+      else:
+        ent["xtx"] += xtx
+        ent["count"] += rows.shape[0]
+        ent["amax"] = max(ent["amax"], amax)
 
 
 # ---------------------------------------------------------------------------

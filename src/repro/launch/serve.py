@@ -113,20 +113,34 @@ def main() -> None:
           f"(serving from quantized storage)")
 
   if cfg.family == "deepspeech":
+    # continuous-batching speech fleet: --num-requests utterances of
+    # mixed, deliberately non-stride-multiple lengths share --batch
+    # decode slots; retiring utterances refill from the queue without
+    # re-tracing (server.compile_stats pins frame_step == 1)
     server = StreamingSpeechServer(cfg, params, batch_size=args.batch,
                                    kernel_policy=args.kernels)
+    n_utts = args.num_requests or 2 * args.batch
     dc = SpeechDataConfig(vocab_size=cfg.vocab_size, feat_dim=cfg.feat_dim,
-                          global_batch=args.batch)
-    feats = batch_at(dc, 0)["feats"][:, :32]
+                          global_batch=max(args.batch, 1))
+    rng = np.random.RandomState(0)
+    for i in range(n_utts):
+      batch = np.asarray(batch_at(dc, i)["feats"])
+      row = batch[i % batch.shape[0]]
+      t = int(rng.randint(17, min(64, row.shape[0]) + 1))
+      server.submit(row[:t])                # arbitrary lengths by design
     t0 = time.perf_counter()
-    # chunked streaming: conv context carries across the boundary, so
-    # these two calls + flush emit exactly the full-utterance labels
-    out = [server.process_chunk(feats[:, :16]),
-           server.process_chunk(feats[:, 16:]), server.flush()]
+    results = server.run(chunk_frames=16)
     dt = time.perf_counter() - t0
-    emitted = [sum(len(o[i]) for o in out) for i in range(args.batch)]
-    print(f"streamed 32 frames x {args.batch} in {dt*1e3:.1f} ms; "
-          f"emitted: {emitted}")
+    frames = sum(r.frames for r in results)
+    stats = server.compile_stats()
+    print(f"fleet served {len(results)} utterances ({frames} frames) "
+          f"through {args.batch} slots in {dt:.2f}s "
+          f"({len(results) / dt:.1f} streams/s, {frames / dt:.0f} "
+          f"frames/s, occupancy {server.occupancy:.2f}, "
+          f"frame_step signatures {stats['frame_step']})")
+    for r in results[:4]:
+      print(f"  utt {r.uid}: {r.frames} frames -> "
+            f"{len(r.labels)} labels; sample {r.labels[:6]}")
     return
 
   num_requests = args.num_requests or args.batch

@@ -27,7 +27,25 @@ CONV1_TIME_STRIDE = 2   # conv1 halves time; conv2's time stride is
 CONV_FREQ_STRIDE = 2    # both convs halve frequency
 
 def conv_out_len(t: int, k: int, stride: int) -> int:
-  return (t + stride - 1) // stride  # SAME padding
+  return (t + stride - 1) // stride  # ceil(t / stride), see conv_time_pads
+
+
+def conv_time_pads(t: int, k: int, stride: int) -> tuple:
+  """(pad_left, pad_right) for the streaming time-padding convention.
+
+  The left pad is a *fixed* `(k - stride) // 2` regardless of sequence
+  length; the right pad completes exactly `ceil(t / stride)` output
+  frames. XLA's "SAME" instead centres the total pad, which makes the
+  left context depend on `t % stride` — a full-utterance conv and a
+  streamed one would then disagree whenever the final length isn't a
+  stride multiple (the stream has already committed its left pad before
+  the length is known). For stride-multiple lengths both conventions
+  coincide bit-for-bit; for the rest this one is the streamable choice.
+  """
+  out = (t + stride - 1) // stride
+  pad_l = (k - stride) // 2
+  pad_r = (out - 1) * stride + k - t - pad_l
+  return pad_l, max(pad_r, 0)
 
 
 def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
@@ -55,19 +73,35 @@ def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
   }
 
 
+def _freq_pads(f: int, k: int, stride: int) -> tuple:
+  total = (conv_out_len(f, k, stride) - 1) * stride + k - f
+  return total // 2, total - total // 2   # "SAME": centred (freq is static)
+
+
 def _frontend(params: dict, feats: jax.Array, cfg: ModelConfig
               ) -> jax.Array:
-  """feats (b, t, f) -> (b, t', gru_in). Two strided 2D convs + ReLU."""
+  """feats (b, t, f) -> (b, t', gru_in). Two strided 2D convs + ReLU.
+
+  Time padding follows `conv_time_pads` (fixed left context) so chunked
+  streaming through `_ConvStream` reproduces this function exactly for
+  *any* utterance length, not just stride multiples.
+  """
   x = feats[..., None]                                   # (b, t, f, 1)
+  k1, f1 = params["conv1"].shape[:2]
   x = jax.lax.conv_general_dilated(
       x.astype(cfg.dtype), params["conv1"],
-      window_strides=(CONV1_TIME_STRIDE, CONV_FREQ_STRIDE), padding="SAME",
+      window_strides=(CONV1_TIME_STRIDE, CONV_FREQ_STRIDE),
+      padding=(conv_time_pads(x.shape[1], k1, CONV1_TIME_STRIDE),
+               _freq_pads(x.shape[2], f1, CONV_FREQ_STRIDE)),
       dimension_numbers=("NHWC", "HWIO", "NHWC"))
   x = jax.nn.relu(x.astype(jnp.float32)).astype(cfg.dtype)
+  k2, f2 = params["conv2"].shape[:2]
   x = jax.lax.conv_general_dilated(
       x, params["conv2"],
       window_strides=(cfg.time_stride, CONV_FREQ_STRIDE),
-      padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+      padding=(conv_time_pads(x.shape[1], k2, cfg.time_stride),
+               _freq_pads(x.shape[2], f2, CONV_FREQ_STRIDE)),
+      dimension_numbers=("NHWC", "HWIO", "NHWC"))
   x = jax.nn.relu(x.astype(jnp.float32)).astype(cfg.dtype)
   b, t, f, c = x.shape
   return x.reshape(b, t, f * c)

@@ -104,15 +104,15 @@ def init_model(key: jax.Array, cfg: ModelConfig) -> dict:
   }
 
 
-def _bidir_attention(p, x, cfg, cs):
+def _bidir_attention(p, x, cfg, cs, policy=None):
   """Non-causal full self-attention via the flash path with mask disabled:
   encoder sequences can be long (prefill_32k), so reuse blockwise attention
   with an all-visible mask by passing positions = max."""
   b, s, _ = x.shape
   h, hd = cfg.num_heads, cfg.resolved_head_dim
-  q = gemm(p["wq"], x).reshape(b, s, h, hd)
-  k = gemm(p["wk"], x).reshape(b, s, h, hd)
-  v = gemm(p["wv"], x).reshape(b, s, h, hd)
+  q = gemm(p["wq"], x, policy).reshape(b, s, h, hd)
+  k = gemm(p["wk"], x, policy).reshape(b, s, h, hd)
+  v = gemm(p["wv"], x, policy).reshape(b, s, h, hd)
   # blockwise non-causal: scan over kv blocks with online softmax
   bkv = min(cfg.attn_block_kv, s)
   nk = s // bkv
@@ -138,16 +138,16 @@ def _bidir_attention(p, x, cfg, cs):
                               (kb.transpose(1, 0, 2, 3, 4),
                                vb.transpose(1, 0, 2, 3, 4)))
   o = o / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
-  return gemm(p["wo"], o.reshape(b, s, h * hd).astype(x.dtype))
+  return gemm(p["wo"], o.reshape(b, s, h * hd).astype(x.dtype), policy)
 
 
 def encode(params: dict, frames: jax.Array, cfg: ModelConfig,
-           cs: Constraint = _id_cs) -> jax.Array:
+           cs: Constraint = _id_cs, policy=None) -> jax.Array:
   b, t, d = frames.shape
   x = frames.astype(cfg.dtype) + _sinusoid(t, d).astype(cfg.dtype)[None]
   x = cs(x, "bsd")
   def scan_body(h, lp):
-    g = functools.partial(_enc_block, cfg=cfg, cs=cs)
+    g = functools.partial(_enc_block, cfg=cfg, cs=cs, policy=policy)
     if cfg.remat == "full":
       g = jax.remat(g)
     return cs(g(h, lp), "bsd"), None
@@ -156,12 +156,40 @@ def encode(params: dict, frames: jax.Array, cfg: ModelConfig,
                     cfg.norm_eps)
 
 
-def _enc_block(h, lp, cfg, cs):
+def encode_unrolled(params: dict, frames: jax.Array, cfg: ModelConfig,
+                    cs: Constraint = _id_cs, policy=None) -> jax.Array:
+  """`encode` with the layer scan unrolled into an eager Python loop.
+
+  Same math as `encode` (the scan body IS `_enc_block`; a scan over a
+  stacked pytree and a loop over its slices apply identical per-layer
+  programs), but activations stay *concrete*, so with a policy threaded
+  every encoder GEMM routes through `dispatch.gemm` eagerly and the
+  calibration observers see it — per layer, because each block runs
+  under `dispatch.calibration_layer(i)`. This is the forward the
+  LiteASR-style calibration uses: `encode`'s scan turns every
+  activation into a tracer the observers must skip, which is exactly
+  the PR 4 blind spot that left whisper's encoder uncalibratable.
+  Do not jit this; for serving use `encode`.
+  """
+  from repro.kernels import dispatch
+  b, t, d = frames.shape
+  x = frames.astype(cfg.dtype) + _sinusoid(t, d).astype(cfg.dtype)[None]
+  x = cs(x, "bsd")
+  n_layers = jax.tree.leaves(params["enc_layers"])[0].shape[0]
+  for i in range(n_layers):
+    lp = jax.tree.map(lambda a: a[i], params["enc_layers"])
+    with dispatch.calibration_layer(i):
+      x = cs(_enc_block(x, lp, cfg, cs, policy), "bsd")
+  return layer_norm(x, params["enc_ln"]["scale"], params["enc_ln"]["bias"],
+                    cfg.norm_eps)
+
+
+def _enc_block(h, lp, cfg, cs, policy=None):
   lp = cs(lp, "layer_params")       # gather inside the remat region
   a = layer_norm(h, lp["ln1"]["scale"], lp["ln1"]["bias"], cfg.norm_eps)
-  h = h + _bidir_attention(lp["attn"], a, cfg, cs)
+  h = h + _bidir_attention(lp["attn"], a, cfg, cs, policy)
   f = layer_norm(h, lp["ln2"]["scale"], lp["ln2"]["bias"], cfg.norm_eps)
-  return h + gelu_ffn_forward(lp["ffn"], f, cs)
+  return h + gelu_ffn_forward(lp["ffn"], f, cs, policy)
 
 
 def _dec_block(h, lp, mem, cfg, cs):

@@ -13,9 +13,12 @@ engines accept it unchanged, `launch.serve --quantize` builds one, and
 `checkpoint.CheckpointManager` round-trips it bit-identically.
 """
 from repro.quant.leaf import QuantizedLinear, kernel_apply, ref_apply
-from repro.quant.ptq import (DEFAULT_PLAN, calibrate_activation_ranges,
-                             is_quantized, quantize_leaf, quantize_params)
+from repro.quant.ptq import (DEFAULT_PLAN, ActivationStats,
+                             calibrate_activation_ranges,
+                             calibrate_activation_stats, is_quantized,
+                             quantize_leaf, quantize_params)
 
 __all__ = ["QuantizedLinear", "kernel_apply", "ref_apply", "DEFAULT_PLAN",
-           "calibrate_activation_ranges", "is_quantized", "quantize_leaf",
+           "ActivationStats", "calibrate_activation_ranges",
+           "calibrate_activation_stats", "is_quantized", "quantize_leaf",
            "quantize_params"]

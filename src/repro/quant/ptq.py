@@ -17,10 +17,12 @@ leaves without a calibration entry (e.g. recurrent GEMMs hidden inside a
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Iterable, Mapping, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.compress import FactorizationPlan
 from repro.core.factored import FactoredLinear, map_factored_leaves
@@ -120,4 +122,86 @@ def calibrate_activation_ranges(apply_fn, batches: Iterable[Any]
         "KernelPolicy threaded (dispatch.JNP_ONLY works) so activations "
         "are concrete when dispatch.gemm observes them; under jit every "
         "activation is a tracer and calibration is silently empty.")
-  return dict(log)
+  out = dict(log)
+  # Layer-tagged entries ("name@L3", from dispatch.calibration_layer
+  # around scan-stacked leaves) additionally fold into their base name
+  # by max: quantize_params looks leaves up by base name, and the
+  # stacked leaf's single act_scale must cover every layer's range.
+  for key, amax in log.items():
+    base = _split_layer_key(key)[0]
+    if base != key:
+      out[base] = max(out.get(base, 0.0), amax)
+  return out
+
+
+def _split_layer_key(key: str) -> tuple[str, Optional[int]]:
+  base, sep, idx = key.rpartition("@L")
+  if sep and idx.isdigit():
+    return base, int(idx)
+  return key, None
+
+
+@dataclasses.dataclass
+class ActivationStats:
+  """Calibrated input statistics for one GEMM leaf.
+
+  second_moment — E[x x^T]: (m, m), or (L, m, m) stacked per scan layer
+  when the forward tagged layers with `dispatch.calibration_layer`.
+  count/amax aggregate over layers. `core.compress.to_stage2(calib=...)`
+  consumes the `second_moment` for activation-weighted truncation."""
+  second_moment: "np.ndarray"
+  count: int
+  amax: float
+
+
+def calibrate_activation_stats(apply_fn, batches: Iterable[Any]
+                               ) -> dict[str, ActivationStats]:
+  """Collect per-GEMM input Gram matrices for calibrated truncation.
+
+  Same eager-forward contract as `calibrate_activation_ranges`, tapping
+  `dispatch.observe_gemm_moments` instead of the amax observer. Entries
+  tagged "name@L{i}" (scan-stacked leaves observed layer-by-layer, e.g.
+  through `models.whisper.encode_unrolled`) are assembled into ONE
+  `ActivationStats` per base name whose second_moment is stacked
+  (L, m, m) in layer order — the per-layer Gram matrices the stacked
+  branch of `svd.truncate_leaf` whitens with. Layer indices must be
+  contiguous from 0 (a gap means some layer's GEMM never ran eagerly).
+  """
+  from repro.kernels import dispatch
+  ran = False
+  with dispatch.observe_gemm_moments() as log:
+    for batch in batches:
+      ran = True
+      apply_fn(batch)
+  if ran and not log:
+    raise RuntimeError(
+        "calibrate_activation_stats observed zero GEMM activations — "
+        "apply_fn must run eagerly with a KernelPolicy threaded (see "
+        "calibrate_activation_ranges).")
+  flat: dict[str, dict] = {}
+  layered: dict[str, dict[int, dict]] = {}
+  for key, ent in log.items():
+    base, idx = _split_layer_key(key)
+    if idx is None:
+      flat[base] = ent
+    else:
+      layered.setdefault(base, {})[idx] = ent
+  out: dict[str, ActivationStats] = {}
+  for name, ent in flat.items():
+    out[name] = ActivationStats(
+        second_moment=ent["xtx"] / max(ent["count"], 1),
+        count=ent["count"], amax=ent["amax"])
+  for name, by_layer in layered.items():
+    n = len(by_layer)
+    if sorted(by_layer) != list(range(n)):
+      raise RuntimeError(
+          f"leaf {name!r}: calibration saw layer indices "
+          f"{sorted(by_layer)} — expected contiguous 0..{n - 1}; some "
+          "scan layer never ran eagerly under calibration_layer")
+    stack = np.stack([by_layer[i]["xtx"] / max(by_layer[i]["count"], 1)
+                      for i in range(n)])
+    out[name] = ActivationStats(
+        second_moment=stack,
+        count=sum(by_layer[i]["count"] for i in range(n)),
+        amax=max(by_layer[i]["amax"] for i in range(n)))
+  return out

@@ -942,25 +942,25 @@ def _same_pad(size: int, kernel: int, stride: int) -> tuple[int, int]:
 
 
 class _ConvStream:
-  """One strided-conv stage streamed over time with SAME-padding parity.
+  """One strided-conv stage streamed over time.
 
-  For an aligned total length (t % stride == 0) SAME padding is the
-  constant split pl = (k - s) // 2 left, the rest right. The stage
-  materializes the left pad once at stream start, buffers pushed frames,
-  and emits output frame j as soon as its receptive field
-  [j*s - pl, j*s - pl + k) is complete; `flush` appends the right pad and
-  drains the tail. Chunked emission therefore equals the full-utterance
-  SAME conv frame-for-frame (the alignment caveat is checked by the
-  server at flush time).
+  Implements the `deepspeech.conv_time_pads` convention: a fixed left
+  pad of (k - s) // 2 zeros is materialized once at stream start, pushed
+  frames are buffered, and output frame j is emitted as soon as its
+  receptive field [j*s - pl, j*s - pl + k) is complete. `flush` computes
+  the right pad *from the actual frame count* — exactly the zeros needed
+  to complete ceil(n_in / s) output frames — so chunked emission equals
+  the full-utterance conv frame-for-frame for ANY utterance length, not
+  just stride multiples (the old fixed right pad asserted alignment).
   """
 
   def __init__(self, kernel: int, stride: int, apply_fn):
     self.k, self.s = kernel, stride
     self.pad_l = (kernel - stride) // 2
-    self.pad_r = (kernel - stride) - self.pad_l
     self.apply = apply_fn        # (b, t, ...) -> outputs, VALID in time
     self.buf: Optional[np.ndarray] = None
     self.n_in = 0                # frames received, padding excluded
+    self.n_out = 0               # frames emitted so far
     self.flushed = False
 
   def _zeros(self, like: np.ndarray, t: int) -> np.ndarray:
@@ -973,12 +973,15 @@ class _ConvStream:
       return None
     window = self.buf[:, :(m - 1) * self.s + self.k]
     self.buf = self.buf[:, m * self.s:]
+    self.n_out += m
     return np.asarray(self.apply(window))
 
   def push(self, x) -> Optional[np.ndarray]:
     if self.flushed:
       raise RuntimeError("conv stream already flushed; reset() first")
     x = np.asarray(x)
+    if x.shape[1] == 0:
+      return None
     if self.buf is None:
       self.buf = np.concatenate([self._zeros(x, self.pad_l), x], axis=1)
     else:
@@ -991,28 +994,83 @@ class _ConvStream:
     # idempotent: re-flushing must not re-pad the residual buffer and
     # complete a fake window
     if self.buf is None or self.flushed:
+      self.flushed = True
       return None
     self.flushed = True
-    self.buf = np.concatenate(
-        [self.buf, self._zeros(self.buf, self.pad_r)], axis=1)
+    out_total = -(-self.n_in // self.s)
+    pad_r = (out_total - 1) * self.s + self.k - self.pad_l - self.n_in
+    if pad_r > 0:
+      self.buf = np.concatenate(
+          [self.buf, self._zeros(self.buf, pad_r)], axis=1)
     return self._emit()
 
   def reset(self) -> None:
     self.buf = None
     self.n_in = 0
+    self.n_out = 0
     self.flushed = False
 
 
-class StreamingSpeechServer:
-  """Frame-synchronous DS2 serving (paper §4's embedded regime).
+@dataclasses.dataclass
+class SpeechResult:
+  """One retired utterance from the speech fleet."""
+  uid: int
+  labels: list                  # collapsed greedy-CTC label sequence
+  frames: int                   # raw mel frames consumed
 
-  The conv frontend is streamed: each `_ConvStream` stage carries the
-  receptive-field context its kernel needs across `process_chunk` calls,
-  so a chunked utterance produces exactly the labels of the full-utterance
-  forward. Call `flush()` (or `process_chunk(..., final=True)`) at end of
-  utterance to drain the right-edge context; exact parity requires the
-  total frame count to be a multiple of 2 * time_stride (the composite
-  frontend stride), which `flush` asserts.
+
+class _SpeechSlot:
+  """Host-side ownership record for one speech stream: the per-stream
+  conv receptive-field context (`s1`/`s2`), the per-stream CTC collapse
+  state (`prev` — reset to -1 on admit, never shared across slots), the
+  post-frontend frames awaiting a decode step (`pending`), and the
+  labels emitted so far. The speech sibling of `_SlotState`."""
+
+  __slots__ = ("uid", "feats", "fed", "labels", "prev", "s1", "s2",
+               "pending", "flushed")
+
+  def __init__(self, uid, feats, s1, s2):
+    self.uid = uid
+    self.feats = feats            # (t, feat_dim) np, or None (lockstep)
+    self.fed = 0                  # raw frames pushed into s1 so far
+    self.labels: list = []
+    self.prev = -1                # per-stream collapse state
+    self.s1, self.s2 = s1, s2
+    self.pending = collections.deque()   # (gru_in,) frames to decode
+    self.flushed = False          # frontend drained (right edge padded)
+
+  @property
+  def done(self) -> bool:
+    return self.flushed and not self.pending
+
+
+class StreamingSpeechServer:
+  """Continuous-batching frame-synchronous DS2 fleet (paper §4 regime).
+
+  Two serving surfaces over the same masked decode program:
+
+  * **Fleet** (`submit` + `run`): an admit/chunk/retire lifecycle over
+    `batch_size` slots. Each admitted utterance owns a `_SpeechSlot`
+    with its own pair of `_ConvStream` frontends (receptive-field
+    context never crosses streams) and its own CTC collapse state
+    (reset on admit). Every decode step is ONE masked fixed-shape
+    `frame_step` over all slots — inactive or exhausted slots keep
+    their state via the mask — so thousands of utterances of mixed,
+    arbitrary (non-stride-multiple) lengths share one jit signature
+    across retire -> refill, exactly like `LMEngine`'s decode step.
+    Slot admission zeroes the slot's GRU rows through the jitted
+    `ModelApi.insert_slot` surgery (traced slot index: one program).
+
+  * **Lockstep** (`process_chunk` / `flush`): the legacy single-group
+    API — all `batch_size` streams advance through the same chunk
+    boundaries. Kept for frame-synchronous duplex use; internally it is
+    the fleet path with every slot live.
+
+  Chunked emission is exactly the full-utterance `deepspeech.forward`
+  for ANY utterance length: the conv frontend follows the fixed-left-pad
+  convention of `deepspeech.conv_time_pads`, and `_ConvStream.flush`
+  right-pads to complete ceil(t / stride) frames instead of asserting
+  stride alignment.
   """
 
   def __init__(self, model_cfg: ModelConfig, params: Any, *,
@@ -1024,13 +1082,22 @@ class StreamingSpeechServer:
     # "pallas" policy routes them through gru_cell / decode_matvec
     policy = resolve_policy(kernel_policy, batch_size)
     self.kernel_policy = policy
+    self._api = get_model(model_cfg)
     self.state = deepspeech.init_decode_state(model_cfg, batch_size)
-    self._prev = np.full((batch_size,), -1, np.int64)
 
-    def frame_step(params, state, x_t):
-      return deepspeech.decode_step(params, state, x_t, model_cfg,
-                                    policy=policy)
+    def frame_step(params, state, x_t, active):
+      log_probs, new = deepspeech.decode_step(params, state, x_t,
+                                              model_cfg, policy=policy)
+      new = jax.tree.map(
+          lambda n, o: jnp.where(_bcast_mask(active, n.ndim, 0), n, o),
+          new, state)
+      return log_probs, new
     self._frame_step = jax.jit(frame_step, donate_argnums=(1,))
+
+    def insert(state, slot_state, slot):
+      return self._api.insert_slot(model_cfg, state, slot_state, slot)
+    self._insert = jax.jit(insert, donate_argnums=(0,))
+    self._fresh_slot = deepspeech.init_decode_state(model_cfg, 1)
 
     cfg = model_cfg
     # geometry comes from the conv weights themselves (one source of
@@ -1040,6 +1107,9 @@ class StreamingSpeechServer:
     s1t, sf = deepspeech.CONV1_TIME_STRIDE, deepspeech.CONV_FREQ_STRIDE
     f1l, f1r = _same_pad(cfg.feat_dim, k1f, sf)
     f2l, f2r = _same_pad(-(-cfg.feat_dim // sf), k2f, sf)
+    self._geom = (k1t, s1t, k2t, cfg.time_stride)
+    freq_after = ((cfg.feat_dim + 1) // 2 + 1) // 2
+    self._gru_in = freq_after * cfg.conv_channels
 
     def conv1(params, x):                       # (b, t, f) raw mel
       x = jax.lax.conv_general_dilated(
@@ -1059,75 +1129,218 @@ class StreamingSpeechServer:
 
     self._conv1 = jax.jit(conv1)
     self._conv2 = jax.jit(conv2)
-    self._stream1 = _ConvStream(k1t, s1t,
-                                lambda x: self._conv1(self.params, x))
-    self._stream2 = _ConvStream(k2t, cfg.time_stride,
-                                lambda x: self._conv2(self.params, x))
-    self._finished = False
+    self._buckets1: set = set()
+    self._buckets2: set = set()
+
+    self._slots: list = [None] * batch_size
+    self._queue: collections.deque = collections.deque()
+    self._next_uid = 0
+    self._mode: Optional[str] = None     # None | "lockstep" | "fleet"
+    self._finished = False               # lockstep: utterance finalized
+    self.decode_steps = 0                # masked frame_step invocations
+    self.busy_steps = 0                  # live (slot, frame) pairs stepped
+
+  # -- shared machinery -----------------------------------------------------
+
+  def _bucketed(self, fn, kernel, stride, buckets: set, window):
+    """Run a VALID-in-time conv over `window`, padded on the right to a
+    pow2 time bucket so a stream's varying window lengths reuse a small
+    set of jit signatures; the pad only creates extra output frames past
+    the real ones, which are sliced off (VALID conv is local)."""
+    t = window.shape[1]
+    m = (t - kernel) // stride + 1
+    tp = max(_next_pow2(t), kernel)
+    if tp != t:
+      pad = np.zeros((window.shape[0], tp - t) + window.shape[2:],
+                     window.dtype)
+      window = np.concatenate([window, pad], axis=1)
+    buckets.add(tp)
+    return np.asarray(fn(self.params, jnp.asarray(window)))[:, :m]
+
+  def _make_streams(self):
+    s1 = _ConvStream(self._geom[0], self._geom[1],
+                     lambda x: self._bucketed(self._conv1, self._geom[0],
+                                              self._geom[1],
+                                              self._buckets1, x))
+    s2 = _ConvStream(self._geom[2], self._geom[3],
+                     lambda x: self._bucketed(self._conv2, self._geom[2],
+                                              self._geom[3],
+                                              self._buckets2, x))
+    return s1, s2
+
+  def _feed_slot(self, slot: _SpeechSlot, feats, *, final: bool) -> None:
+    """Push raw mel frames (1, t, f) through the slot's conv streams;
+    queue every completed post-frontend frame for decoding."""
+    outs = []
+    if feats is not None and feats.shape[1]:
+      y1 = slot.s1.push(feats)
+      if y1 is not None and y1.shape[1]:
+        outs.append(slot.s2.push(y1))
+    if final and not slot.flushed:
+      y1 = slot.s1.flush()
+      if y1 is not None and y1.shape[1]:
+        outs.append(slot.s2.push(y1))
+      outs.append(slot.s2.flush())
+      slot.flushed = True
+    for o in outs:
+      if o is not None and o.shape[1]:
+        slot.pending.extend(np.asarray(o[0]))
+
+  def _decode_pending(self) -> list:
+    """Masked frame steps until no live slot has a pending frame.
+
+    One fixed-shape `frame_step` per frame position: slots without a
+    frame at this position are masked out of the state update and their
+    (garbage) logits ignored — the speech analogue of LMEngine's masked
+    decode. Greedy-CTC collapse runs per live slot against ITS OWN
+    `prev`. Returns per-slot newly emitted labels (lockstep API)."""
+    emitted = [[] for _ in range(self.batch)]
+    dtype = np.dtype(self.cfg.dtype)
+    while True:
+      live = [i for i, s in enumerate(self._slots)
+              if s is not None and s.pending]
+      if not live:
+        return emitted
+      x = np.zeros((self.batch, self._gru_in), dtype)
+      mask = np.zeros((self.batch,), bool)
+      for i in live:
+        x[i] = self._slots[i].pending.popleft()
+        mask[i] = True
+      log_probs, self.state = self._frame_step(
+          self.params, self.state, jnp.asarray(x), jnp.asarray(mask))
+      best = np.asarray(jnp.argmax(log_probs, axis=-1))
+      for i in live:
+        slot, b = self._slots[i], int(best[i])
+        if b != 0 and b != slot.prev:
+          slot.labels.append(b)
+          emitted[i].append(b)
+        slot.prev = b
+      self.decode_steps += 1
+      self.busy_steps += len(live)
+
+  # -- fleet lifecycle ------------------------------------------------------
+
+  def submit(self, feats: np.ndarray) -> int:
+    """Queue one utterance (t, feat_dim) of ANY length; returns its uid."""
+    if self._mode == "lockstep":
+      raise RuntimeError("server is mid-lockstep-utterance; reset() first")
+    self._mode = "fleet"
+    feats = np.asarray(feats)
+    if feats.ndim != 2 or feats.shape[-1] != self.cfg.feat_dim:
+      raise ValueError(f"expected (t, {self.cfg.feat_dim}) mel features, "
+                       f"got {feats.shape}")
+    uid = self._next_uid
+    self._next_uid += 1
+    self._queue.append((uid, feats))
+    return uid
+
+  def _admit(self) -> None:
+    for i in range(self.batch):
+      if self._slots[i] is None and self._queue:
+        uid, feats = self._queue.popleft()
+        s1, s2 = self._make_streams()
+        slot = _SpeechSlot(uid, feats, s1, s2)
+        self._slots[i] = slot
+        # zero the slot's GRU rows (jitted surgery, traced slot index:
+        # one program for every slot) and reset ITS collapse state —
+        # a reused slot must not inherit the previous utterance's
+        # hidden state or last emitted label
+        self.state = self._insert(self.state, self._fresh_slot,
+                                  jnp.int32(i))
+
+  def run(self, chunk_frames: int = 16) -> list:
+    """Drain the submitted queue; returns `SpeechResult`s in retire
+    order. Each iteration admits into free slots, feeds every live slot
+    its next `chunk_frames` raw frames (finalizing streams that hit end
+    of utterance), masked-steps all pending post-frontend frames, and
+    retires finished slots so the queue refills them — no slot idles
+    while work remains, and no program re-traces across refills."""
+    if self._mode == "lockstep":
+      raise RuntimeError("server is mid-lockstep-utterance; reset() first")
+    results = []
+    while self._queue or any(s is not None for s in self._slots):
+      self._admit()
+      for slot in self._slots:
+        if slot is None or slot.flushed:
+          continue
+        end = min(slot.fed + chunk_frames, slot.feats.shape[0])
+        chunk = slot.feats[None, slot.fed:end]
+        slot.fed = end
+        self._feed_slot(slot, chunk, final=end == slot.feats.shape[0])
+      self._decode_pending()
+      for i, slot in enumerate(self._slots):
+        if slot is not None and slot.done:
+          results.append(SpeechResult(uid=slot.uid, labels=slot.labels,
+                                      frames=int(slot.feats.shape[0])))
+          self._slots[i] = None
+    self._mode = None
+    return results
+
+  @property
+  def occupancy(self) -> float:
+    """Live (slot, frame) pairs per decode step, over batch capacity."""
+    total = self.decode_steps * self.batch
+    return self.busy_steps / total if total else 0.0
+
+  def compile_stats(self) -> dict:
+    """Jit cache sizes (-1: runtime doesn't expose them). The fleet
+    contract mirrors LMEngine's: `frame_step` == 1 ever — admits,
+    retires, refills, mask patterns and mixed lengths never re-trace —
+    and each conv stage holds one signature per pow2 window bucket."""
+    return {
+        "frame_step": _jit_cache_size(self._frame_step),
+        "insert": _jit_cache_size(self._insert),
+        "conv1": _jit_cache_size(self._conv1),
+        "conv2": _jit_cache_size(self._conv2),
+        "conv1_buckets": sorted(self._buckets1),
+        "conv2_buckets": sorted(self._buckets2),
+    }
+
+  # -- lockstep API (legacy duplex surface) ---------------------------------
 
   def reset(self) -> None:
     self.state = deepspeech.init_decode_state(self.cfg, self.batch)
-    self._prev = np.full((self.batch,), -1, np.int64)
-    self._stream1.reset()
-    self._stream2.reset()
+    self._slots = [None] * self.batch
+    self._queue.clear()
+    self._mode = None
     self._finished = False
 
-  def _run_frames(self, x: np.ndarray) -> list:
-    """Post-frontend frames (b, t', gru_in) -> newly emitted labels."""
-    emitted = [[] for _ in range(self.batch)]
-    for t in range(x.shape[1]):
-      log_probs, self.state = self._frame_step(self.params, self.state,
-                                               jnp.asarray(x[:, t]))
-      best = np.asarray(jnp.argmax(log_probs, axis=-1))
+  def _lockstep_slots(self) -> list:
+    if self._mode == "fleet":
+      raise RuntimeError("server is mid-fleet-run; reset() first")
+    self._mode = "lockstep"
+    if all(s is None for s in self._slots):
       for i in range(self.batch):
-        if best[i] != 0 and best[i] != self._prev[i]:
-          emitted[i].append(int(best[i]))
-        self._prev[i] = best[i]
-    return emitted
-
-  def _frontend_outputs(self, feats=None, *, final: bool = False) -> list:
-    outs = []
-    if feats is not None:
-      y1 = self._stream1.push(feats)
-      if y1 is not None and y1.shape[1]:
-        outs.append(self._stream2.push(y1))
-    if final:
-      y1 = self._stream1.flush()
-      if y1 is not None and y1.shape[1]:
-        outs.append(self._stream2.push(y1))
-      outs.append(self._stream2.flush())
-    return [o for o in outs if o is not None and o.shape[1]]
+        s1, s2 = self._make_streams()
+        self._slots[i] = _SpeechSlot(None, None, s1, s2)
+    return self._slots
 
   def process_chunk(self, feats: np.ndarray, *,
                     final: bool = False) -> list:
     """feats (b, t, feat_dim) raw mel chunk -> newly emitted labels.
 
     Emission lags the chunk boundary by the frontend's receptive field —
-    the context carried so chunked output equals the full forward. Pass
-    final=True (or call flush()) after the last chunk; a redundant
-    final/flush is a no-op, new frames after it require reset()."""
+    the context carried so chunked output equals the full forward for
+    any total length. Pass final=True (or call flush()) after the last
+    chunk; a redundant final/flush is a no-op, new frames after it
+    require reset()."""
     feats = np.asarray(feats)
     if self._finished:
       if feats.shape[1]:
         raise RuntimeError("utterance already finalized; reset() first")
       return [[] for _ in range(self.batch)]
-    outs = self._frontend_outputs(feats, final=final)
+    slots = self._lockstep_slots()
+    for i, slot in enumerate(slots):
+      self._feed_slot(slot, feats[i:i + 1] if feats.shape[1] else None,
+                      final=final)
     if final:
-      stride = deepspeech.CONV1_TIME_STRIDE * self.cfg.time_stride
-      if self._stream1.n_in % stride:
-        raise ValueError(
-            f"utterance length {self._stream1.n_in} not a multiple of the "
-            f"composite frontend stride {stride}: SAME padding would "
-            "differ from the full-utterance forward")
       self._finished = True
-    emitted = [[] for _ in range(self.batch)]
-    for out in outs:
-      for i, e in enumerate(self._run_frames(out)):
-        emitted[i].extend(e)
-    return emitted
+    return self._decode_pending()
 
   def flush(self) -> list:
-    """Drain the right-edge conv context at end of utterance."""
+    """Drain the right-edge conv context at end of utterance. The right
+    pad is computed from the frames actually received, so arbitrary
+    (non-stride-multiple) utterance lengths flush cleanly."""
     return self.process_chunk(
         np.zeros((self.batch, 0, self.cfg.feat_dim), np.float32),
         final=True)

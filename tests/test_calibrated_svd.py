@@ -1,0 +1,278 @@
+"""Activation-calibrated low-rank truncation (LiteASR-style) tests.
+
+The chain under test, end to end:
+
+  dispatch.observe_gemm_moments + calibration_layer   (per-GEMM Grams,
+      layer-tagged for scan-stacked leaves)
+  -> quant.calibrate_activation_stats                 (assembled
+      ActivationStats; (L, m, m) stacks for layered keys)
+  -> svd.activation_split / truncate_leaf(cov=...)    (whitened SVD:
+      rank and factors from output-reconstruction energy)
+  -> compress.to_stage2(calib=...) + compression_report (wiring and the
+      calibrated-vs-spectrum ledger)
+
+plus `whisper.encode_unrolled`, the eager forward that makes the
+encoder's scan-stacked GEMMs observable at all.
+
+The load-bearing assertion throughout: under a correlated input
+distribution, the calibrated split strictly beats the spectrum-only
+split at EQUAL rank on weighted (output) reconstruction error — that
+inequality is the whole point of calibrating.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import compress, svd
+from repro.core.factored import FactoredLinear
+from repro.kernels import dispatch
+from repro.quant import (ActivationStats, calibrate_activation_ranges,
+                         calibrate_activation_stats)
+
+
+def _correlated_cov(m, dim, seed=0):
+  """E[x x^T] of x = z @ P + noise: energy concentrated in `dim` dirs."""
+  rng = np.random.RandomState(seed)
+  proj = rng.randn(dim, m)
+  cov = proj.T @ proj + 0.01 * np.eye(m)
+  return cov
+
+
+def _weighted_err(w, u, v, cov):
+  """E||x W - x U V||^2 = tr(D^T cov D), D = W - UV."""
+  d = np.asarray(w, np.float64) - np.asarray(u, np.float64) @ np.asarray(
+      v, np.float64)
+  return float(np.trace(d.T @ cov @ d))
+
+
+# ---------------------------------------------------------------------------
+# the math: whitened SVD beats the weight spectrum under correlation
+# ---------------------------------------------------------------------------
+
+
+def test_activation_split_beats_spectrum_at_equal_rank():
+  m, n, r = 48, 40, 8
+  rng = np.random.RandomState(0)
+  w = jnp.asarray(rng.randn(m, n).astype(np.float32))
+  cov = _correlated_cov(m, dim=12)
+  spec = svd.TruncationSpec(fixed_rank=r, round_to=1)
+  u_c, v_c, svals = svd.activation_split(w, cov, spec)
+  u_s, v_s = svd.balanced_split(w, r)
+  err_c = _weighted_err(w, u_c, v_c, cov)
+  err_s = _weighted_err(w, u_s, v_s, cov)
+  assert err_c < err_s * 0.9          # strict, with margin
+  assert u_c.shape == (m, r) and v_c.shape == (r, n)
+  assert len(svals) == min(m, n) and np.all(np.diff(svals) <= 0)
+  # optimality: err_c equals the tail energy of the whitened spectrum
+  assert err_c == pytest.approx(float(np.sum(svals[r:] ** 2)), rel=1e-3)
+
+
+def test_activation_split_identity_cov_is_plain_svd():
+  """White inputs carry no information: the calibrated split must then
+  reproduce the spectrum-only product (same subspace, same error)."""
+  m, n, r = 32, 24, 6
+  rng = np.random.RandomState(1)
+  w = jnp.asarray(rng.randn(m, n).astype(np.float32))
+  spec = svd.TruncationSpec(fixed_rank=r, round_to=1)
+  u_c, v_c, _ = svd.activation_split(w, np.eye(m), spec)
+  u_s, v_s = svd.balanced_split(w, r)
+  np.testing.assert_allclose(np.asarray(u_c @ v_c), np.asarray(u_s @ v_s),
+                             atol=1e-4)
+
+
+def test_truncate_leaf_calibrated_2d_and_rank_from_whitened_spectrum():
+  m, n = 64, 48
+  rng = np.random.RandomState(2)
+  # weight energy spread; input energy concentrated -> the whitened
+  # spectrum decays much faster than the weight spectrum, so the
+  # variance rule must pick a SMALLER rank when calibrated
+  w = jnp.asarray(rng.randn(m, n).astype(np.float32))
+  cov = _correlated_cov(m, dim=4, seed=2)
+  leaf = FactoredLinear(w=w, u=None, v=None, name="fc")
+  spec = svd.TruncationSpec(variance_threshold=0.9, round_to=1)
+  cal = svd.truncate_leaf(leaf, spec, cov=cov)
+  plain = svd.truncate_leaf(leaf, spec)
+  assert cal.is_factored and plain.is_factored
+  assert cal.rank < plain.rank
+  assert cal.name == "fc" and cal.group == leaf.group
+
+
+def test_truncate_leaf_stacked_per_layer_cov():
+  L, m, n, r = 3, 32, 24, 5
+  rng = np.random.RandomState(3)
+  w = jnp.asarray(rng.randn(L, m, n).astype(np.float32))
+  covs = np.stack([_correlated_cov(m, dim=6, seed=10 + i)
+                   for i in range(L)])
+  leaf = FactoredLinear(w=w, u=None, v=None, name="enc/fc")
+  spec = svd.TruncationSpec(fixed_rank=r, round_to=1)
+  cal = svd.truncate_leaf(leaf, spec, cov=covs)
+  plain = svd.truncate_leaf(leaf, spec)
+  assert cal.u.shape == (L, m, r) and cal.v.shape == (L, r, n)
+  for i in range(L):      # every layer whitened with ITS OWN Gram
+    err_c = _weighted_err(w[i], cal.u[i], cal.v[i], covs[i])
+    err_s = _weighted_err(w[i], plain.u[i], plain.v[i], covs[i])
+    assert err_c < err_s, f"layer {i}"
+  # an (m, m) Gram broadcasts over the stack
+  b = svd.truncate_leaf(leaf, spec, cov=covs[0])
+  assert b.u.shape == (L, m, r)
+  # a layer-count mismatch is a hard error, not a silent broadcast
+  with pytest.raises(ValueError, match="calibration_layer"):
+    svd.truncate_leaf(leaf, spec, cov=covs[:2])
+
+
+# ---------------------------------------------------------------------------
+# the observers: Gram collection + layer tagging
+# ---------------------------------------------------------------------------
+
+
+def _gemm_leaf(m, n, name, seed):
+  rng = np.random.RandomState(seed)
+  return FactoredLinear(w=jnp.asarray(rng.randn(m, n).astype(np.float32)),
+                        u=None, v=None, name=name)
+
+
+def test_observe_gemm_moments_accumulates_grams():
+  leaf = _gemm_leaf(8, 4, "fc", 4)
+  rng = np.random.RandomState(5)
+  xs = [rng.randn(3, 8).astype(np.float32) for _ in range(2)]
+  with dispatch.observe_gemm_moments() as log:
+    for x in xs:
+      dispatch.gemm(leaf, jnp.asarray(x), dispatch.JNP_ONLY)
+  rows = np.concatenate(xs).astype(np.float64)
+  assert set(log) == {"fc"}
+  np.testing.assert_allclose(log["fc"]["xtx"], rows.T @ rows, rtol=1e-6)
+  assert log["fc"]["count"] == 6
+  assert log["fc"]["amax"] == pytest.approx(np.abs(rows).max(), rel=1e-5)
+
+
+def test_calibration_layer_tags_and_stats_assembly():
+  leaf = _gemm_leaf(8, 4, "blk/fc", 6)
+  rng = np.random.RandomState(7)
+  xs = [rng.randn(2, 8).astype(np.float32) for _ in range(2)]
+
+  def apply_fn(_):
+    for i, x in enumerate(xs):
+      with dispatch.calibration_layer(i):
+        dispatch.gemm(leaf, jnp.asarray(x), dispatch.JNP_ONLY)
+
+  stats = calibrate_activation_stats(apply_fn, [None])
+  assert set(stats) == {"blk/fc"}
+  st = stats["blk/fc"]
+  assert isinstance(st, ActivationStats)
+  assert st.second_moment.shape == (2, 8, 8)       # stacked per layer
+  for i, x in enumerate(xs):
+    r = x.astype(np.float64)
+    np.testing.assert_allclose(st.second_moment[i], r.T @ r / 2, rtol=1e-6)
+  assert st.count == 4
+
+
+def test_calibrate_activation_stats_rejects_layer_gaps():
+  leaf = _gemm_leaf(4, 4, "blk/fc", 8)
+
+  def apply_fn(_):
+    for i in (0, 2):                               # layer 1 never ran
+      with dispatch.calibration_layer(i):
+        dispatch.gemm(leaf, jnp.ones((1, 4), jnp.float32),
+                      dispatch.JNP_ONLY)
+
+  with pytest.raises(RuntimeError, match="contiguous"):
+    calibrate_activation_stats(apply_fn, [None])
+
+
+def test_activation_ranges_fold_layer_keys():
+  """PTQ's amax calibration stays layer-agnostic: "name@L{i}" entries
+  fold into the base name by max, and the base name is what
+  quantize_params looks up."""
+  leaf = _gemm_leaf(4, 4, "blk/fc", 9)
+
+  def apply_fn(_):
+    for i, scale in enumerate((1.0, 3.0)):
+      with dispatch.calibration_layer(i):
+        dispatch.gemm(leaf, scale * jnp.ones((1, 4), jnp.float32),
+                      dispatch.JNP_ONLY)
+
+  log = calibrate_activation_ranges(apply_fn, [None])
+  assert log["blk/fc"] == pytest.approx(3.0)
+  assert log["blk/fc@L0"] == pytest.approx(1.0)
+  assert log["blk/fc@L1"] == pytest.approx(3.0)
+
+
+# ---------------------------------------------------------------------------
+# whisper: the eager unrolled encoder that makes calibration possible
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_whisper_encode_unrolled_matches_encode_and_calibrates():
+  from repro.models import whisper
+  cfg = dataclasses.replace(configs.get_smoke("whisper-small"),
+                            dtype=jnp.float32)
+  params = whisper.init_model(jax.random.PRNGKey(0), cfg)
+  rng = np.random.RandomState(0)
+  frames = jnp.asarray(rng.randn(2, 16, cfg.d_model).astype(np.float32))
+
+  ref = whisper.encode(params, frames, cfg)
+  unrolled = whisper.encode_unrolled(params, frames, cfg)
+  np.testing.assert_allclose(np.asarray(unrolled), np.asarray(ref),
+                             atol=2e-4, rtol=1e-4)
+
+  stats = calibrate_activation_stats(
+      lambda b: whisper.encode_unrolled(params, b, cfg,
+                                        policy=dispatch.JNP_ONLY),
+      [frames])
+  n_layers = jax.tree.leaves(params["enc_layers"])[0].shape[0]
+  assert {"enc/attn_q", "enc/attn_o", "enc/ffn_in",
+          "enc/ffn_out"} <= set(stats)
+  for name in ("enc/attn_q", "enc/ffn_in"):
+    assert stats[name].second_moment.shape[0] == n_layers
+
+  # the assembled stats drive the stacked truncation directly
+  plan = compress.FactorizationPlan(
+      include=("enc/*",), min_dim=1,
+      truncation=svd.TruncationSpec(fixed_rank=8, round_to=1))
+  trunc = compress.to_stage2(params, plan, calib=stats)
+  leaf = {l.name: l for l in compress.iter_factored_leaves(trunc)}
+  assert leaf["enc/attn_q"].is_factored
+  assert leaf["enc/attn_q"].u.shape[0] == n_layers
+
+
+# ---------------------------------------------------------------------------
+# the driver: to_stage2 wiring + the ledger's calibrated column
+# ---------------------------------------------------------------------------
+
+
+def test_to_stage2_calib_and_compression_report():
+  rng = np.random.RandomState(10)
+  params = {
+      "a": FactoredLinear(w=jnp.asarray(rng.randn(64, 48), jnp.float32),
+                          u=None, v=None, name="fc"),
+      "b": FactoredLinear(w=jnp.asarray(rng.randn(64, 48), jnp.float32),
+                          u=None, v=None, name="out"),
+  }
+  cov = _correlated_cov(64, dim=8, seed=11)
+  calib = {"fc": ActivationStats(second_moment=cov, count=32,
+                                 amax=float(np.abs(cov).max()))}
+  plan = compress.FactorizationPlan(
+      min_dim=1, truncation=svd.TruncationSpec(fixed_rank=8, round_to=1))
+  after = compress.to_stage2(params, plan, calib=calib)
+  assert after["a"].is_factored and after["b"].is_factored
+  # "fc" got the whitened split, "out" the plain spectrum: their u
+  # factors came from different programs
+  err_cal = _weighted_err(params["a"].w, after["a"].u, after["a"].v, cov)
+  u_s, v_s = svd.balanced_split(params["a"].w, 8)
+  assert err_cal < _weighted_err(params["a"].w, u_s, v_s, cov)
+
+  report = compress.compression_report(params, after, calib=calib)
+  by_name = {r["name"]: r for r in report["gemms"]}
+  assert by_name["fc"]["calibrated"] is True
+  assert by_name["out"]["calibrated"] is False
+  assert report["calibrated_gemms"] == ["fc"]
+  assert report["total_params_after"] < report["total_params_before"]
+  # and without calib the column reads uncalibrated everywhere
+  plain = compress.compression_report(params, after)
+  assert all(not r["calibrated"] for r in plain["gemms"])
+  assert plain["calibrated_gemms"] == []
